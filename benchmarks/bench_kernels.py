@@ -1,0 +1,56 @@
+"""Pallas kernel microbenchmarks (interpret-mode CPU walltime is NOT TPU
+perf — the derived column reports bytes handled per call, the roofline
+relevant quantity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.fedavg_reduce import fedavg_reduce, fedavg_reduce_q8
+from repro.kernels.quantize import dequantize_blocks, quantize_blocks
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n
+
+
+def run(verbose=True):
+    rng = np.random.default_rng(0)
+    rows = []
+    x = jnp.asarray(rng.normal(size=(512, 256)).astype(np.float32))
+    t = _time(lambda a: quantize_blocks(a, interpret=True), x)
+    rows.append({"name": "kernel/quantize_512x256", "us_per_call": t * 1e6,
+                 "derived": f"{x.nbytes / t / 1e6:.0f}MB/s-interp"})
+    q, s = quantize_blocks(x, interpret=True)
+    t = _time(lambda a, b: dequantize_blocks(a, b, interpret=True), q, s)
+    rows.append({"name": "kernel/dequantize_512x256", "us_per_call": t * 1e6,
+                 "derived": f"{x.nbytes / t / 1e6:.0f}MB/s-interp"})
+    u = jnp.asarray(rng.normal(size=(8, 8192)).astype(np.float32))
+    w = jnp.ones((8,), jnp.float32)
+    t = _time(lambda a, b: fedavg_reduce(a, b, interpret=True), u, w)
+    rows.append({"name": "kernel/fedavg_8x8192", "us_per_call": t * 1e6,
+                 "derived": f"{u.nbytes / t / 1e6:.0f}MB/s-interp"})
+    qs = [ops.quantize_flat(u[i], block=256) for i in range(8)]
+    qq = jnp.stack([p["q"] for p in qs])
+    ss = jnp.stack([p["scales"] for p in qs])
+    t = _time(lambda a, b, c: fedavg_reduce_q8(a, b, c, block=256,
+                                               interpret=True), qq, ss, w)
+    rows.append({"name": "kernel/fedavg_q8_8x8192", "us_per_call": t * 1e6,
+                 "derived": f"{qq.nbytes / t / 1e6:.0f}MB/s-interp"})
+    if verbose:
+        print("\n== Pallas kernels (interpret mode) ==")
+        for r in rows:
+            print(f"{r['name']:28s} {r['us_per_call']:10.0f}us  {r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.paper_tiers import TIER_ORDER, TIERS
+from repro.core import Fabric, ObjectStore, make_backend, make_env
+from repro.core.netsim import NCAL
+
+ENVS = ["lan", "geo_proximal", "geo_distributed"]
+BACKENDS = ["mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc", "grpc+s3"]
+
+
+def deployment(env_name: str, fail_rate: float = 0.0):
+    env = make_env(env_name)
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL, fail_rate=fail_rate)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    return env, fabric, store
+
+
+def backends_for(env_name: str):
+    """Paper policy: grpc+s3 omitted on LAN (S3 latency would dominate)."""
+    if env_name == "lan":
+        return [b for b in BACKENDS if b != "grpc+s3"]
+    return BACKENDS
+
+
+def fmt_s(x: float) -> str:
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1.0:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

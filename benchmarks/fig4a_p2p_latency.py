@@ -1,0 +1,56 @@
+"""Fig 4a: CPU-to-CPU p2p latency across backends, environments, tiers.
+Geo-distributed is split into CA-VA (intra-continent) and CA-HK
+(inter-continent), as in the paper."""
+from __future__ import annotations
+
+from repro.configs.paper_tiers import TIER_ORDER, TIERS
+from repro.core import make_backend
+from benchmarks.common import backends_for, deployment, fmt_s
+
+# (env label, env name, destination host)
+SCENARIOS = [("LAN", "lan", "client0"),
+             ("GeoProx", "geo_proximal", "client0"),
+             ("CA-VA", "geo_distributed", "client2"),
+             ("CA-HK", "geo_distributed", "client3")]
+
+
+def run(verbose=True):
+    rows = []
+    if verbose:
+        print("\n== Fig 4a: p2p latency (one message, server -> client) ==")
+    for label, env_name, dst in SCENARIOS:
+        env, fabric, store = deployment(env_name)
+        names = backends_for(env_name)
+        if verbose:
+            print(f"-- {label}")
+            print("  " + f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names))
+        for tier_name in TIER_ORDER:
+            tier = TIERS[tier_name]
+            vals = []
+            for b in names:
+                be = make_backend(b, env, fabric, "server", store=store)
+                t = be.p2p_time(tier.payload_bytes, dst)
+                vals.append(t)
+                rows.append({"name": f"fig4a/{label}/{tier_name}/{b}",
+                             "latency_s": t})
+            if verbose:
+                print(f"  {tier_name:8s}" + "".join(f"{fmt_s(v):>14s}"
+                                                    for v in vals))
+    _validate(rows)
+    return rows
+
+
+def _validate(rows):
+    d = {r["name"]: r["latency_s"] for r in rows}
+    # paper §V: LAN/GeoProx — buffer backends best (serialization dominates)
+    assert d["fig4a/LAN/large/mpi_mem_buff"] < d["fig4a/LAN/large/grpc"]
+    assert d["fig4a/LAN/large/mpi_mem_buff"] < d["fig4a/LAN/large/mpi_generic"]
+    # paper §V: geo-distributed — multi-connection backends dominate
+    assert d["fig4a/CA-HK/large/torch_rpc"] < d["fig4a/CA-HK/large/grpc"]
+    assert d["fig4a/CA-HK/large/grpc+s3"] < d["fig4a/CA-HK/large/grpc"]
+    # gRPC degrades with size over WAN
+    assert (d["fig4a/CA-HK/large/grpc"] / d["fig4a/CA-HK/small/grpc"]) > 50
+
+
+if __name__ == "__main__":
+    run()

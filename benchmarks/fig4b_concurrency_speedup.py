@@ -1,0 +1,57 @@
+"""Fig 4b: speedup of concurrent over sequential transmission of 10
+messages (Large uses 5), per backend and environment."""
+from __future__ import annotations
+
+from repro.configs.paper_tiers import TIER_ORDER, TIERS
+from repro.core import FLMessage, VirtualPayload, make_backend
+from benchmarks.common import backends_for, deployment
+
+
+def run(verbose=True):
+    rows = []
+    if verbose:
+        print("\n== Fig 4b: concurrent/sequential speedup "
+              "(10 msgs, Large: 5) ==")
+    for env_name in ("lan", "geo_proximal", "geo_distributed"):
+        names = backends_for(env_name)
+        if verbose:
+            print(f"-- {env_name}")
+            print("  " + f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names))
+        for tier_name in TIER_ORDER:
+            tier = TIERS[tier_name]
+            n = 5 if tier_name == "large" else 10
+            vals = []
+            for b in names:
+                env, fabric, store = deployment(env_name)
+                dst = "client3" if env_name == "geo_distributed" else "client0"
+                be = make_backend(b, env, fabric, "server", store=store)
+                mk = lambda i: FLMessage(
+                    "m", "server", dst,
+                    payload=VirtualPayload(tier.payload_bytes, tag=f"{i}"))
+                _, seq_arr = be.sequential_broadcast([mk(i) for i in range(n)],
+                                                     0.0)
+                fabric.endpoints[dst].inbox.clear()
+                _, conc_arr = be.broadcast([mk(100 + i) for i in range(n)], 0.0)
+                speedup = max(seq_arr) / max(conc_arr)
+                vals.append(speedup)
+                rows.append({"name": f"fig4b/{env_name}/{tier_name}/{b}",
+                             "speedup": speedup})
+            if verbose:
+                print(f"  {tier_name:8s}" + "".join(f"{v:>14.2f}"
+                                                    for v in vals))
+    _validate(rows)
+    return rows
+
+
+def _validate(rows):
+    d = {r["name"]: r["speedup"] for r in rows}
+    # paper: substantial gains geo-distributed (up to ~7x for gRPC)
+    assert d["fig4b/geo_distributed/big/grpc"] > 4
+    # paper: MPI backends *decline* with concurrency on LAN
+    assert d["fig4b/lan/big/mpi_mem_buff"] < 1.05
+    # concurrency never helps much when a single stream saturates (LAN rpc)
+    assert d["fig4b/geo_distributed/big/torch_rpc"] >= 0.9
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig 4c: peak sender memory during a concurrent broadcast to 7 clients."""
+from __future__ import annotations
+
+from repro.configs.paper_tiers import TIER_ORDER, TIERS
+from repro.core import FLMessage, VirtualPayload, make_backend
+from repro.core.netsim import MB
+from benchmarks.common import backends_for, deployment
+
+
+def run(verbose=True):
+    rows = []
+    env_name = "geo_distributed"
+    names = backends_for(env_name)
+    if verbose:
+        print("\n== Fig 4c: peak sender memory, concurrent broadcast to 7 "
+              "clients (MB) ==")
+        print(f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names))
+    for tier_name in TIER_ORDER:
+        tier = TIERS[tier_name]
+        vals = []
+        for b in names:
+            env, fabric, store = deployment(env_name)
+            be = make_backend(b, env, fabric, "server", store=store)
+            msgs = [FLMessage("m", "server", c.host_id,
+                              payload=VirtualPayload(tier.payload_bytes))
+                    for c in env.clients]
+            be.broadcast(msgs, 0.0)
+            peak = be.endpoint.memory.peak / MB
+            vals.append(peak)
+            rows.append({"name": f"fig4c/{tier_name}/{b}", "peak_MB": peak})
+        if verbose:
+            print(f"{tier_name:8s}" + "".join(f"{v:>14.1f}" for v in vals))
+    _validate(rows)
+    return rows
+
+
+def _validate(rows):
+    d = {r["name"]: r["peak_MB"] for r in rows}
+    large = TIERS["large"].payload_bytes / MB
+    # gRPC / MPI_GENERIC: one buffered copy per receiver (~7x payload)
+    assert d["fig4c/large/grpc"] > 6 * large
+    assert d["fig4c/large/mpi_generic"] > 6 * large
+    # buffer backends: no payload copies
+    assert d["fig4c/large/mpi_mem_buff"] < 0.5 * large
+    assert d["fig4c/large/torch_rpc"] < 0.5 * large
+    # gRPC+S3: exactly one serialized copy, independent of receiver count
+    assert d["fig4c/large/grpc+s3"] < 1.5 * large
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Fig 5: end-to-end FL round, per-state durations (communication /
+migration / serialization / waiting / training / aggregation) for every
+backend x environment x model tier.
+
+One server + 7 clients, 1 local epoch (paper §VI). Client compute time is
+the tier's calibrated per-round seconds; payloads are tier-sized virtual
+buffers; all communication runs through the real backend implementations
+over the Table-I-calibrated network model.
+"""
+from __future__ import annotations
+
+from repro.configs.paper_tiers import TIER_ORDER, TIERS
+from repro.core import VirtualPayload, make_backend
+from repro.fl.client import FLClient
+from repro.fl.server import FLServer
+from benchmarks.common import backends_for, deployment
+
+
+def _round_time(backend_name, env_name, tier, round_idx=1):
+    env, fabric, store = deployment(env_name)
+    clients = []
+    for host in env.clients:
+        cb = make_backend(backend_name, env, fabric, host.host_id,
+                          store=store)
+        clients.append(FLClient(host.host_id, cb,
+                                sim_train_s=tier.train_s(env_name)))
+    sb = make_backend(backend_name, env, fabric, "server", store=store)
+    server = FLServer(sb, clients, local_steps=1, live=False)
+    payload = VirtualPayload(tier.payload_bytes, tag=f"r{round_idx}")
+    report = server.run_round(payload)
+    return report
+
+
+def run(verbose=True):
+    rows = []
+    for env_name in ("lan", "geo_proximal", "geo_distributed"):
+        names = backends_for(env_name)
+        if verbose:
+            print(f"\n== Fig 5 ({env_name}): end-to-end round time + "
+                  "per-state breakdown ==")
+            print(f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names)
+                  + "   (round seconds)")
+        for tier_name in TIER_ORDER:
+            tier = TIERS[tier_name]
+            vals = []
+            for b in names:
+                rep = _round_time(b, env_name, tier)
+                vals.append(rep.round_time)
+                rows.append({
+                    "name": f"fig5/{env_name}/{tier_name}/{b}",
+                    "round_s": rep.round_time,
+                    "server": rep.server, "clients": rep.clients,
+                    "peak_server_mem": rep.peak_server_memory,
+                })
+            if verbose:
+                print(f"{tier_name:8s}" + "".join(f"{v:>14.1f}"
+                                                  for v in vals))
+        if verbose and env_name == "geo_distributed":
+            d = {r["name"]: r["round_s"] for r in rows}
+            for tn in TIER_ORDER:
+                g = d[f"fig5/geo_distributed/{tn}/grpc"]
+                s = d[f"fig5/geo_distributed/{tn}/grpc+s3"]
+                print(f"   gRPC+S3 speedup over gRPC ({tn}): {g / s:.2f}x")
+    _validate(rows, verbose)
+    return rows
+
+
+def _validate(rows, verbose):
+    d = {r["name"]: r["round_s"] for r in rows}
+    # PAPER CLAIM (§VI, abstract): geo-distributed large models,
+    # gRPC+S3 is 3.5-3.8x faster end-to-end than gRPC
+    speedup = d["fig5/geo_distributed/large/grpc"] / \
+        d["fig5/geo_distributed/large/grpc+s3"]
+    assert 3.2 <= speedup <= 4.2, f"S3 speedup {speedup:.2f} out of band"
+    # PAPER CLAIM (§VI): small/medium models, training dominates ->
+    # backends comparable in LAN/GeoProx (within ~35%)
+    for tn in ("small", "medium"):
+        vals = [d[f"fig5/lan/{tn}/{b}"] for b in
+                ("mpi_generic", "mpi_mem_buff", "torch_rpc")]
+        assert max(vals) / min(vals) < 1.35
+    # PAPER CLAIM (§VI): LAN large models, gRPC dramatically slower than
+    # the buffer backends (paper: ~9x; our serialization model yields >3.5x
+    # — see EXPERIMENTS.md for the delta discussion)
+    best_lan = min(d[f"fig5/lan/large/{b}"] for b in
+                   ("mpi_mem_buff", "torch_rpc"))
+    ratio = d["fig5/lan/large/grpc"] / best_lan
+    assert ratio > 3.5, f"LAN gRPC penalty only {ratio:.1f}x"
+    # gRPC competitive for small payloads geo-distributed (§VI)
+    small_ratio = d["fig5/geo_distributed/small/grpc"] / \
+        d["fig5/geo_distributed/small/grpc+s3"]
+    assert small_ratio < 1.4
+    if verbose:
+        print(f"\n[fig5] validation: S3 large speedup={speedup:.2f}x (paper "
+              f"3.5-3.8x); LAN gRPC penalty={ratio:.1f}x (paper ~9x)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark harness entry: one module per paper table/figure + the
+beyond-paper cross-pod study. Prints a ``name,us_per_call,derived`` CSV
+after the human-readable sections."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, crosspod_sync,
+                            fig2_grpc_concurrency, fig4a_p2p_latency,
+                            fig4b_concurrency_speedup, fig4c_broadcast_memory,
+                            fig5_end_to_end, table1_links)
+
+    modules = [
+        ("table1", table1_links),
+        ("fig2", fig2_grpc_concurrency),
+        ("fig4a", fig4a_p2p_latency),
+        ("fig4b", fig4b_concurrency_speedup),
+        ("fig4c", fig4c_broadcast_memory),
+        ("fig5", fig5_end_to_end),
+        ("kernels", bench_kernels),
+        ("crosspod", crosspod_sync),
+    ]
+    all_rows = []
+    failures = 0
+    for name, mod in modules:
+        try:
+            all_rows += mod.run(verbose=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"[bench] {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    print("\nname,us_per_call,derived")
+    for r in all_rows:
+        us = r.get("us_per_call")
+        if us is None:
+            for key in ("latency_s", "round_s", "per_step_ar_s"):
+                if key in r:
+                    us = r[key] * 1e6
+                    break
+        derived = r.get("derived")
+        if derived is None:
+            derived = ";".join(f"{k}={v:.4g}" for k, v in r.items()
+                               if k not in ("name", "us_per_call", "server",
+                                            "clients")
+                               and isinstance(v, (int, float)))
+        print(f"{r['name']},{'' if us is None else f'{us:.1f}'},{derived}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

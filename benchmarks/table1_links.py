@@ -1,0 +1,37 @@
+"""Table I: single- vs multi-connection bandwidth and latency per region
+(model check: the netsim reproduces its own calibration measurements via
+actual simulated transfers, not just constants)."""
+from __future__ import annotations
+
+from repro.core.netsim import (GEO_REGIONS, MB, Host, Transfer,
+                               simulate_transfers)
+
+
+def run(verbose=True):
+    rows = []
+    nbytes = 512 * MB
+    if verbose:
+        print("\n== Table I: EC2 link characterization (hub = N.California) ==")
+        print(f"{'region':12s} {'single MB/s':>12s} {'multi MB/s':>12s} "
+              f"{'latency ms':>11s}")
+    for r in GEO_REGIONS:
+        src = Host("server", r, r.bw_multi, r.bw_multi)
+        dst = Host("client", r, r.bw_multi, r.bw_multi)
+        t1 = Transfer(start=0.0, src=src, dst=dst, nbytes=nbytes, conns=1,
+                      link_region=r)
+        tn = Transfer(start=0.0, src=src, dst=dst, nbytes=nbytes, conns=64,
+                      link_region=r)
+        simulate_transfers([t1])
+        simulate_transfers([tn])
+        bw1 = nbytes / (t1.finish - r.latency) / MB
+        bwn = nbytes / (tn.finish - r.latency) / MB
+        rows.append({"name": f"table1/{r.name}", "bw_single_MBps": bw1,
+                     "bw_multi_MBps": bwn, "latency_ms": r.latency * 1e3})
+        if verbose:
+            print(f"{r.name:12s} {bw1:12.1f} {bwn:12.1f} "
+                  f"{r.latency * 1e3:11.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

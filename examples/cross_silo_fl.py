@@ -1,0 +1,56 @@
+"""Cross-silo FL demo — the paper end to end.
+
+Trains the Small tier (ResNet) across 7 geo-distributed silos under THREE
+backends, printing the paper's per-state breakdown, then demonstrates the
+fault story: a client drops mid-round — MPI aborts, gRPC+S3 sails on and
+the late client re-fetches from the object store.
+
+    PYTHONPATH=src python examples/cross_silo_fl.py
+"""
+from repro.configs.base import FLConfig
+from repro.core import TensorPayload
+from repro.launch.fl_train import build_deployment
+
+
+def train_rounds(backend, rounds=2, dropped=None):
+    cfg = FLConfig(backend=backend, environment="geo_distributed",
+                   quorum_fraction=0.7)
+    server, params, env, store = build_deployment(cfg, local_steps=3)
+    out = []
+    for r in range(rounds):
+        rep = server.run_round(TensorPayload(params),
+                               dropped=dropped if r == 0 else None)
+        if server.global_params is not None:
+            params = server.global_params
+        out.append(rep)
+    return out, store
+
+
+def main():
+    print("== cross-silo FL, 7 geo-distributed silos, Small tier ==")
+    for backend in ("grpc", "torch_rpc", "grpc+s3"):
+        reps, store = train_rounds(backend)
+        r = reps[-1]
+        print(f"\n-- {backend}: round={r.round_time:.2f}s sim, "
+              f"loss {reps[0].losses:.3f} -> {reps[-1].losses:.3f}, "
+              f"server peak mem {r.peak_server_memory / 2 ** 20:.1f}MB")
+        print(f"   client states: comm={r.clients['communication']:.2f}s "
+              f"train={r.clients['training']:.2f}s "
+              f"ser={r.clients['serialization']:.3f}s "
+              f"wait={r.clients['waiting']:.2f}s")
+
+    print("\n== fault tolerance: client0+client1 drop mid-round ==")
+    reps, _ = train_rounds("mpi_generic", rounds=1,
+                           dropped={"client0", "client1"})
+    print(f"   mpi_generic : aborted={reps[0].aborted} (static world -> "
+          "restore checkpoint + re-run)")
+    reps, store = train_rounds("grpc+s3", rounds=1,
+                               dropped={"client0", "client1"})
+    print(f"   grpc+s3     : aborted={reps[0].aborted}, "
+          f"participants={reps[0].n_participants}/7 (quorum), "
+          f"late clients re-fetch from S3 "
+          f"(stats={dict(store.stats)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Cross-pod federated training, actually executed on a (2,2,2) mesh of
+host devices: each 'pod' runs K local AdamW steps on its own data shard,
+then pods exchange int8-quantised deltas (the paper's cross-silo round at
+pod granularity). Loss must drop and pods must stay in sync.
+
+    python examples/multipod_fl_train.py
+"""
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.configs.base import MeshConfig, ShapeConfig, TrainConfig
+from repro.data import synthetic_lm_batch
+from repro.launch.step_builders import make_fl_round_step
+from repro.optim.optimizers import adamw_init
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mcfg = MeshConfig(shape=(2, 2, 2), axis_names=("pod", "data", "model"))
+    cfg = smoke_config("qwen3-8b")
+    K = 4
+    shape = ShapeConfig(name="fl", seq_len=32, global_batch=8, kind="train")
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=64,
+                       crosspod_compression="int8")
+    bundle = make_fl_round_step(cfg, shape, mesh, mcfg, tcfg, local_steps=K)
+    model = bundle.model
+
+    anchor, _ = model.init(jax.random.key(0))
+    n_pods = 2
+    stack = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_pods,) + a.shape), t)
+    params = stack(anchor)
+    opt = jax.vmap(lambda p: adamw_init(p, tcfg))(params)
+
+    fl_round = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                       out_shardings=bundle.out_shardings)
+    rng = np.random.default_rng(0)
+    losses = []
+    with mesh:
+        for rnd in range(8):
+            raw = synthetic_lm_batch(rng, n_pods * K * 4, 32, cfg.vocab_size)
+            batches = {k: jnp.asarray(v).reshape(n_pods, K, 4, 32)
+                       for k, v in raw.items()}
+            params, opt, anchor, loss = fl_round(params, opt, anchor,
+                                                 batches,
+                                                 jnp.int32(rnd * K))
+            losses.append(float(loss))
+            print(f"[multipod-fl] round {rnd} (K={K} local steps/pod, int8 "
+                  f"delta sync): loss={losses[-1]:.3f}")
+    # pods hold identical params after sync
+    leaf = jax.tree.leaves(params)[0]
+    drift = float(jnp.max(jnp.abs(leaf[0].astype(jnp.float32)
+                                  - leaf[1].astype(jnp.float32))))
+    print(f"[multipod-fl] loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"cross-pod param drift after sync = {drift:.2e}")
+    assert losses[-1] < losses[0], "no learning?"
+    assert drift < 1e-3, "pods out of sync"
+    print("[multipod-fl] OK")
+
+
+if __name__ == "__main__":
+    main()

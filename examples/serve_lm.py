@@ -1,0 +1,12 @@
+"""Serve a reduced LM with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py [arch]
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "zamba2-1.2b"
+    raise SystemExit(serve_main(["--arch", arch, "--requests", "4",
+                                 "--prompt-len", "16", "--gen", "8"]))

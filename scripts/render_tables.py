@@ -1,0 +1,67 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from
+artifacts/dryrun/*.json."""
+import glob
+import json
+import sys
+
+
+def load(mesh):
+    rows = {}
+    for p in sorted(glob.glob(f"artifacts/dryrun/{mesh}/*.json")):
+        r = json.load(open(p))
+        rows[(r["arch"], r["shape"], r.get("fl", False))] = r
+    return rows
+
+
+def dryrun_table(mesh):
+    rows = load(mesh)
+    out = [f"| arch | shape | status | kind | args GiB/dev | temp GiB/dev | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for (arch, shape, fl), r in sorted(rows.items()):
+        if fl:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | SKIP | — | — | — | — |")
+            continue
+        ma = r["memory_analysis"]
+        out.append(
+            f"| {arch} | {shape} | ok | {r['kind']} | "
+            f"{ma['argument_bytes'] / 2**30:.2f} | "
+            f"{ma['temp_bytes'] / 2**30:.2f} | {r['compile_s']} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh):
+    rows = load(mesh)
+    out = ["| arch | shape | compute s | memory s | ICI s | DCN s | bound | "
+           "MODEL/HLO flops | roofline frac | next lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    LEVERS = {
+        "collective": "shrink TP group / sequence-parallel the activation "
+                      "all-reduces",
+        "memory": "decode is cache-bandwidth-bound: quantise KV cache to int8",
+        "compute": "raise MXU utilisation (larger per-chip tiles)",
+        "dcn": "local-step + int8 delta sync over the pod axis (cell C)",
+    }
+    for (arch, shape, fl), r in sorted(rows.items()):
+        if fl or r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {arch} | {shape}{' (fl)' if fl else ''} | "
+            f"{rl['t_compute']:.3f} | {rl['t_memory']:.3f} | "
+            f"{rl['t_collective']:.3f} | {rl['t_dcn']:.3f} | "
+            f"{rl['dominant']} | {rl['useful_flops_ratio']*100:.0f}% | "
+            f"{rl['roofline_fraction']*100:.2f}% | "
+            f"{LEVERS.get(rl['dominant'], '')} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    which = sys.argv[2] if len(sys.argv) > 2 else "both"
+    if which in ("dryrun", "both"):
+        print(dryrun_table(mesh))
+        print()
+    if which in ("roofline", "both"):
+        print(roofline_table(mesh))

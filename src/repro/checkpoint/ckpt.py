@@ -1,0 +1,162 @@
+"""Checkpointing: manifest + per-leaf npz, async writes, integrity checksums,
+keep-last-k GC, and **resharding restore** (a checkpoint saved on one mesh
+can be restored onto any other mesh — the elastic-scaling path).
+
+Layout:
+    <dir>/step_000123/
+        manifest.json   # step, leaf index, shapes/dtypes, crc32s, meta
+        arrays.npz      # flattened key -> host ndarray
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, *, meta: Optional[dict] = None,
+                    blocking: bool = True):
+    """Device arrays are fetched to host then written (npz + manifest)."""
+    tmp = os.path.join(directory, f"step_{step:09d}.tmp")
+    final = os.path.join(directory, f"step_{step:09d}")
+    os.makedirs(tmp, exist_ok=True)
+    named = _flatten_with_names(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in named.items()}
+
+    def _write():
+        manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+        savable = {}
+        for k, v in host.items():
+            manifest["leaves"][k] = {
+                "shape": list(v.shape), "dtype": str(v.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes())}
+            # npz can't represent ml_dtypes (bfloat16 etc.): store raw bytes
+            if v.dtype.kind not in "biufc":
+                v = np.ascontiguousarray(v).view(np.uint8)
+            savable[k] = v
+        np.savez(os.path.join(tmp, "arrays.npz"), **savable)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def list_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def load_checkpoint(directory: str, template, *, step: Optional[int] = None,
+                    shardings=None, verify: bool = True):
+    """Restore into ``template``'s structure. ``shardings``: optional pytree
+    of NamedSharding (same structure) — enables cross-mesh restore: arrays
+    are device_put with the *new* sharding regardless of how they were saved.
+    Returns (tree, step, meta)."""
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    named_t = _flatten_with_names(template)
+    named_s = _flatten_with_names(shardings) if shardings is not None else {}
+    out = {}
+    for k, tmpl in named_t.items():
+        if k not in manifest["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        v = arrays[k]
+        info = manifest["leaves"][k]
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(v).tobytes())
+            if crc != info["crc32"]:
+                raise IOError(f"checksum mismatch for {k}")
+        want = np.dtype(jax.numpy.dtype(info["dtype"]))
+        if v.dtype != want:  # uint8-stored ml_dtypes leaf: reinterpret
+            v = np.frombuffer(np.ascontiguousarray(v).tobytes(),
+                              dtype=want).reshape(info["shape"])
+        if tuple(v.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {v.shape} vs template {tmpl.shape}")
+        # cast via jnp: numpy lacks cast rules for bfloat16 & friends
+        arr = jax.numpy.asarray(v)
+        if arr.dtype != tmpl.dtype:
+            arr = arr.astype(tmpl.dtype)
+        if k in named_s and named_s[k] is not None:
+            out[k] = jax.device_put(arr, named_s[k])
+        else:
+            out[k] = arr
+    # rebuild tree in template structure
+    flat_t, treedef = jax.tree.flatten(template)
+    keys = list(_flatten_with_names(template).keys())
+    leaves = [out[k] for k in keys]
+    return jax.tree.unflatten(treedef, leaves), step, manifest["meta"]
+
+
+class CheckpointManager:
+    """Async checkpointing with keep-last-k GC and crash-safe publish."""
+
+    def __init__(self, directory: str, keep: int = 3, async_writes: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_writes = async_writes
+        self._pending: list = []
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        t = save_checkpoint(self.directory, step, tree, meta=meta,
+                            blocking=not self.async_writes)
+        if t is not None:
+            self._pending.append(t)
+        self._gc()
+
+    def wait(self):
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+
+    def restore(self, template, *, step=None, shardings=None):
+        self.wait()
+        return load_checkpoint(self.directory, template, step=step,
+                               shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        steps = list_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def _gc(self):
+        self.wait()
+        steps = list_steps(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,6 @@
+from repro.compression.qsgd import (QuantState, qsgd_compress,
+                                    qsgd_decompress, qsgd_init)
+from repro.compression.topk import topk_compress, topk_decompress
+
+__all__ = ["qsgd_init", "qsgd_compress", "qsgd_decompress", "QuantState",
+           "topk_compress", "topk_decompress"]

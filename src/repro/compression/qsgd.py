@@ -1,0 +1,45 @@
+"""QSGD-style int8 compression with error feedback (Alistarh et al. 2017 —
+the paper cites this family as orthogonal to the backend choice; here it
+composes with any backend and with the cross-pod sync).
+
+Uses the Pallas quantisation kernel. 4x (f32) / 2x (bf16) wire reduction;
+error feedback keeps local-SGD convergence unbiased in practice.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class QuantState(NamedTuple):
+    error: jax.Array  # flat f32 residual carried between rounds
+
+
+def qsgd_init(example_tree) -> QuantState:
+    flat, _ = ops.flatten_pytree(example_tree)
+    return QuantState(error=jnp.zeros_like(flat))
+
+
+def qsgd_compress(tree, state: Optional[QuantState] = None, *,
+                  block: int = 256, interpret=None):
+    """-> (packed dict, new_state, unflatten). Wire payload = packed."""
+    flat, unflatten = ops.flatten_pytree(tree)
+    if state is not None:
+        flat = flat + state.error
+    packed = ops.quantize_flat(flat, block=block, interpret=interpret)
+    recon = ops.dequantize_flat(packed, interpret=interpret)
+    new_state = QuantState(error=flat - recon) if state is not None else None
+    return packed, new_state, unflatten
+
+
+def qsgd_decompress(packed, unflatten, *, interpret=None):
+    return unflatten(ops.dequantize_flat(packed, interpret=interpret))
+
+
+def packed_nbytes(packed) -> int:
+    """Wire size of a packed payload (int8 + f32 scales)."""
+    return int(packed["q"].size) + int(packed["scales"].size) * 4

@@ -1,0 +1,35 @@
+"""Top-k magnitude sparsification with error feedback (Wangni et al. 2018)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.qsgd import QuantState
+from repro.kernels import ops
+
+
+def topk_compress(tree, k_frac: float, state: Optional[QuantState] = None):
+    """-> (payload dict {idx, vals, n}, new_state, unflatten)."""
+    flat, unflatten = ops.flatten_pytree(tree)
+    if state is not None:
+        flat = flat + state.error
+    k = max(1, int(flat.size * k_frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    payload = {"idx": idx.astype(jnp.int32), "vals": vals, "n": flat.size}
+    if state is not None:
+        recon = jnp.zeros_like(flat).at[idx].set(vals)
+        state = QuantState(error=flat - recon)
+    return payload, state, unflatten
+
+
+def topk_decompress(payload, unflatten):
+    flat = jnp.zeros((payload["n"],), payload["vals"].dtype)
+    flat = flat.at[payload["idx"]].set(payload["vals"])
+    return unflatten(flat)
+
+
+def payload_nbytes(payload) -> int:
+    return int(payload["idx"].size) * 4 + int(payload["vals"].size) * 4

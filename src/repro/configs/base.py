@@ -1,0 +1,196 @@
+"""Config dataclasses for models, shapes, meshes and training.
+
+Everything in the framework is driven by these frozen dataclasses; the CLI
+(``--arch``, ``--shape``, ``--mesh``) resolves to instances defined in
+``repro.configs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for the LM families (dense/moe/ssm/hybrid/audio/vlm)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # attention details
+    qk_norm: bool = False
+    causal: bool = True
+    rope_theta: float = 10_000.0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_interleave: int = 1  # MoE every k-th layer (1 = every layer)
+    d_ff_dense: int = 0  # FFN width of non-MoE layers when interleaved
+    num_shared_experts: int = 0
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0  # zamba2: shared attention block every k mamba blocks
+    shared_attn_lora_rank: int = 0
+    slstm_every: int = 0  # xlstm: sLSTM block every k blocks (others mLSTM)
+    mlstm_chunk: int = 256
+
+    # VLM
+    cross_attn_every: int = 0  # cross-attention layer every k layers
+    num_image_tokens: int = 0
+    vision_d_model: int = 0
+
+    # audio (encoder-only): inputs are precomputed frame embeddings
+    external_embeddings: bool = False
+
+    # embeddings / io
+    tie_embeddings: bool = False
+    mlp_gelu: bool = False  # 2-matrix GELU MLP (ViT/BERT) instead of SwiGLU
+
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+
+    # memory policy
+    remat: str = "full"  # none | dots | full
+    attn_chunk: int = 1024  # flash-style KV chunking for prefill/train
+    block_causal: bool = True  # lower-triangular block schedule (skip masked blocks)
+
+    # MoE dispatch
+    moe_group_size: int = 2048
+    capacity_factor: float = 1.25
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, (
+            f"{self.name}: num_heads must be divisible by num_kv_heads")
+
+    # ------------------------------------------------------------------
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def moe_layer_mask(self) -> Sequence[bool]:
+        """True for layers that carry a MoE FFN."""
+        if self.num_experts == 0:
+            return [False] * self.num_layers
+        k = self.moe_interleave
+        # MoE on layers (k-1, 2k-1, ...) — matches Llama-4 style interleaving.
+        return [(i % k) == (k - 1) for i in range(self.num_layers)]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for payload tiers + MODEL_FLOPS)."""
+        from repro.models import registry  # lazy to avoid cycles
+
+        return registry.param_count(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell's input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.global_batch  # one new token per sequence
+        return self.global_batch * self.seq_len
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Physical mesh + logical-axis resolution plan."""
+
+    shape: tuple
+    axis_names: tuple
+    # mesh axes that implement FSDP-style parameter/optimizer sharding
+    fsdp_axes: tuple = ("data",)
+    # mesh axes that implement tensor parallelism
+    tensor_axes: tuple = ("model",)
+    # mesh axes over which the batch is split
+    batch_axes: tuple = ("pod", "data")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        if name not in self.axis_names:
+            return 1
+        return self.shape[self.axis_names.index(name)]
+
+
+SINGLE_POD_MESH = MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+MULTI_POD_MESH = MeshConfig(
+    shape=(2, 16, 16),
+    axis_names=("pod", "data", "model"),
+    fsdp_axes=("data",),
+)
+# FSDP over pod+data: used for the very largest models (llama4-maverick).
+MULTI_POD_MESH_FSDP_POD = dataclasses.replace(MULTI_POD_MESH, fsdp_axes=("pod", "data"))
+SMOKE_MESH = MeshConfig(shape=(1, 1), axis_names=("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / step configuration."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    optimizer: str = "adamw"  # adamw | sgd
+    moment_dtype: str = "float32"  # float32 | bfloat16 (memory-reduced states)
+    microbatches: int = 1  # gradient accumulation steps per global step
+    # cross-pod (cross-silo) sync policy — the paper's FL round at pod scale
+    crosspod_sync_every: int = 1  # 1 = fully synchronous DP over 'pod'
+    crosspod_compression: str = "none"  # none | int8 | topk
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """Cross-silo federated learning round configuration."""
+
+    num_clients: int = 7
+    clients_per_round: int = 7
+    local_epochs: int = 1
+    local_steps: int = 10
+    rounds: int = 5
+    backend: str = "grpc+s3"
+    environment: str = "geo_distributed"  # lan | geo_proximal | geo_distributed
+    quorum_fraction: float = 1.0  # server aggregates once this fraction reported
+    round_deadline_s: float = 0.0  # 0 = no deadline (wait for quorum only)
+    server_lr: float = 1.0
+    seed: int = 0

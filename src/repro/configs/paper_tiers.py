@@ -1,0 +1,74 @@
+"""The paper's four payload tiers (§IV-B) and their builders.
+
+Tier sizes from the paper: Small=ResNet56 (591,322 params, 2.39 MB),
+Medium=MobileNetV3 (5,152,518, 19.85 MB), Big=DistilBERT (66,362,880,
+253.19 MB), Large=ViT-Large (307,432,234, 1,243.14 MB).
+
+``payload_bytes`` below are the *paper's exact numbers* — the netsim
+benchmarks transfer exactly these byte counts so Table I / Fig 4 / Fig 5
+reproduce the paper's regime. The real JAX models land within a few percent
+of the reference counts (implementation deltas documented in DESIGN.md) and
+are used by the live FL training path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+MB = 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    name: str
+    model: str
+    ref_params: int
+    payload_bytes: int  # fp32 payload, paper's Table/§IV-B numbers
+    dataset: str
+    # simulated 1-epoch local training time (s), calibrated from Fig 5's
+    # training bars. The LAN testbed machines carry 8x RTX 5000 each while
+    # the cloud clients are single-T4 g4dn.2xlarge (§IV-A), hence the
+    # per-environment split — this is what lets the paper's "~9x slower
+    # gRPC on LAN, large" and "3.5-3.8x gRPC+S3 geo, large" coexist.
+    train_s_cloud: float
+    train_s_lan: float
+
+    def train_s(self, environment: str) -> float:
+        return self.train_s_lan if environment == "lan" else self.train_s_cloud
+
+    @property
+    def train_s_per_round(self) -> float:  # back-compat: cloud value
+        return self.train_s_cloud
+
+
+SMALL = Tier("small", "resnet56", 591_322, int(2.39 * MB), "gld23k",
+             20.0, 2.5)
+MEDIUM = Tier("medium", "mobilenetv3", 5_152_518, int(19.85 * MB), "gld23k",
+              30.0, 3.8)
+BIG = Tier("big", "distilbert", 66_362_880, int(253.19 * MB), "20news",
+           60.0, 7.5)
+LARGE = Tier("large", "vit-large", 307_432_234, int(1243.14 * MB), "gld23k",
+             130.0, 16.0)
+
+TIERS = {t.name: t for t in (SMALL, MEDIUM, BIG, LARGE)}
+TIER_ORDER = ["small", "medium", "big", "large"]
+
+
+def build_tier_model(name: str):
+    """Returns (model_obj, init_fn(rng)->params). Real JAX models."""
+    from repro.models.bert import BertConfig, DistilBert
+    from repro.models.vision import (MobileNetConfig, MobileNetV3, ResNet,
+                                     ResNetConfig, ViT, ViTConfig)
+
+    if name == "small":
+        m = ResNet(ResNetConfig())
+        return m, m.init
+    if name == "medium":
+        m = MobileNetV3(MobileNetConfig())
+        return m, m.init
+    if name == "big":
+        m = DistilBert(BertConfig())
+        return m, m.init
+    if name == "large":
+        m = ViT(ViTConfig())
+        return m, m.init
+    raise KeyError(name)

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: pluggable cross-silo FL communication
+backends (MPI_GENERIC / MPI_MEM_BUFF / gRPC / TensorRPC / gRPC+S3 / AUTO)
+over a Table-I-calibrated network model + object store."""
+from repro.core.backends import BACKEND_NAMES, make_backend
+from repro.core.message import (FLMessage, PackedPayload, TensorPayload,
+                                VirtualPayload)
+from repro.core.netsim import ENVIRONMENTS, Environment, make_env
+from repro.core.objectstore import ObjectStore
+from repro.core.transport import Fabric, MemoryMeter
+
+__all__ = ["make_backend", "BACKEND_NAMES", "FLMessage", "TensorPayload",
+           "VirtualPayload", "PackedPayload", "make_env", "Environment",
+           "ENVIRONMENTS", "ObjectStore", "Fabric", "MemoryMeter"]

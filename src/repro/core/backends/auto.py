@@ -1,0 +1,74 @@
+"""AUTO backend — the paper's §VII deployment guideline as code.
+
+Per message: payloads < 10 MB (or no object store / LAN) ride plain gRPC;
+large payloads in untrusted WANs ride gRPC+S3; trusted LAN prefers
+MPI_MEM_BUFF for buffer-like payloads.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.backends.base import CommBackend
+from repro.core.backends.grpc_s3 import GrpcS3Backend
+from repro.core.message import FLMessage
+
+SMALL_PAYLOAD = 10 * 1024 * 1024  # paper: <10 MB -> pure gRPC
+
+
+class AutoBackend:
+    name = "auto"
+
+    def __init__(self, env, fabric, host_id, store=None, **kw):
+        from repro.core.backends import POLICIES
+        self.env = env
+        self.host_id = host_id
+        self.store = store
+        self.grpc = CommBackend(POLICIES["grpc"], env, fabric, host_id)
+        self.membuff = CommBackend(POLICIES["mpi_mem_buff"], env, fabric,
+                                   host_id)
+        self.s3 = (GrpcS3Backend(env, fabric, host_id, store, **kw)
+                   if store is not None and env.name != "lan" else None)
+        self.endpoint = self.grpc.endpoint
+        self.decisions: list = []
+
+    def resolve(self, msg: FLMessage):
+        """The concrete backend this message would ride (no logging) —
+        lets orchestrators (FLServer upload phase) plan with the right
+        serializer/policy."""
+        nbytes = msg.payload_nbytes
+        if nbytes < SMALL_PAYLOAD or self.s3 is None:
+            return self.membuff if (self.env.trusted and
+                                    self.env.name == "lan") else self.grpc
+        return self.s3
+
+    def _route(self, msg: FLMessage):
+        nbytes = msg.payload_nbytes
+        if nbytes < SMALL_PAYLOAD or self.s3 is None:
+            choice = self.membuff if (self.env.trusted and
+                                      self.env.name == "lan") else self.grpc
+        else:
+            choice = self.s3
+        self.decisions.append((msg.msg_type, nbytes, choice.name))
+        return choice
+
+    def send(self, msg, now):
+        return self._route(msg).send(msg, now)
+
+    def broadcast(self, msgs: Sequence[FLMessage], now):
+        return self._route(msgs[0]).broadcast(msgs, now)
+
+    def sequential_broadcast(self, msgs, now):
+        return self._route(msgs[0]).sequential_broadcast(msgs, now)
+
+    def recv(self, now):
+        # all three share one endpoint; GrpcS3Backend.recv handles both
+        # metadata-record and direct-wire deliveries, so route through it
+        # when available (it pops the shared inbox exactly once)
+        if self.s3 is not None:
+            return self.s3.recv(now)
+        return self.grpc.recv(now)
+
+    def p2p_time(self, nbytes, dst_id):
+        if nbytes < SMALL_PAYLOAD or self.s3 is None:
+            return self.grpc.p2p_time(nbytes, dst_id)
+        return self.s3.p2p_time(nbytes, dst_id)

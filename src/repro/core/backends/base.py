@@ -1,0 +1,180 @@
+"""CommBackend: the paper's pluggable communication abstraction.
+
+Each backend implements the same API over the shared fabric + netsim:
+
+* ``send(msg, now)``          -> (sender_free_t, arrive_t)
+* ``broadcast(msgs, now)``    -> (sender_free_t, [arrive_t])   (concurrent)
+* ``sequential_broadcast``    -> same but one send at a time (Fig 4b baseline)
+* ``recv(now)``               -> [(FLMessage with payload, ready_t)]
+* ``p2p_time(nbytes)``        -> analytic single-message latency (Fig 4a)
+
+What differs between backends is exactly what the paper measures: the
+serializer (copy vs zero-copy), connections per transfer, per-send buffer
+behaviour (memory ∝ concurrency or not), fixed per-message overheads, and
+whether the LAN path can ride InfiniBand verbs or falls back to TCP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.message import FLMessage
+from repro.core.netsim import LAN_IB, LAN_TCP, Environment, Region, Transfer, \
+    simulate_transfers
+from repro.core.serialization import SERIALIZERS, WireData, decode_wire
+from repro.core.transport import Fabric
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendPolicy:
+    name: str
+    serializer: str
+    conns_per_transfer: int = 1
+    per_send_copy: bool = False  # serialized copy per in-flight send
+    staging_bytes: int = 4 << 20  # fixed per-active-send staging
+    overhead_rtts: float = 1.0  # request/ack handshakes per message
+    ser_parallel: bool = False  # can serialize concurrent sends in parallel
+    lan_uses_ib: bool = True  # ib verbs (buffer backends) vs TCP fallback
+    lan_concurrency_penalty: float = 0.0  # MPI multithreading overhead/send
+
+
+class CommBackend:
+    def __init__(self, policy: BackendPolicy, env: Environment,
+                 fabric: Fabric, host_id: str, store=None):
+        self.policy = policy
+        self.env = env
+        self.fabric = fabric
+        self.host_id = host_id
+        self.store = store
+        self.endpoint = fabric.endpoints.get(host_id) or fabric.register(host_id)
+        self.serializer = SERIALIZERS[policy.serializer]
+
+    # ------------------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.policy.name
+
+    def _link_region(self, dst_id: str) -> Region:
+        if self.env.name == "lan":
+            return LAN_IB if self.policy.lan_uses_ib else LAN_TCP
+        src = self.env.host(self.host_id).region
+        dst = self.env.host(dst_id).region
+        # star topology: the non-hub end dominates
+        return dst if dst.name != "ncal" else src
+
+    def _overhead(self, region: Region) -> float:
+        return self.policy.overhead_rtts * 2 * region.latency
+
+    # ------------------------------------------------------------------
+    def send(self, msg: FLMessage, now: float) -> Tuple[float, float]:
+        wire = self.serializer.serialize(msg.payload) if msg.payload is not None \
+            else WireData(nbytes=256)
+        ser_t = self.serializer.ser_time(wire.nbytes)
+        mem = self.endpoint.memory
+        alloc = (wire.nbytes if (self.policy.per_send_copy and msg.payload
+                                 is not None) else 0) + self.policy.staging_bytes
+        mem.alloc(alloc, now)
+        region = self._link_region(msg.receiver)
+        start = now + ser_t
+        dur = self._overhead(region) + region.latency \
+            + wire.nbytes / region.conn_cap(self.policy.conns_per_transfer)
+        arrive = self.fabric.deliver(msg, wire, start, dur)
+        mem.free(alloc, arrive)
+        return start, arrive
+
+    # ------------------------------------------------------------------
+    def _broadcast_transfers(self, msgs, now) -> Tuple[list, list, float]:
+        """Common prep: serialize (sequential or parallel), build transfers."""
+        wires, ser_done = [], now
+        for msg in msgs:
+            wire = self.serializer.serialize(msg.payload) \
+                if msg.payload is not None else WireData(nbytes=256)
+            t = self.serializer.ser_time(wire.nbytes)
+            if self.policy.ser_parallel:
+                ser_done = max(ser_done, now + t)
+                start = now + t
+            else:
+                start = ser_done + t
+                ser_done = start
+            wires.append((wire, start))
+        transfers = []
+        n_active = len(msgs)
+        # MPI-style multithreaded progress engines lose efficiency on LAN
+        # (paper Fig 4b: concurrent MPI *declines*): the penalty applies to
+        # the shared NIC budget, not just per-transfer caps.
+        penalty = 1.0 + self.policy.lan_concurrency_penalty * max(
+            n_active - 1, 0) if self.env.name == "lan" else 1.0
+        src = self.env.host(self.host_id)
+        if penalty > 1.0:
+            import dataclasses as _dc
+            src = _dc.replace(src, uplink=src.uplink / penalty)
+        for msg, (wire, start) in zip(msgs, wires):
+            region = self._link_region(msg.receiver)
+            eff_region = Region(region.name,
+                                region.bw_single / penalty,
+                                region.bw_multi / penalty, region.latency)
+            transfers.append(Transfer(
+                start=start + self._overhead(region),
+                src=src,
+                dst=self.env.host(msg.receiver),
+                nbytes=wire.nbytes,
+                conns=self.policy.conns_per_transfer,
+                link_region=eff_region, tag=f"msg{msg.msg_id}"))
+        return wires, transfers, ser_done
+
+    def broadcast(self, msgs: Sequence[FLMessage], now: float):
+        """Concurrent dispatch (the FL server's global-model distribution)."""
+        wires, transfers, _ = self._broadcast_transfers(msgs, now)
+        mem = self.endpoint.memory
+        allocs = []
+        for msg, (wire, start) in zip(msgs, wires):
+            a = (wire.nbytes if (self.policy.per_send_copy and msg.payload
+                                 is not None) else 0) + self.policy.staging_bytes
+            mem.alloc(a, start)
+            allocs.append(a)
+        simulate_transfers(transfers)
+        arrives = []
+        for msg, (wire, _), tr, a in zip(msgs, wires, transfers, allocs):
+            self.fabric.endpoints[msg.receiver].inbox.append(
+                _delivery(msg, wire, tr.finish))
+            mem.free(a, tr.finish)
+            arrives.append(tr.finish)
+        return max(w[1] for w in wires), arrives
+
+    def sequential_broadcast(self, msgs: Sequence[FLMessage], now: float):
+        """One at a time (Fig 4b baseline)."""
+        t = now
+        arrives = []
+        for msg in msgs:
+            _, arrive = self.send(msg, t)
+            t = arrive
+            arrives.append(arrive)
+        return t, arrives
+
+    # ------------------------------------------------------------------
+    def recv(self, now: float) -> List[Tuple[FLMessage, float]]:
+        out = []
+        for d in self.endpoint.pop_ready(now):
+            ready = d.arrive_time
+            msg = d.msg
+            if d.wire is not None and d.wire.nbytes > 256:
+                ready += self.serializer.deser_time(d.wire.nbytes)
+                if msg.payload is None or d.wire.buffers is not None:
+                    payload = decode_wire(d.wire, self.serializer)
+                    msg = dataclasses.replace(msg, payload=payload)
+            out.append((msg, ready))
+        return out
+
+    # ------------------------------------------------------------------
+    def p2p_time(self, nbytes: int, dst_id: str) -> float:
+        """Analytic one-message CPU-to-CPU latency (Fig 4a)."""
+        region = self._link_region(dst_id)
+        return (self.serializer.ser_time(nbytes) + self._overhead(region)
+                + region.latency
+                + nbytes / region.conn_cap(self.policy.conns_per_transfer)
+                + self.serializer.deser_time(nbytes))
+
+
+def _delivery(msg, wire, t):
+    from repro.core.transport import Delivery
+    return Delivery(msg, wire, t)

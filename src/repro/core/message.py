@@ -1,0 +1,90 @@
+"""FL message model (paper §III-A): every message = small metadata record +
+(optionally large) parameter payload.
+
+Payload flavours:
+* ``TensorPayload``  — a real JAX/numpy pytree (tests + live FL training).
+* ``PackedPayload``  — quantised (int8+scales) pytree from compression/.
+* ``VirtualPayload`` — sized-but-unmaterialised stand-in used by the
+  paper-scale benchmarks (1.24 GB ViT payloads shouldn't be memcpy'd
+  thousands of times on this CPU container; simulated time/memory are
+  charged from ``nbytes`` identically either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_mid = itertools.count()
+
+
+def tree_nbytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * jax.numpy.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass
+class TensorPayload:
+    tree: Any
+
+    @property
+    def nbytes(self) -> int:
+        return tree_nbytes(self.tree)
+
+    def fingerprint(self) -> int:
+        leaves = jax.tree.leaves(self.tree)
+        if not leaves:
+            return 0
+        first = np.asarray(leaves[0]).reshape(-1)
+        return hash((len(leaves), self.nbytes,
+                     float(first[0]) if first.size else 0.0))
+
+
+@dataclasses.dataclass
+class PackedPayload:
+    packed: dict  # q/scales/block/orig_len (repro.kernels.ops)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.size(self.packed["q"])) + \
+            int(np.size(self.packed["scales"])) * 4
+
+    def fingerprint(self) -> int:
+        return hash(("packed", self.nbytes, int(self.packed["orig_len"])))
+
+
+@dataclasses.dataclass
+class VirtualPayload:
+    size: int
+    tag: str = ""
+
+    @property
+    def nbytes(self) -> int:
+        return self.size
+
+    def fingerprint(self) -> int:
+        return hash(("virtual", self.size, self.tag))
+
+
+@dataclasses.dataclass
+class FLMessage:
+    msg_type: str  # init | model_sync | client_update | control | ack
+    sender: str
+    receiver: str
+    round: int = 0
+    payload: Optional[Any] = None  # one of the payload classes
+    metadata: dict = dataclasses.field(default_factory=dict)
+    msg_id: int = dataclasses.field(default_factory=lambda: next(_mid))
+
+    @property
+    def payload_nbytes(self) -> int:
+        return 0 if self.payload is None else self.payload.nbytes
+
+    def meta_only(self, extra: Optional[dict] = None) -> "FLMessage":
+        md = dict(self.metadata)
+        if extra:
+            md.update(extra)
+        return dataclasses.replace(self, payload=None, metadata=md)

@@ -1,0 +1,224 @@
+"""Discrete-event network model calibrated from the paper's Table I.
+
+Star topology (FL server = hub). Each region carries the paper's measured
+(single-connection BW, multi-connection BW, RTT latency) to the hub. A
+transfer with ``conns`` connections is rate-capped at
+``min(conns * bw_single, bw_multi)``; concurrently active transfers at a
+host additionally share the host uplink/downlink via max-min fair
+water-filling — this is what reproduces Fig 2 (concurrency recovers
+throughput) and Fig 4b (concurrent-vs-sequential speedups saturating below
+ideal).
+
+All bandwidths stored in bytes/s, latencies in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Optional, Sequence
+
+MB = 1024 ** 2
+GB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """Paper Table I row: link characteristics to the hub (N. California)."""
+    name: str
+    bw_single: float  # bytes/s, one TCP connection
+    bw_multi: float  # bytes/s, saturated multi-connection
+    latency: float  # seconds, one-way-ish RTT as measured
+
+    def conn_cap(self, conns: int) -> float:
+        return min(conns * self.bw_single, self.bw_multi)
+
+
+# Table I (g4dn.2xlarge, hub = North California)
+NCAL = Region("ncal", 592 * MB, 2946 * MB, 0.44e-3)
+OREGON = Region("oregon", 133 * MB, 573 * MB, 11e-3)
+NVIRGINIA = Region("nvirginia", 39.4 * MB, 557 * MB, 32.3e-3)
+HONGKONG = Region("hongkong", 16.3 * MB, 513 * MB, 83.3e-3)
+STOCKHOLM = Region("stockholm", 11.4 * MB, 495 * MB, 90.9e-3)
+SAOPAULO = Region("saopaulo", 8.27 * MB, 491 * MB, 90.9e-3)
+BAHRAIN = Region("bahrain", 6.90 * MB, 444 * MB, 111e-3)
+
+# LAN testbed (§IV-A): InfiniBand 5 GB/s @ 3.17 us; TCP fallback 1 GB/s
+# @ 16.8 us (serialising backends ride TCP, buffer backends ride IB verbs).
+LAN_IB = Region("lan_ib", 5.0 * GB, 5.0 * GB, 3.17e-6)
+LAN_TCP = Region("lan_tcp", 1.0 * GB, 2.5 * GB, 16.8e-6)
+
+GEO_REGIONS = [NCAL, OREGON, NVIRGINIA, HONGKONG, STOCKHOLM, SAOPAULO,
+               BAHRAIN]
+REGIONS = {r.name: r for r in GEO_REGIONS + [LAN_IB, LAN_TCP]}
+
+
+@dataclasses.dataclass(frozen=True)
+class Host:
+    host_id: str
+    region: Region
+    uplink: float  # bytes/s host NIC budget (shared across transfers)
+    downlink: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Environment:
+    """One of the paper's three deployment regimes."""
+    name: str
+    server: Host
+    clients: tuple  # Host tuple
+    has_object_store: bool = True
+    trusted: bool = False  # LAN/within-org: MPI/RPC deployable
+
+    def host(self, host_id: str) -> Host:
+        if host_id == self.server.host_id:
+            return self.server
+        for c in self.clients:
+            if c.host_id == host_id:
+                return c
+        raise KeyError(host_id)
+
+
+def lan_env(num_clients: int = 7) -> Environment:
+    mk = lambda i: Host(f"client{i}", LAN_TCP, 5.0 * GB, 5.0 * GB)
+    return Environment("lan", Host("server", LAN_TCP, 5.0 * GB, 5.0 * GB),
+                       tuple(mk(i) for i in range(num_clients)),
+                       has_object_store=False, trusted=True)
+
+
+def geo_proximal_env(num_clients: int = 7) -> Environment:
+    mk = lambda i: Host(f"client{i}", NCAL, NCAL.bw_multi, NCAL.bw_multi)
+    return Environment("geo_proximal",
+                       Host("server", NCAL, NCAL.bw_multi, NCAL.bw_multi),
+                       tuple(mk(i) for i in range(num_clients)), trusted=True)
+
+
+def geo_distributed_env() -> Environment:
+    clients = tuple(
+        Host(f"client{i}", r, r.bw_multi, r.bw_multi)
+        for i, r in enumerate(GEO_REGIONS))
+    return Environment("geo_distributed",
+                       Host("server", NCAL, NCAL.bw_multi, NCAL.bw_multi),
+                       clients)
+
+
+ENVIRONMENTS = {
+    "lan": lan_env,
+    "geo_proximal": geo_proximal_env,
+    "geo_distributed": geo_distributed_env,
+}
+
+
+def make_env(name: str, num_clients: int = 7) -> Environment:
+    if name == "geo_distributed":
+        return geo_distributed_env()
+    return ENVIRONMENTS[name](num_clients)
+
+
+# ---------------------------------------------------------------------------
+# fluid-flow transfer simulation (max-min fair water-filling)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Transfer:
+    start: float
+    src: Host
+    dst: Host
+    nbytes: float
+    conns: int = 1
+    link_region: Optional[Region] = None  # defaults to the non-hub region
+    tag: str = ""
+    # filled by simulate():
+    finish: float = math.inf
+
+    def rate_cap(self) -> float:
+        region = self.link_region or (
+            self.dst.region if self.dst.region is not NCAL else self.src.region)
+        return region.conn_cap(max(self.conns, 1))
+
+    def latency(self) -> float:
+        region = self.link_region or (
+            self.dst.region if self.dst.region is not NCAL else self.src.region)
+        return region.latency
+
+
+def _fair_rates(active: Sequence[Transfer]) -> dict:
+    """Max-min fair allocation under per-transfer caps + host NIC budgets."""
+    rates = {id(t): 0.0 for t in active}
+    caps = {id(t): t.rate_cap() for t in active}
+    up = {}
+    down = {}
+    for t in active:
+        up.setdefault(t.src.host_id, t.src.uplink)
+        down.setdefault(t.dst.host_id, t.dst.downlink)
+    unfrozen = set(rates)
+    # progressive filling
+    for _ in range(len(active) + 2):
+        if not unfrozen:
+            break
+        # per-host fair share among its unfrozen transfers
+        increments = {}
+        for t in active:
+            if id(t) not in unfrozen:
+                continue
+            n_up = sum(1 for u in active if id(u) in unfrozen
+                       and u.src.host_id == t.src.host_id)
+            n_dn = sum(1 for u in active if id(u) in unfrozen
+                       and u.dst.host_id == t.dst.host_id)
+            share = min(up[t.src.host_id] / n_up, down[t.dst.host_id] / n_dn,
+                        caps[id(t)] - rates[id(t)])
+            increments[id(t)] = max(share, 0.0)
+        if not increments:
+            break
+        inc = min(increments.values())
+        newly_frozen = set()
+        for t in active:
+            if id(t) not in unfrozen:
+                continue
+            rates[id(t)] += increments[id(t)]
+            up[t.src.host_id] -= increments[id(t)]
+            down[t.dst.host_id] -= increments[id(t)]
+            if rates[id(t)] >= caps[id(t)] - 1e-9 or increments[id(t)] <= 1e-9:
+                newly_frozen.add(id(t))
+        unfrozen -= newly_frozen
+        if not newly_frozen:
+            break
+    return rates
+
+
+def simulate_transfers(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
+    """Event-driven fluid simulation. Sets ``finish`` on each transfer
+    (start + latency + contention-aware transmission time)."""
+    remaining = {id(t): float(t.nbytes) for t in transfers}
+    begin = {id(t): t.start + t.latency() for t in transfers}
+    pending = sorted(transfers, key=lambda t: begin[id(t)])
+    active: list = []
+    now = begin[id(pending[0])] if pending else 0.0
+    pi = 0
+    while pending[pi:] or active:
+        while pi < len(pending) and begin[id(pending[pi])] <= now + 1e-12:
+            active.append(pending[pi])
+            pi += 1
+        if not active:
+            now = begin[id(pending[pi])]
+            continue
+        rates = _fair_rates(active)
+        # time to next event: earliest finish or next start
+        t_fin = math.inf
+        for t in active:
+            r = max(rates[id(t)], 1e-9)
+            t_fin = min(t_fin, remaining[id(t)] / r)
+        t_next = begin[id(pending[pi])] - now if pi < len(pending) else math.inf
+        dt = min(t_fin, t_next)
+        for t in list(active):
+            remaining[id(t)] -= rates[id(t)] * dt
+            if remaining[id(t)] <= 1e-6:
+                t.finish = now + dt
+                active.remove(t)
+        now += dt
+    return transfers
+
+
+def transfer_time(nbytes: float, region: Region, conns: int = 1) -> float:
+    """Uncontended single-transfer time (latency + bytes / capped bw)."""
+    return region.latency + nbytes / region.conn_cap(max(conns, 1))

@@ -1,0 +1,6 @@
+from repro.fl.aggregator import fedavg, fedavg_quantized
+from repro.fl.client import FLClient
+from repro.fl.server import FLServer, RoundReport
+
+__all__ = ["FLServer", "FLClient", "RoundReport", "fedavg",
+           "fedavg_quantized"]

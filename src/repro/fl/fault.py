@@ -1,0 +1,52 @@
+"""Failure & straggler injection + recovery policies.
+
+The paper's fault-tolerance claims exercised here:
+* gRPC/gRPC+S3: dynamic participation — dropped clients are simply not
+  counted (quorum), late clients re-fetch the current model from S3 with no
+  sender involvement.
+* MPI: static world — a lost rank aborts the round; recovery = restore the
+  last checkpoint and re-run the round (cost modelled + measured).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Set
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    drop_rate: float = 0.0  # per client per round
+    straggler_rate: float = 0.0  # fraction of clients slowed
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+    def for_round(self, round_: int, client_ids) -> tuple:
+        rng = np.random.default_rng(self.seed * 7919 + round_)
+        dropped: Set[str] = set()
+        stragglers: Set[str] = set()
+        for cid in client_ids:
+            if rng.random() < self.drop_rate:
+                dropped.add(cid)
+            elif rng.random() < self.straggler_rate:
+                stragglers.add(cid)
+        return dropped, stragglers
+
+
+def apply_stragglers(clients, stragglers, factor: float):
+    for c in clients:
+        c.straggle_factor = factor if c.client_id in stragglers else 1.0
+
+
+def mpi_abort_recovery_time(ckpt_restore_s: float, round_time_s: float) -> float:
+    """Paper §II-C: MPI failure handling lacks fault isolation — global
+    abort, restore, re-run."""
+    return ckpt_restore_s + round_time_s
+
+
+def s3_late_join_time(store, key: str, host, now: float) -> float:
+    """A restarted client pulls the current global model directly from the
+    object store (single-upload/multi-download durability)."""
+    obj, attempts = store.get(key)
+    return now + attempts * store.get_time(obj.nbytes, host)

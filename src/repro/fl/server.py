@@ -1,0 +1,247 @@
+"""FL server: round orchestration over any CommBackend, with concurrent
+dispatch, quorum/deadline straggler mitigation, fault handling and the
+paper's per-state time accounting (Fig 5: communication / migration /
+serialization / waiting / training / aggregation).
+
+All timing below is simulated-clock seconds from netsim; payload movement
+is real whenever payloads are real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.backends.base import CommBackend
+from repro.core.message import (FLMessage, TensorPayload, VirtualPayload)
+from repro.core.netsim import Region, Transfer, simulate_transfers
+from repro.fl.aggregator import fedavg, simulated_agg_time
+from repro.fl.client import PCIE_BW, ClientTiming, FLClient
+
+
+@dataclasses.dataclass
+class RoundReport:
+    round: int
+    backend: str
+    round_time: float
+    server: Dict[str, float]
+    clients: Dict[str, float]  # averaged across participating clients
+    n_participants: int
+    n_dropped: int
+    peak_server_memory: int
+    aborted: bool = False
+    losses: Optional[float] = None
+
+
+class FLServer:
+    def __init__(self, backend, clients: Sequence[FLClient], *,
+                 quorum_fraction: float = 1.0, round_deadline_s: float = 0.0,
+                 local_steps: int = 10, live: bool = True,
+                 checkpoint_mgr=None, server_lr: float = 1.0):
+        self.backend = backend
+        self.clients = list(clients)
+        self.quorum_fraction = quorum_fraction
+        self.round_deadline_s = round_deadline_s
+        self.local_steps = local_steps
+        self.live = live
+        self.ckpt = checkpoint_mgr
+        self.server_lr = server_lr
+        self.now = 0.0
+        self.reports: List[RoundReport] = []
+        self.global_params = None
+        self.round = 0
+
+    # ------------------------------------------------------------------
+    def _client_backend(self, client: FLClient, msg=None):
+        cb = client.backend
+        if msg is not None and hasattr(cb, "resolve"):
+            return cb.resolve(msg)  # AUTO: plan with the routed backend
+        return cb
+
+    def _upload_phase(self, sends):
+        """sends: list of (client, update_msg, start_t). Contention-aware
+        upload of all updates; returns dict client_id -> (arrive_t, ser_s)."""
+        out = {}
+        backend = self.backend
+        name = getattr(backend, "name", "grpc")
+        if name == "grpc+s3" or (name == "auto" and backend.store is not None
+                                 and sends and sends[0][1].payload_nbytes
+                                 >= 10 << 20):
+            s3 = backend if name == "grpc+s3" else backend.s3
+            transfers, meta = [], []
+            for client, msg, start in sends:
+                cb = self._client_backend(client, msg)
+                ser = cb.serializer.ser_time(msg.payload_nbytes)
+                src = cb.env.host(client.client_id)
+                put = s3.store.put_time(msg.payload_nbytes, src, s3.parts)
+                key = s3.store.content_key(msg.payload.fingerprint(),
+                                           msg.round, client.client_id)
+                wire = None
+                if isinstance(msg.payload, TensorPayload):
+                    wire = cb.serializer.serialize(msg.payload)
+                s3.store.put(key, wire, msg.payload_nbytes, start + ser + put)
+                region = cb._link_region("server")
+                meta_arrive = start + ser + put + cb._overhead(region) \
+                    + region.latency
+                dst = s3.env.host("server")
+                tr = s3.store.get_transfer(key, dst, meta_arrive, s3.parts)
+                transfers.append(tr)
+                meta.append((client, msg, ser, key))
+            simulate_transfers(transfers)
+            for (client, msg, ser, key), tr in zip(meta, transfers):
+                deser = s3.serializer.deser_time(msg.payload_nbytes)
+                out[client.client_id] = (tr.finish + deser, ser, msg, key)
+            return out
+        # direct backends: concurrent client->server transfers
+        transfers, meta = [], []
+        for client, msg, start in sends:
+            cb = self._client_backend(client, msg)
+            ser = cb.serializer.ser_time(msg.payload_nbytes)
+            region = cb._link_region("server")
+            transfers.append(Transfer(
+                start=start + ser + cb._overhead(region),
+                src=cb.env.host(client.client_id),
+                dst=cb.env.host("server"),
+                nbytes=msg.payload_nbytes,
+                conns=cb.policy.conns_per_transfer,
+                link_region=region, tag=client.client_id))
+            meta.append((client, msg, ser))
+        simulate_transfers(transfers)
+        for (client, msg, ser), tr in zip(meta, transfers):
+            sb = self.backend
+            if hasattr(sb, "resolve"):
+                sb = sb.resolve(msg)
+            deser = sb.serializer.deser_time(msg.payload_nbytes)
+            out[client.client_id] = (tr.finish + deser, ser, msg, None)
+        return out
+
+    # ------------------------------------------------------------------
+    def run_round(self, global_payload, *, dropped: Optional[set] = None,
+                  participants: Optional[Sequence[FLClient]] = None):
+        """One FL round. ``global_payload``: TensorPayload | VirtualPayload.
+        Returns RoundReport (and updates self.global_params in live mode)."""
+        dropped = dropped or set()
+        clients = list(participants or self.clients)
+        t0 = self.now
+        self.backend.endpoint.memory.reset()
+
+        # 1) concurrent broadcast of the global model
+        msgs = [FLMessage("model_sync", "server", c.client_id,
+                          round=self.round, payload=global_payload)
+                for c in clients]
+        sender_done, _ = self.backend.broadcast(msgs, t0)
+
+        # 2) clients receive, train, stage updates
+        sends, timings = [], {}
+        for c in clients:
+            cb = self._client_backend(c)
+            got = cb.recv(t0 + 1e9)  # pop whatever was scheduled
+            if not got:
+                continue
+            msg, ready = got[0]
+            if c.client_id in dropped:
+                timings[c.client_id] = ClientTiming(
+                    communication=ready - t0)
+                continue
+            update, ct, send_start = c.run_round(msg, ready, self.local_steps)
+            ct.communication += ready - t0
+            sends.append((c, update, send_start))
+            timings[c.client_id] = ct
+
+        aborted = False
+        if dropped and _is_mpi(self.backend):
+            # MPI's static world: a lost rank aborts the round (paper §II-C);
+            # restart costs a checkpoint restore + full re-run marker.
+            aborted = True
+
+        # 3) contention-aware concurrent uploads
+        arrivals = self._upload_phase(sends)
+
+        # 4) quorum / deadline aggregation
+        ready_sorted = sorted((v[0], cid) for cid, v in arrivals.items())
+        need = max(1, int(np.ceil(self.quorum_fraction * len(clients))))
+        need = min(need, len(ready_sorted))
+        cutoff_t = ready_sorted[need - 1][0] if ready_sorted else t0
+        if self.round_deadline_s:
+            cutoff_t = min(cutoff_t, t0 + self.round_deadline_s)
+        counted = [cid for (at, cid) in ready_sorted if at <= cutoff_t + 1e-9]
+        late = [cid for (at, cid) in ready_sorted if at > cutoff_t + 1e-9]
+
+        # 5) aggregate
+        updates, weights = [], []
+        ser_s = 0.0
+        for cid in counted:
+            at, ser, msg, _ = arrivals[cid]
+            ser_s += ser
+            if isinstance(msg.payload, TensorPayload):
+                updates.append(msg.payload.tree)
+                weights.append(msg.metadata.get("num_examples", 1))
+        if updates:
+            agg, agg_s = fedavg(updates, weights)
+            self.global_params = agg
+            mig_s = 2 * global_payload.nbytes / PCIE_BW
+        else:
+            agg_s = simulated_agg_time(global_payload.nbytes, len(counted))
+            mig_s = 2 * global_payload.nbytes / PCIE_BW
+        agg_done = cutoff_t + mig_s + agg_s
+        self.now = agg_done
+        self.round += 1
+
+        # 6) per-state report (paper Fig 5)
+        cl_avg = _avg_timings([timings[cid] for cid in counted
+                               if cid in timings], arrivals, agg_done)
+        server_states = {
+            "communication": (sender_done - t0) + _server_comm(arrivals,
+                                                               counted),
+            "migration": mig_s,
+            "serialization": ser_s / max(len(counted), 1),
+            "waiting": max(cutoff_t - sender_done, 0.0),
+            "aggregation": agg_s,
+        }
+        losses = [getattr(c, "last_loss", None) for c in clients]
+        losses = [l for l in losses if l is not None]
+        report = RoundReport(
+            round=self.round - 1, backend=getattr(self.backend, "name", "?"),
+            round_time=agg_done - t0, server=server_states, clients=cl_avg,
+            n_participants=len(counted), n_dropped=len(dropped) + len(late),
+            peak_server_memory=self.backend.endpoint.memory.peak,
+            aborted=aborted,
+            losses=float(np.mean(losses)) if losses else None)
+        self.reports.append(report)
+        if self.ckpt is not None and self.global_params is not None:
+            self.ckpt.save(self.round, self.global_params,
+                           meta={"sim_time": self.now})
+        return report
+
+
+def _is_mpi(backend) -> bool:
+    return getattr(backend, "name", "").startswith("mpi")
+
+
+def _server_comm(arrivals, counted) -> float:
+    """Server-side receive span (first byte to last counted update)."""
+    if not counted:
+        return 0.0
+    ts = [arrivals[cid][0] for cid in counted]
+    return max(ts) - min(ts) if len(ts) > 1 else 0.0
+
+
+def _avg_timings(timings: List[ClientTiming], arrivals, round_end) -> Dict[str, float]:
+    if not timings:
+        return {k: 0.0 for k in ("communication", "migration",
+                                 "serialization", "waiting", "training")}
+    out = {
+        "communication": float(np.mean([t.communication for t in timings])),
+        "migration": float(np.mean([t.migration for t in timings])),
+        "serialization": float(np.mean([t.serialization for t in timings])),
+        "training": float(np.mean([t.training for t in timings])),
+    }
+    waits = []
+    for cid, (at, ser, msg, _) in arrivals.items():
+        waits.append(max(round_end - at, 0.0))
+    out["waiting"] = float(np.mean(waits)) if waits else 0.0
+    # fold upload serialization into the client's serialization state
+    sers = [arrivals[cid][1] for cid in arrivals]
+    out["serialization"] += float(np.mean(sers)) if sers else 0.0
+    return out

@@ -1,0 +1,116 @@
+"""jit'd public wrappers over the Pallas kernels: pytree-level quantise /
+dequantise / aggregate with padding + flattening handled here.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
+the compile target) and False on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fedavg_reduce as fr
+from repro.kernels import quantize as qz
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flat-array helpers
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, multiple):
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,) + x.shape[1:], x.dtype)])
+    return x, n
+
+
+def quantize_flat(x, *, block: int = 256, interpret=None):
+    """x: (T,) float -> dict(q=(T',) int8, scales, block, orig_len)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, orig = _pad_to(x.reshape(-1), block * qz.ROW_TILE)
+    rows = xp.shape[0] // block
+    q, s = qz.quantize_blocks(xp.reshape(rows, block), interpret=interpret)
+    return {"q": q.reshape(-1), "scales": s.reshape(-1), "block": block,
+            "orig_len": orig}
+
+
+def dequantize_flat(packed, *, out_dtype=jnp.float32, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    block = packed["block"]
+    q = packed["q"].reshape(-1, block)
+    s = packed["scales"].reshape(-1, 1)
+    x = qz.dequantize_blocks(q, s, out_dtype=out_dtype, interpret=interpret)
+    return x.reshape(-1)[: packed["orig_len"]]
+
+
+# ---------------------------------------------------------------------------
+# pytree-level API (used by compression/ and fl/)
+# ---------------------------------------------------------------------------
+
+def flatten_pytree(tree):
+    """-> (flat f32 vector, unflatten_fn). Dtype-preserving on unflatten."""
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(vec):
+        out = []
+        off = 0
+        for size, shape, dt in zip(sizes, shapes, dtypes):
+            out.append(vec[off:off + size].reshape(shape).astype(dt))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def quantize_pytree(tree, *, block: int = 256, interpret=None):
+    flat, unflatten = flatten_pytree(tree)
+    packed = quantize_flat(flat, block=block, interpret=interpret)
+    return packed, unflatten
+
+
+def fedavg_aggregate(updates: Sequence, weights, *, interpret=None):
+    """Weighted average of N pytrees (normalised weights) via the Pallas
+    reduction. Returns a pytree like updates[0]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    weights = jnp.asarray(weights, jnp.float32)
+    weights = weights / jnp.sum(weights)
+    flats, unflatten = zip(*[flatten_pytree(u) for u in updates])
+    stacked = jnp.stack(flats)  # (N, T)
+    stacked, orig = _pad_to(stacked.T, fr.COL_TILE)  # pad T
+    agg = fr.fedavg_reduce(stacked.T, weights, interpret=interpret)
+    return unflatten[0](agg[:orig])
+
+
+def fedavg_aggregate_q8(packed_list: Sequence[dict], weights, unflatten,
+                        *, interpret=None):
+    """Aggregate quantised client updates without materialising dequantised
+    copies. packed_list: outputs of quantize_flat (same block/orig_len)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    weights = jnp.asarray(weights, jnp.float32)
+    weights = weights / jnp.sum(weights)
+    block = packed_list[0]["block"]
+    orig = packed_list[0]["orig_len"]
+    q = jnp.stack([p["q"] for p in packed_list])  # (N, T') int8
+    s = jnp.stack([p["scales"] for p in packed_list])  # (N, T'/block)
+    t = q.shape[1]
+    if t % fr.COL_TILE:
+        pad = (-t) % fr.COL_TILE
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        s = jnp.pad(s, ((0, 0), (0, pad // block)))
+    agg = fr.fedavg_reduce_q8(q, s, weights, block=block,
+                              interpret=interpret)
+    return unflatten(agg[:orig])

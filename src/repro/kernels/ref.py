@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_blocks_ref(x):
+    """x: (rows, block) -> (q int8, scales f32 (rows,1))."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blocks_ref(q, scales, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scales).astype(out_dtype)
+
+
+def fedavg_reduce_ref(updates, weights):
+    """updates (N, T), weights (N,) -> (T,) f32."""
+    return jnp.sum(updates.astype(jnp.float32)
+                   * weights.astype(jnp.float32)[:, None], axis=0)
+
+
+def fedavg_reduce_q8_ref(q, scales, weights, block: int = 256):
+    n, t = q.shape
+    x = q.astype(jnp.float32).reshape(n, t // block, block) \
+        * scales.astype(jnp.float32)[..., None]
+    return jnp.sum(x.reshape(n, t) * weights.astype(jnp.float32)[:, None],
+                   axis=0)

@@ -1,0 +1,6 @@
+from repro.models.registry import (active_param_count, build_model,
+                                   model_flops_per_token, param_count,
+                                   param_shapes_and_axes)
+
+__all__ = ["build_model", "param_count", "active_param_count",
+           "model_flops_per_token", "param_shapes_and_axes"]

@@ -1,0 +1,262 @@
+"""The paper's image-model payload tiers as real JAX models.
+
+ResNet56 (Small, ~2.4 MB fp32) / MobileNetV3-style (Medium, ~20 MB) /
+ViT-Large (Large, ~1.24 GB).  Used by the FL end-to-end path (clients train
+these locally, the comm backends move their parameter pytrees).
+
+These are CIFAR/GLD-style classifiers; exact reference param counts are in
+``repro.configs.paper_tiers``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def conv_init(rng, k, c_in, c_out, dtype=jnp.float32, groups=1):
+    fan_in = k * k * c_in // groups
+    std = math.sqrt(2.0 / fan_in)
+    w = jax.random.normal(rng, (k, k, c_in // groups, c_out), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn_init(c, dtype=jnp.float32):
+    # inference-style affine norm (FL payloads include scale/bias)
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def norm_apply(p, x, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return x * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-56 (CIFAR-style: 3 stages x 9 basic blocks, widths 16/32/64)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet56"
+    widths: Sequence[int] = (16, 32, 64)
+    blocks_per_stage: int = 9
+    num_classes: int = 203  # GLD-23k-ish label space (paper uses GLD-23K)
+    image_size: int = 32
+
+
+class ResNet:
+    def __init__(self, cfg: ResNetConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = iter(jax.random.split(rng, 200))
+        p = {"stem": {"w": conv_init(next(ks), 3, 3, cfg.widths[0]),
+                      "bn": bn_init(cfg.widths[0])}}
+        c_in = cfg.widths[0]
+        for si, width in enumerate(cfg.widths):
+            stage = []
+            for bi in range(cfg.blocks_per_stage):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                blk = {"c1": conv_init(next(ks), 3, c_in, width),
+                       "bn1": bn_init(width),
+                       "c2": conv_init(next(ks), 3, width, width),
+                       "bn2": bn_init(width)}
+                if stride != 1 or c_in != width:
+                    blk["proj"] = conv_init(next(ks), 1, c_in, width)
+                stage.append(blk)
+                c_in = width
+            p[f"stage{si}"] = stage
+        p["head"] = {
+            "w": jax.random.normal(next(ks), (c_in, cfg.num_classes),
+                                   jnp.float32) * 0.01,
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+        return p
+
+    def forward(self, p, images):
+        cfg = self.cfg
+        x = norm_apply(p["stem"]["bn"], conv(images, p["stem"]["w"]))
+        x = jax.nn.relu(x)
+        for si in range(len(cfg.widths)):
+            for bi, blk in enumerate(p[f"stage{si}"]):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                h = jax.nn.relu(norm_apply(blk["bn1"],
+                                           conv(x, blk["c1"], stride)))
+                h = norm_apply(blk["bn2"], conv(h, blk["c2"]))
+                sc = conv(x, blk["proj"], stride) if "proj" in blk else x
+                x = jax.nn.relu(h + sc)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ p["head"]["w"] + p["head"]["b"]
+
+    def loss(self, p, batch):
+        logits = self.forward(p, batch["images"])
+        return L.cross_entropy(logits[:, None, :], batch["labels"][:, None],
+                               z_loss=0.0), {}
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV3-style (inverted residuals + SE), Medium tier
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MobileNetConfig:
+    name: str = "mobilenetv3"
+    # (expand, out_channels, stride, use_se) per block
+    blocks: tuple = ((1, 16, 1, False), (4, 24, 2, False), (3, 24, 1, False),
+                     (3, 40, 2, True), (3, 40, 1, True), (3, 40, 1, True),
+                     (6, 80, 2, False), (2.5, 80, 1, False), (2.3, 80, 1, False),
+                     (6, 112, 1, True), (6, 112, 1, True),
+                     (6, 160, 2, True), (6, 160, 1, True), (6, 160, 1, True))
+    stem: int = 16
+    head: int = 960
+    classifier: int = 1280
+    num_classes: int = 203
+    image_size: int = 64
+
+
+class MobileNetV3:
+    def __init__(self, cfg: MobileNetConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = iter(jax.random.split(rng, 400))
+        p = {"stem": {"w": conv_init(next(ks), 3, 3, cfg.stem),
+                      "bn": bn_init(cfg.stem)}}
+        c_in = cfg.stem
+        blocks = []
+        for (exp, out, stride, se) in cfg.blocks:
+            c_mid = int(c_in * exp + 0.5)
+            blk = {"expand": conv_init(next(ks), 1, c_in, c_mid),
+                   "bn_e": bn_init(c_mid),
+                   "dw": conv_init(next(ks), 3, c_mid, c_mid, groups=c_mid),
+                   "bn_d": bn_init(c_mid),
+                   "project": conv_init(next(ks), 1, c_mid, out),
+                   "bn_p": bn_init(out)}
+            if se:
+                c_se = max(c_mid // 4, 8)
+                blk["se_down"] = conv_init(next(ks), 1, c_mid, c_se)
+                blk["se_up"] = conv_init(next(ks), 1, c_se, c_mid)
+            blocks.append(blk)
+            c_in = out
+        p["blocks"] = blocks
+        p["head"] = {"w": conv_init(next(ks), 1, c_in, cfg.head),
+                     "bn": bn_init(cfg.head),
+                     "fc1": jax.random.normal(next(ks), (cfg.head, cfg.classifier),
+                                              jnp.float32) * 0.01,
+                     "fc2": jax.random.normal(next(ks),
+                                              (cfg.classifier, cfg.num_classes),
+                                              jnp.float32) * 0.01,
+                     "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+        return p
+
+    def forward(self, p, images):
+        x = jax.nn.hard_swish(norm_apply(p["stem"]["bn"],
+                                         conv(images, p["stem"]["w"], 2)))
+        for (_, _, stride, _), blk in zip(self.cfg.blocks, p["blocks"]):
+            h = jax.nn.hard_swish(norm_apply(blk["bn_e"],
+                                             conv(x, blk["expand"])))
+            c_mid = h.shape[-1]
+            h = jax.nn.hard_swish(norm_apply(
+                blk["bn_d"], conv(h, blk["dw"], stride, groups=c_mid)))
+            if "se_down" in blk:
+                s = jnp.mean(h, axis=(1, 2), keepdims=True)
+                s = jax.nn.relu(conv(s, blk["se_down"]))
+                s = jax.nn.sigmoid(conv(s, blk["se_up"]))
+                h = h * s
+            h = norm_apply(blk["bn_p"], conv(h, blk["project"]))
+            if stride == 1 and h.shape[-1] == x.shape[-1]:
+                h = h + x
+            x = h
+        x = jax.nn.hard_swish(norm_apply(p["head"]["bn"],
+                                         conv(x, p["head"]["w"])))
+        x = jnp.mean(x, axis=(1, 2))
+        x = jax.nn.hard_swish(x @ p["head"]["fc1"])
+        return x @ p["head"]["fc2"] + p["head"]["b"]
+
+    def loss(self, p, batch):
+        logits = self.forward(p, batch["images"])
+        return L.cross_entropy(logits[:, None, :], batch["labels"][:, None],
+                               z_loss=0.0), {}
+
+
+# ---------------------------------------------------------------------------
+# ViT-Large (Large tier, 307M params)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str = "vit-large"
+    num_layers: int = 24
+    d_model: int = 1024
+    num_heads: int = 16
+    d_ff: int = 4096
+    patch: int = 16
+    image_size: int = 224
+    num_classes: int = 203
+
+
+class ViT:
+    """Encoder-only transformer over patch embeddings (classification)."""
+
+    def __init__(self, cfg: ViTConfig):
+        self.cfg = cfg
+        from repro.configs.base import ModelConfig
+        self.lm_cfg = ModelConfig(
+            name=cfg.name, family="audio", num_layers=cfg.num_layers,
+            d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_heads, d_ff=cfg.d_ff,
+            vocab_size=cfg.num_classes, causal=False,
+            external_embeddings=True, dtype="float32",
+            param_dtype="float32", remat="none", attn_chunk=256,
+            mlp_gelu=True)
+
+    def init(self, rng):
+        from repro.models.transformer import TransformerLM
+        cfg = self.cfg
+        ks = jax.random.split(rng, 3)
+        self._tf = TransformerLM(self.lm_cfg)
+        tf_params, _ = self._tf.init(ks[0])
+        n_patches = (cfg.image_size // cfg.patch) ** 2
+        p = {"tf": tf_params,
+             "patch_w": jax.random.normal(
+                 ks[1], (cfg.patch * cfg.patch * 3, cfg.d_model),
+                 jnp.float32) * 0.02,
+             "patch_b": jnp.zeros((cfg.d_model,), jnp.float32),
+             "pos": jax.random.normal(ks[2], (n_patches, cfg.d_model),
+                                      jnp.float32) * 0.02}
+        return p
+
+    def _patchify(self, images):
+        cfg = self.cfg
+        b, h, w, c = images.shape
+        ph = h // cfg.patch
+        x = images.reshape(b, ph, cfg.patch, ph, cfg.patch, c)
+        x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, ph * ph, -1)
+        return x
+
+    def forward(self, p, images):
+        from repro.models.transformer import TransformerLM
+        tf = getattr(self, "_tf", None) or TransformerLM(self.lm_cfg)
+        x = self._patchify(images) @ p["patch_w"] + p["patch_b"] + p["pos"]
+        logits, _ = tf.forward(p["tf"], {"embeds": x})
+        return jnp.mean(logits, axis=1)  # mean-pool classification
+
+    def loss(self, p, batch):
+        logits = self.forward(p, batch["images"])
+        return L.cross_entropy(logits[:, None, :], batch["labels"][:, None],
+                               z_loss=0.0), {}

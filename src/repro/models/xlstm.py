@@ -1,0 +1,454 @@
+"""xLSTM (arXiv:2405.04517): mLSTM (matrix-memory, chunkwise-parallel) and
+sLSTM (scalar-memory, sequential) blocks.
+
+Layout for xlstm-1.3b: 48 blocks = 6 segments of [7 mLSTM + 1 sLSTM]
+(``slstm_every=8``). ``d_ff=0`` in the assigned config means there is no
+separate FFN: mLSTM blocks are pre-up-projection (pf=2), the sLSTM block
+carries a pf=4/3 gated FFN, per the paper.
+
+Training uses the stabilised chunkwise-parallel mLSTM form (sub-quadratic,
+O(T*chunk)); decode uses the O(1)-state recurrent form — which is why this
+arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.sharding.rules import Sharder
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel (training) and recurrent (decode)
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, i_logit, f_logit, chunk: int):
+    """Stabilised chunkwise mLSTM.
+
+    q,k,v: (b, T, H, dh); i_logit,f_logit: (b, T, H). Returns h: (b,T,H,dh).
+    """
+    b, T, H, dh = q.shape
+    c = min(chunk, T)
+    if T % c:
+        c = T
+    n_chunks = T // c
+    scale = 1.0 / math.sqrt(dh)
+
+    def to_chunks(x):
+        return x.reshape(b, n_chunks, c, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q * scale), to_chunks(k), to_chunks(v)
+    logf = to_chunks(jax.nn.log_sigmoid(f_logit.astype(jnp.float32)))
+    logi = to_chunks(i_logit.astype(jnp.float32))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # (b,H,dh,dh), (b,H,dh), (b,H)
+        qs, ks, vs, lf, li = xs  # (b,c,H,dh), ..., (b,c,H)
+        a = jnp.cumsum(lf, axis=1)  # inclusive decay from chunk start
+        total = a[:, -1]  # (b,H)
+        g = li - a  # (b,c,H)
+
+        # row-stabiliser: m_i = max(intra running max, state path)
+        m_loc = jax.lax.cummax(g, axis=1) + a  # (b,c,H)
+        m_inter = m[:, None, :] + a
+        m_i = jnp.maximum(m_loc, m_inter)  # (b,c,H)
+
+        # intra-chunk (j <= i): w_ij = exp(a_i - a_j + li_j - m_i)
+        wa = a[:, :, None, :] - a[:, None, :, :] + li[:, None, :, :] \
+            - m_i[:, :, None, :]  # (b, i, j, H)
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(wa), 0.0)
+        s = jnp.einsum("bihd,bjhd->bijh", qs.astype(jnp.float32),
+                       ks.astype(jnp.float32))
+        sw = s * w
+        num_intra = jnp.einsum("bijh,bjhd->bihd", sw, vs.astype(jnp.float32))
+        den_intra = jnp.sum(sw, axis=2)  # (b,i,H)
+
+        # inter-chunk: state contribution, scaled exp(a_i + m - m_i)
+        wi = jnp.exp(a + m[:, None, :] - m_i)  # (b,c,H)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qs.astype(jnp.float32),
+                               C) * wi[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qs.astype(jnp.float32),
+                               n) * wi
+
+        denom = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_i))
+        h = (num_intra + num_inter) / denom[..., None]
+
+        # state update to chunk end
+        m_new = jnp.maximum(m + total,
+                            jnp.max(li + total[:, None, :] - a, axis=1))
+        wk = jnp.exp(li + total[:, None, :] - a - m_new[:, None, :])  # (b,c,H)
+        C_new = C * jnp.exp(m + total - m_new)[..., None, None] + jnp.einsum(
+            "bjhd,bjhe,bjh->bhde", ks.astype(jnp.float32),
+            vs.astype(jnp.float32), wk)
+        n_new = n * jnp.exp(m + total - m_new)[..., None] + jnp.einsum(
+            "bjhd,bjh->bhd", ks.astype(jnp.float32), wk)
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((b, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, H, dh), jnp.float32)
+    m0 = jnp.full((b, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, logf, logi))
+    h = hs.swapaxes(0, 1).reshape(b, T, H, dh)
+    return h.astype(v.dtype)
+
+
+def mlstm_step(state, q, k, v, i_logit, f_logit):
+    """Recurrent mLSTM step. state=(C,n,m): (b,H,dh,dh),(b,H,dh),(b,H);
+    q,k,v: (b,H,dh); i,f: (b,H). Returns (new_state, h)."""
+    C, n, m = state
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32) / math.sqrt(dh)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_logit.astype(jnp.float32))
+    li = i_logit.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    C = C * fw[..., None, None] + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = n * fw[..., None] + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# causal conv (kernel 4) used by both block types
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, state=None):
+    """x: (b,T,D), w: (K,D) depthwise. state: (b,K-1,D) or None.
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_diag_apply(x, w):
+    """x: (b,t,H,dh) ; w: (H,dh,dh) -> per-head projection."""
+    return jnp.einsum("bthd,hde->bthe", x, w.astype(x.dtype))
+
+
+def mlstm_block_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = di // H
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    b = L.Builder()
+    b.add("ln", L.zeros_init((d,), ("norm",), dt))
+    b.add("w_up", L.dense_init(ks[0], (d, 2 * di), ("embed", "ssm_inner"), dt))
+    b.add("conv", L.dense_init(ks[1], (4, di), (None, "ssm_inner"), dt))
+    b.add("wq", L.dense_init(ks[2], (H, dh, dh), (None, None, None), dt))
+    b.add("wk", L.dense_init(ks[3], (H, dh, dh), (None, None, None), dt))
+    b.add("w_if", L.dense_init(ks[4], (di, 2 * H), ("ssm_inner", None), dt,
+                               scale=0.02))
+    b.add("b_if", (jnp.concatenate([jnp.zeros((H,), dt),
+                                    jnp.full((H,), 3.0, dt)]), ("norm",)))
+    b.add("out_norm", L.zeros_init((di,), ("norm",), dt))
+    b.add("w_down", L.dense_init(ks[5], (di, d), ("ssm_inner", "embed"), dt))
+    return b.build()
+
+
+def mlstm_block_apply(p, x, cfg: ModelConfig, state=None):
+    """state None for training (chunkwise); tuple for decode step."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.num_heads
+    dh = di // H
+    bsz, T, _ = x.shape
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("btd,df->btf", h, p["w_up"].astype(h.dtype))
+    u, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    uc, new_conv = causal_conv(u, p["conv"], conv_state)
+    uc = jax.nn.silu(uc)
+    uh = uc.reshape(bsz, T, H, dh)
+    q = _block_diag_apply(uh, p["wq"])
+    k = _block_diag_apply(uh, p["wk"])
+    v = u.reshape(bsz, T, H, dh)
+    gates = jnp.einsum("btf,fg->btg", uc, p["w_if"].astype(uc.dtype)) \
+        + p["b_if"].astype(uc.dtype)
+    i_logit, f_logit = jnp.split(gates, 2, axis=-1)  # (b,T,H) each
+    if state is None:
+        hm = mlstm_chunkwise(q, k, v, i_logit, f_logit, cfg.mlstm_chunk)
+        new_state = None
+    else:
+        cell = (state["C"], state["n"], state["m"])
+        cell, hm = mlstm_step(cell, q[:, 0], k[:, 0], v[:, 0],
+                              i_logit[:, 0], f_logit[:, 0])
+        hm = hm[:, None]
+        new_state = {"C": cell[0], "n": cell[1], "m": cell[2],
+                     "conv": new_conv}
+    hm = hm.reshape(bsz, T, di)
+    hm = L.rms_norm(hm, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("btf,fd->btd", hm, p["w_down"].astype(hm.dtype))
+    return x + out, new_state
+
+
+def slstm_block_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    ffd = int(d * 4 / 3 // 64 * 64)
+    b = L.Builder()
+    b.add("ln", L.zeros_init((d,), ("norm",), dt))
+    b.add("conv", L.dense_init(ks[0], (4, d), (None, "embed"), dt))
+    b.add("w_gates", L.dense_init(ks[1], (d, 4 * d), ("embed", "ssm_inner"), dt))
+    b.add("r_gates", L.dense_init(ks[2], (4, H, dh, dh), (None, None, None, None),
+                                  dt, scale=1.0 / math.sqrt(dh)))
+    b.add("b_gates", (jnp.concatenate(
+        [jnp.zeros((2 * d,), dt), jnp.full((d,), 3.0, dt),
+         jnp.zeros((d,), dt)]), ("norm",)))
+    b.add("out_norm", L.zeros_init((d,), ("norm",), dt))
+    b.sub("ffn", L.mlp_init(ks[3], cfg, d_ff=ffd))
+    b.add("ln_ffn", L.zeros_init((d,), ("norm",), dt))
+    return b.build()
+
+
+def slstm_block_apply(p, x, cfg: ModelConfig, state=None):
+    """Sequential sLSTM. state None -> scan full sequence (training)."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    bsz, T, _ = x.shape
+    h0 = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    conv_state = None if state is None else state["conv"]
+    hc, new_conv = causal_conv(h0, p["conv"], conv_state)
+    hc = jax.nn.silu(hc)
+    wx = jnp.einsum("btd,df->btf", hc, p["w_gates"].astype(hc.dtype)) \
+        + p["b_gates"].astype(hc.dtype)  # (b,T,4d)
+
+    r = p["r_gates"]
+
+    def step(carry, wx_t):
+        c, n, m, hprev = carry  # (b,H,dh) x3 ... m: (b,H)
+        rh = jnp.einsum("bhd,ghde->bghe", hprev, r.astype(hprev.dtype))
+        rh = rh.reshape(bsz, 4 * d)
+        gates = (wx_t.astype(jnp.float32) + rh.astype(jnp.float32)).reshape(
+            bsz, 4, H, dh)
+        z_t = jnp.tanh(gates[:, 0])
+        i_l = gates[:, 1]
+        f_l = gates[:, 2]
+        o_t = jax.nn.sigmoid(gates[:, 3])
+        lf = jax.nn.log_sigmoid(f_l)
+        # per-head stabiliser (shared scale across the head's cells keeps the
+        # c/n pair consistent across steps)
+        m_new = jnp.max(jnp.maximum(lf + m[..., None], i_l), axis=-1)  # (b,H)
+        fw = jnp.exp(lf + m[..., None] - m_new[..., None])
+        iw = jnp.exp(i_l - m_new[..., None])
+        c_new = fw * c + iw * z_t
+        n_new = fw * n + iw
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new.astype(hprev.dtype)), h_new
+
+    if state is None:
+        c0 = jnp.zeros((bsz, H, dh), jnp.float32)
+        m0 = jnp.full((bsz, H), -1e30, jnp.float32)
+        h0i = jnp.zeros((bsz, H, dh), jnp.dtype(cfg.dtype))
+        (_, _, _, _), hs = jax.lax.scan(
+            step, (c0, c0, m0, h0i), wx.swapaxes(0, 1))
+        hseq = hs.swapaxes(0, 1).reshape(bsz, T, d).astype(x.dtype)
+        new_state = None
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+        carry, hs = step(carry, wx[:, 0])
+        hseq = hs[:, None].reshape(bsz, 1, d).astype(x.dtype)
+        new_state = {"c": carry[0], "n": carry[1], "m": carry[2],
+                     "h": carry[3], "conv": new_conv}
+    hseq = L.rms_norm(hseq, p["out_norm"], cfg.norm_eps)
+    x = x + hseq
+    hf = L.rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["ffn"], hf)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+class XLSTMModel:
+    """48 blocks = segments of [slstm_every-1 mLSTM + 1 sLSTM]."""
+
+    def __init__(self, cfg: ModelConfig, sharder: Optional[Sharder] = None):
+        self.cfg = cfg
+        self.sharder = sharder or Sharder()
+        k = cfg.slstm_every or cfg.num_layers
+        assert cfg.num_layers % k == 0
+        self.n_segments = cfg.num_layers // k
+        self.mlstm_per_seg = k - 1
+        self.has_slstm = cfg.slstm_every > 0
+
+    # -- params ---------------------------------------------------------
+    def init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        params, axes = {}, {}
+        emb_p, emb_a = L.embed_init(ks[0], cfg)
+        params["embed"], axes["embed"] = emb_p, emb_a
+        n_m = self.n_segments * self.mlstm_per_seg
+        mp, ma = L.stack_init(lambda r: mlstm_block_init(r, cfg), ks[1], n_m)
+        # reshape stacked (n_m, ...) -> (segments, per_seg, ...)
+        mp = jax.tree.map(lambda x: x.reshape(
+            (self.n_segments, self.mlstm_per_seg) + x.shape[1:]), mp)
+        ma = jax.tree.map(lambda a: ("layers",) + tuple(a), ma,
+                          is_leaf=L._is_axes_tuple)
+        params["mlstm"], axes["mlstm"] = mp, ma
+        if self.has_slstm:
+            sp, sa = L.stack_init(lambda r: slstm_block_init(r, cfg), ks[2],
+                                  self.n_segments)
+            params["slstm"], axes["slstm"] = sp, sa
+        return params, axes
+
+    def param_axes(self):
+        return L.abstract_init(self.init)[1]
+
+    # -- forward --------------------------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"], cfg,
+                           jnp.dtype(cfg.dtype))
+        x = self.sharder(x, ("batch", "seq", None))
+
+        def seg_body(x, xs):
+            def m_body(x, mp):
+                x, _ = mlstm_block_apply(mp, x, cfg)
+                return x, None
+            if self.has_slstm:
+                mp, sp = xs
+            else:
+                (mp,) = xs
+            x, _ = jax.lax.scan(m_body, x, mp)
+            if self.has_slstm:
+                x, _ = slstm_block_apply(sp, x, cfg)
+            return x, None
+
+        body = seg_body if cfg.remat == "none" else jax.checkpoint(seg_body)
+        xs = (params["mlstm"], params["slstm"]) if self.has_slstm \
+            else (params["mlstm"],)
+        x, _ = jax.lax.scan(body, x, xs)
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return self.sharder(logits, ("batch", "seq", "vocab")), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        ce = L.cross_entropy(logits, batch["targets"])
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    # -- decode ---------------------------------------------------------
+    def cache_spec(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        di = cfg.ssm_expand * cfg.d_model
+        H = cfg.num_heads
+        dh = di // H
+        dhs = cfg.d_model // H
+        f32 = jnp.float32
+        dt = jnp.dtype(cfg.dtype)
+        S, M = self.n_segments, self.mlstm_per_seg
+        spec = {
+            "mlstm": {
+                "C": jax.ShapeDtypeStruct((S, M, batch_size, H, dh, dh), f32),
+                "n": jax.ShapeDtypeStruct((S, M, batch_size, H, dh), f32),
+                "m": jax.ShapeDtypeStruct((S, M, batch_size, H), f32),
+                "conv": jax.ShapeDtypeStruct((S, M, batch_size, 3, di), dt),
+            }}
+        ax = {
+            "mlstm": {
+                "C": ("layers", "layers", "batch", None, "ssm_inner", None),
+                "n": ("layers", "layers", "batch", None, "ssm_inner"),
+                "m": ("layers", "layers", "batch", None),
+                "conv": ("layers", "layers", "batch", None, "ssm_inner"),
+            }}
+        if self.has_slstm:
+            spec["slstm"] = {
+                "c": jax.ShapeDtypeStruct((S, batch_size, H, dhs), f32),
+                "n": jax.ShapeDtypeStruct((S, batch_size, H, dhs), f32),
+                "m": jax.ShapeDtypeStruct((S, batch_size, H), f32),
+                "h": jax.ShapeDtypeStruct((S, batch_size, H, dhs), dt),
+                "conv": jax.ShapeDtypeStruct((S, batch_size, 3, cfg.d_model), dt),
+            }
+            ax["slstm"] = {
+                "c": ("layers", "batch", None, None),
+                "n": ("layers", "batch", None, None),
+                "m": ("layers", "batch", None),
+                "h": ("layers", "batch", None, None),
+                "conv": ("layers", "batch", None, "embed"),
+            }
+        return spec, ax
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        spec, _ = self.cache_spec(batch_size, max_seq)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        cache["mlstm"]["m"] = jnp.full_like(cache["mlstm"]["m"], -1e30)
+        if self.has_slstm:
+            cache["slstm"]["m"] = jnp.full_like(cache["slstm"]["m"], -1e30)
+        return cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"], cfg,
+                           jnp.dtype(cfg.dtype))
+
+        def seg_body(x, xs):
+            if self.has_slstm:
+                mp, mc, sp, sc = xs
+            else:
+                mp, mc = xs
+
+            def m_body(x, inner):
+                lp, lc = inner
+                x, new = mlstm_block_apply(lp, x, cfg, state=lc)
+                return x, new
+
+            x, new_mc = jax.lax.scan(m_body, x, (mp, mc))
+            if self.has_slstm:
+                x, new_sc = slstm_block_apply(sp, x, cfg, state=sc)
+                return x, (new_mc, new_sc)
+            return x, (new_mc,)
+
+        if self.has_slstm:
+            xs = (params["mlstm"], cache["mlstm"], params["slstm"],
+                  cache["slstm"])
+        else:
+            xs = (params["mlstm"], cache["mlstm"])
+        x, news = jax.lax.scan(seg_body, x, xs)
+        new_cache = {"mlstm": news[0]}
+        if self.has_slstm:
+            new_cache["slstm"] = news[1]
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return logits, new_cache
+
+    # -- specs ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        i32 = jnp.int32
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            axes = {"tokens": ("batch", "seq")}
+            if shape.kind == "train":
+                specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+                axes["targets"] = ("batch", "seq")
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                     "pos": jax.ShapeDtypeStruct((), i32)}
+            axes = {"tokens": ("batch", None), "pos": None}
+        return specs, axes

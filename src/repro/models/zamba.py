@@ -1,0 +1,394 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + a shared attention block
+applied every ``attn_every`` mamba blocks with per-application LoRA
+(arXiv:2411.15242).
+
+Training uses the chunked SSD scan (sub-quadratic); decode keeps O(1) SSM
+state per block plus a KV cache only for the handful of shared-attention
+applications — which is why this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.xlstm import causal_conv
+from repro.sharding.rules import Sharder
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD scan (Mamba2).
+
+    x: (b,T,H,dh); dt: (b,T,H) (post-softplus); A: (H,) negative;
+    B,C: (b,T,N); D: (H,). Returns y: (b,T,H,dh).
+    """
+    b, T, H, dh = x.shape
+    N = B.shape[-1]
+    c = min(chunk, T)
+    if T % c:
+        c = T
+    n_chunks = T // c
+
+    def to_chunks(z):
+        return z.reshape(b, n_chunks, c, *z.shape[2:]).swapaxes(0, 1)
+
+    xc = to_chunks(x)
+    dtc = to_chunks(dt.astype(jnp.float32))
+    Bc = to_chunks(B.astype(jnp.float32))
+    Cc = to_chunks(C.astype(jnp.float32))
+    a = dtc * A.astype(jnp.float32)  # (n,b,c,H) decay log-coefficients (<=0)
+
+    def chunk_step(S, xs):
+        xk, dtk, Bk, Ck, ak = xs
+        cum = jnp.cumsum(ak, axis=1)  # (b,c,H) inclusive
+        total = cum[:, -1]  # (b,H)
+        # intra-chunk: L_ij = exp(cum_i - cum_j) for j<=i
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (b,i,j,H)
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None]
+        Lm = jnp.where(mask, jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Ck, Bk)  # (b,i,j)
+        W = CB[..., None] * Lm * dtk[:, None, :, :]  # (b,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", W, xk.astype(jnp.float32))
+        # inter-chunk: y_i += C_i . S * exp(cum_i)
+        y_inter = jnp.einsum("bin,bhnd->bihd", Ck, S) * jnp.exp(cum)[..., None]
+        # state update: S' = exp(total) S + sum_j exp(total - cum_j) dt_j B_j x_j
+        wj = jnp.exp(total[:, None, :] - cum) * dtk  # (b,c,H)
+        S_new = S * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhd->bhnd", Bk, wj, xk.astype(jnp.float32))
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((b, H, N, dh), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, S0, (xc, dtc, Bc, Cc, a))
+    y = ys.swapaxes(0, 1).reshape(b, T, H, dh)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_step(S, x, dt, A, B, C, D):
+    """Recurrent SSD step. S: (b,H,N,dh); x: (b,H,dh); dt: (b,H);
+    B,C: (b,N). Returns (S', y)."""
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))  # (b,H)
+    xf = x.astype(jnp.float32)
+    S = S * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhd->bhnd", B.astype(jnp.float32), dtf, xf)
+    y = jnp.einsum("bn,bhnd->bhd", C.astype(jnp.float32), S)
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return S, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_block_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    b = L.Builder()
+    b.add("ln", L.zeros_init((d,), ("norm",), dt))
+    # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+    b.add("w_in", L.dense_init(ks[0], (d, 2 * di + 2 * N + H),
+                               ("embed", "ssm_inner"), dt))
+    b.add("conv", L.dense_init(ks[1], (4, di + 2 * N), (None, "ssm_inner"), dt))
+    b.add("A_log", (jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+                    ("norm",)))
+    b.add("D", L.ones_init((H,), ("norm",), jnp.float32))
+    b.add("dt_bias", (jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(
+        jnp.float32), ("norm",)))
+    b.add("out_norm", L.zeros_init((di,), ("norm",), dt))
+    b.add("w_out", L.dense_init(ks[2], (di, d), ("ssm_inner", "embed"), dt))
+    return b.build()
+
+
+def mamba_block_apply(p, x, cfg: ModelConfig, state=None):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    dh = cfg.ssm_head_dim
+    bsz, T, _ = x.shape
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("btd,df->btf", h, p["w_in"].astype(h.dtype))
+    z, xin, Bv, Cv, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bv, Cv = jnp.split(conv_out, [di, di + N], axis=-1)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(bsz, T, H, dh)
+    if state is None:
+        y = ssd_chunked(xh, dtv, A, Bv, Cv, p["D"], cfg.ssm_chunk)
+        new_state = None
+    else:
+        S, y1 = ssd_step(state["S"], xh[:, 0], dtv[:, 0], A, Bv[:, 0],
+                         Cv[:, 0], p["D"])
+        y = y1[:, None]
+        new_state = {"S": S, "conv": new_conv}
+    y = y.reshape(bsz, T, di)
+    y = L.rms_norm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("btf,fd->btd", y, p["w_out"].astype(y.dtype))
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# shared attention block (Zamba2): input = concat(x, x0) -> d
+# ---------------------------------------------------------------------------
+
+def shared_attn_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 4)
+    b = L.Builder()
+    b.add("ln", L.zeros_init((2 * d,), ("norm",), dt))
+    b.add("w_in", L.dense_init(ks[0], (2 * d, d), ("embed", None), dt))
+    b.sub("attn", L.attn_init(ks[1], cfg,
+                              lora_rank=cfg.shared_attn_lora_rank))
+    b.add("ln2", L.zeros_init((d,), ("norm",), dt))
+    b.sub("mlp", L.mlp_init(ks[2], cfg, d_ff=cfg.d_ff))
+    return b.build()
+
+
+def shared_lora_init(rng, cfg: ModelConfig):
+    """Per-application LoRA deltas for the shared block's qkv."""
+    if not cfg.shared_attn_lora_rank:
+        return {}, {}
+    d, r = cfg.d_model, cfg.shared_attn_lora_rank
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    b = L.Builder()
+    for i, (nm, out) in enumerate((("wq", hq * hd), ("wk", hkv * hd),
+                                   ("wv", hkv * hd))):
+        b.add(f"{nm}_a", L.dense_init(ks[2 * i], (d, r), ("embed", None), dt))
+        b.add(f"{nm}_b", L.zeros_init((r, out), (None, "heads"), dt))
+    return b.build()
+
+
+def _lora_adjusted(attn_p, lora_p):
+    """Merge per-application lora into attention weights view."""
+    if not lora_p:
+        return attn_p
+    p = dict(attn_p)
+    for nm in ("wq", "wk", "wv"):
+        p[nm] = attn_p[nm] + (lora_p[f"{nm}_a"] @ lora_p[f"{nm}_b"]).astype(
+            attn_p[nm].dtype)
+    return p
+
+
+def shared_attn_apply(p, lora_p, x, x0, cfg: ModelConfig, *, positions):
+    h = L.rms_norm(jnp.concatenate([x, x0], axis=-1), p["ln"], cfg.norm_eps)
+    h = jnp.einsum("btf,fd->btd", h, p["w_in"].astype(h.dtype))
+    ap = _lora_adjusted(p["attn"], lora_p)
+    a = L.attn_apply(ap, h, cfg, positions=positions,
+                     block_causal=cfg.block_causal)
+    x = x + a
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h2)
+
+
+def shared_attn_decode(p, lora_p, x, x0, kv_cache, cfg: ModelConfig, *, pos):
+    h = L.rms_norm(jnp.concatenate([x, x0], axis=-1), p["ln"], cfg.norm_eps)
+    h = jnp.einsum("btf,fd->btd", h, p["w_in"].astype(h.dtype))
+    ap = _lora_adjusted(p["attn"], lora_p)
+    o, new_kv = L.attn_decode(ap, h, kv_cache, cfg, pos=pos)
+    x = x + o
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h2), new_kv
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+class ZambaModel:
+    """``n_apps`` groups of [shared-attn + attn_every mamba] + trailing
+    mamba blocks; one set of shared attention weights + per-app LoRA."""
+
+    def __init__(self, cfg: ModelConfig, sharder: Optional[Sharder] = None):
+        self.cfg = cfg
+        self.sharder = sharder or Sharder()
+        k = cfg.attn_every
+        self.n_apps = cfg.num_layers // k
+        self.per_group = k
+        self.trailing = cfg.num_layers - self.n_apps * k
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 6)
+        params, axes = {}, {}
+        emb_p, emb_a = L.embed_init(ks[0], cfg)
+        params["embed"], axes["embed"] = emb_p, emb_a
+        n_m = self.n_apps * self.per_group
+        mp, ma = L.stack_init(lambda r: mamba_block_init(r, cfg), ks[1], n_m)
+        mp = jax.tree.map(lambda x: x.reshape(
+            (self.n_apps, self.per_group) + x.shape[1:]), mp)
+        ma = jax.tree.map(lambda a: ("layers",) + tuple(a), ma,
+                          is_leaf=L._is_axes_tuple)
+        params["mamba"], axes["mamba"] = mp, ma
+        sp, sa = shared_attn_init(ks[2], cfg)
+        params["shared"], axes["shared"] = sp, sa
+        lp, la = L.stack_init(lambda r: shared_lora_init(r, cfg), ks[3],
+                              self.n_apps)
+        params["lora"], axes["lora"] = lp, la
+        if self.trailing:
+            tp, ta = L.stack_init(lambda r: mamba_block_init(r, cfg), ks[4],
+                                  self.trailing)
+            params["tail"], axes["tail"] = tp, ta
+        return params, axes
+
+    def param_axes(self):
+        return L.abstract_init(self.init)[1]
+
+    # -- forward --------------------------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"], cfg,
+                           jnp.dtype(cfg.dtype))
+        x = self.sharder(x, ("batch", "seq", None))
+        x0 = x
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        shared = params["shared"]
+
+        def group_body(x, xs):
+            mp, lp = xs
+            x = shared_attn_apply(shared, lp, x, x0, cfg, positions=positions)
+
+            def m_body(x, layer_p):
+                x, _ = mamba_block_apply(layer_p, x, cfg)
+                return x, None
+
+            x, _ = jax.lax.scan(m_body, x, mp)
+            return x, None
+
+        body = group_body if cfg.remat == "none" else jax.checkpoint(group_body)
+        x, _ = jax.lax.scan(body, x, (params["mamba"], params["lora"]))
+        if self.trailing:
+            def t_body(x, layer_p):
+                x, _ = mamba_block_apply(layer_p, x, cfg)
+                return x, None
+            t_body = t_body if cfg.remat == "none" else jax.checkpoint(t_body)
+            x, _ = jax.lax.scan(t_body, x, params["tail"])
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return self.sharder(logits, ("batch", "seq", "vocab")), \
+            jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        ce = L.cross_entropy(logits, batch["targets"])
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    # -- decode ---------------------------------------------------------
+    def cache_spec(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        di = cfg.ssm_expand * cfg.d_model
+        N = cfg.ssm_state
+        H = di // cfg.ssm_head_dim
+        dh = cfg.ssm_head_dim
+        f32, dtc = jnp.float32, jnp.dtype(cfg.dtype)
+        A, G = self.n_apps, self.per_group
+        spec = {
+            "mamba": {
+                "S": jax.ShapeDtypeStruct((A, G, batch_size, H, N, dh), f32),
+                "conv": jax.ShapeDtypeStruct((A, G, batch_size, 3, di + 2 * N), dtc),
+            },
+            "attn_kv": {
+                "k": jax.ShapeDtypeStruct(
+                    (A, batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtc),
+                "v": jax.ShapeDtypeStruct(
+                    (A, batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtc),
+            },
+        }
+        ax = {
+            "mamba": {
+                "S": ("layers", "layers", "batch", "ssm_inner", None, None),
+                "conv": ("layers", "layers", "batch", None, "ssm_inner"),
+            },
+            "attn_kv": {
+                "k": ("layers", "batch", "seq_kv", None, None),
+                "v": ("layers", "batch", "seq_kv", None, None),
+            },
+        }
+        if self.trailing:
+            spec["tail"] = {
+                "S": jax.ShapeDtypeStruct((self.trailing, batch_size, H, N, dh), f32),
+                "conv": jax.ShapeDtypeStruct(
+                    (self.trailing, batch_size, 3, di + 2 * N), dtc),
+            }
+            ax["tail"] = {
+                "S": ("layers", "batch", "ssm_inner", None, None),
+                "conv": ("layers", "batch", None, "ssm_inner"),
+            }
+        return spec, ax
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        spec, _ = self.cache_spec(batch_size, max_seq)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        pos = batch["pos"]
+        x = L.embed_lookup(params["embed"], batch["tokens"], cfg,
+                           jnp.dtype(cfg.dtype))
+        x0 = x
+        shared = params["shared"]
+
+        def group_body(x, xs):
+            mp, lp, mc, kvc = xs
+            x, new_kv = shared_attn_decode(shared, lp, x, x0, kvc, cfg,
+                                           pos=pos)
+
+            def m_body(x, inner):
+                layer_p, layer_c = inner
+                x, new = mamba_block_apply(layer_p, x, cfg, state=layer_c)
+                return x, new
+
+            x, new_mc = jax.lax.scan(m_body, x, (mp, mc))
+            return x, (new_mc, new_kv)
+
+        x, (new_mamba, new_kv) = jax.lax.scan(
+            group_body, x,
+            (params["mamba"], params["lora"], cache["mamba"],
+             cache["attn_kv"]))
+        new_cache = {"mamba": new_mamba, "attn_kv": new_kv}
+        if self.trailing:
+            def t_body(x, inner):
+                layer_p, layer_c = inner
+                x, new = mamba_block_apply(layer_p, x, cfg, state=layer_c)
+                return x, new
+            x, new_tail = jax.lax.scan(t_body, x,
+                                       (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return logits, new_cache
+
+    # -- specs ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        i32 = jnp.int32
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            axes = {"tokens": ("batch", "seq")}
+            if shape.kind == "train":
+                specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+                axes["targets"] = ("batch", "seq")
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                     "pos": jax.ShapeDtypeStruct((), i32)}
+            axes = {"tokens": ("batch", None), "pos": None}
+        return specs, axes

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (OptState, adamw_init, adamw_update,
+                                    clip_by_global_norm, make_optimizer,
+                                    sgd_init, sgd_update)
+from repro.optim.schedules import cosine_warmup
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "sgd_init",
+           "sgd_update", "make_optimizer", "clip_by_global_norm",
+           "cosine_warmup"]

@@ -1,0 +1,107 @@
+"""Pytree optimizers (no optax dependency). Moments can be kept in bf16 to
+halve optimizer-state HBM (used by the 400B config); states shard exactly
+like their parameters (FSDP), so the axes tree reuses the param axes tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    count: jax.Array
+    m: dict
+    v: dict  # empty dict for sgd
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads, jnp.asarray(0.0)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: TrainConfig) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return OptState(count=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: OptState, params, lr, cfg: TrainConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return (new_p.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(count=count, m=new_m, v=new_v), gnorm
+
+
+# ---------------------------------------------------------------------------
+# SGD (FL clients commonly run plain local SGD)
+# ---------------------------------------------------------------------------
+
+def sgd_init(params, cfg: TrainConfig) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    return OptState(count=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+                    v={})
+
+
+def sgd_update(grads, state: OptState, params, lr, cfg: TrainConfig,
+               momentum: float = 0.9):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(p, g, m):
+        g32 = g.astype(jnp.float32)
+        m32 = momentum * m.astype(jnp.float32) + g32
+        new_p = p.astype(jnp.float32) - lr * m32
+        return new_p.astype(p.dtype), m32.astype(m.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(count=state.count + 1, m=new_m, v={}), gnorm
+
+
+def make_optimizer(cfg: TrainConfig):
+    if cfg.optimizer == "adamw":
+        return adamw_init, adamw_update
+    if cfg.optimizer == "sgd":
+        return sgd_init, lambda g, s, p, lr, c: sgd_update(g, s, p, lr, c)
+    raise ValueError(cfg.optimizer)
+
+
+def opt_state_axes(param_axes, cfg: TrainConfig):
+    """Logical axes tree for OptState (moments shard like params)."""
+    if cfg.optimizer == "adamw":
+        return OptState(count=None, m=param_axes, v=param_axes)
+    return OptState(count=None, m=param_axes, v={})

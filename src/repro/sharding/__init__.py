@@ -1,0 +1,3 @@
+from repro.sharding.rules import MeshPlan, Sharder, batch_spec, bytes_of, constrain
+
+__all__ = ["MeshPlan", "Sharder", "batch_spec", "bytes_of", "constrain"]

@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation pytree in the framework carries a parallel
+"axes" pytree of tuples of *logical* axis names (e.g. ``("layers", "embed",
+"heads")``).  A :class:`MeshPlan` resolves each logical axis to zero or more
+physical mesh axes, yielding a ``PartitionSpec`` per leaf.  The same model
+code therefore runs unsharded on one CPU device and fully sharded on the
+512-chip multi-pod mesh purely by swapping the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary
+# ---------------------------------------------------------------------------
+# layers      scan-stacked layer dim                      -> never sharded
+# vocab       embedding-table / lm-head vocab dim         -> tensor axes
+# embed       model (residual) dim                        -> fsdp axes
+# heads       flattened q-heads*head_dim projection dim   -> tensor axes
+# kv_heads    flattened kv-heads*head_dim projection dim  -> tensor axes
+# mlp         FFN hidden dim                              -> tensor axes
+# expert      MoE expert dim                              -> tensor axes (EP)
+# expert_in   per-expert input dim (embed inside experts) -> fsdp axes
+# batch       global batch                                -> batch axes (pod+data)
+# seq         sequence (activations)                      -> unsharded (SP opt-in)
+# seq_kv      KV-cache sequence dim                       -> tensor axes (flash-decode SP)
+# ssm_inner   mamba/mlstm inner dim                       -> tensor axes
+# ssm_state   SSM state dim                               -> unsharded
+# norm,const  tiny vectors                                -> unsharded
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Resolution of logical axes onto a physical mesh."""
+
+    mesh_cfg: MeshConfig
+    extra_rules: tuple = ()  # ((logical, (phys, ...)), ...) overrides
+
+    def rules(self) -> dict:
+        m = self.mesh_cfg
+        fsdp = tuple(a for a in m.fsdp_axes if a in m.axis_names)
+        tensor = tuple(a for a in m.tensor_axes if a in m.axis_names)
+        batch = tuple(a for a in m.batch_axes if a in m.axis_names)
+        base = {
+            "layers": (),
+            "vocab": tensor,
+            "embed": fsdp,
+            "heads": tensor,
+            "kv_heads": tensor,
+            "mlp": tensor,
+            "expert": tensor,
+            "expert_in": fsdp,
+            "batch": batch,
+            "seq": (),
+            "seq_kv": tensor,
+            "ssm_inner": tensor,
+            "ssm_state": (),
+            "norm": (),
+            "const": (),
+            None: (),
+        }
+        base.update(dict(self.extra_rules))
+        return base
+
+    # ------------------------------------------------------------------
+    def spec(self, axes: Optional[tuple], shape: Optional[tuple] = None) -> P:
+        """PartitionSpec for one leaf. If ``shape`` given, drop non-divisible shardings."""
+        if axes is None:
+            return P()
+        rules = self.rules()
+        used: set = set()
+        dims = []
+        for i, a in enumerate(axes):
+            phys = tuple(p for p in rules.get(a, ()) if p not in used)
+            if shape is not None and phys:
+                total = math.prod(self.mesh_cfg.axis_size(p) for p in phys)
+                if shape[i] % total != 0:
+                    # try a divisible prefix (e.g. batch=128 on pod*data=32 ok,
+                    # batch=1 -> unsharded)
+                    keep = []
+                    run = 1
+                    for p in phys:
+                        if shape[i] % (run * self.mesh_cfg.axis_size(p)) == 0:
+                            keep.append(p)
+                            run *= self.mesh_cfg.axis_size(p)
+                        else:
+                            break
+                    phys = tuple(keep)
+            used.update(phys)
+            if len(phys) == 0:
+                dims.append(None)
+            elif len(phys) == 1:
+                dims.append(phys[0])
+            else:
+                dims.append(phys)
+        while dims and dims[-1] is None:
+            dims.pop()
+        return P(*dims)
+
+    def tree_specs(self, axes_tree, shape_tree=None):
+        if shape_tree is None:
+            return jax.tree.map(
+                lambda ax: self.spec(ax), axes_tree,
+                is_leaf=lambda x: x is None or (isinstance(x, tuple) and _is_axes(x)))
+        return jax.tree.map(
+            lambda ax, sd: self.spec(ax, tuple(sd.shape)), axes_tree, shape_tree,
+            is_leaf=lambda x: x is None or (isinstance(x, tuple) and _is_axes(x)))
+
+    def tree_shardings(self, mesh: Mesh, axes_tree, shape_tree=None):
+        specs = self.tree_specs(axes_tree, shape_tree)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def _is_axes(x) -> bool:
+    """A leaf in an axes-tree is a tuple of str/None (or None)."""
+    return all(isinstance(e, str) or e is None for e in x)
+
+
+# ---------------------------------------------------------------------------
+# Helpers used across launch / tests
+# ---------------------------------------------------------------------------
+
+def constrain(tree, plan: MeshPlan, axes_tree):
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    specs = plan.tree_specs(axes_tree)
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree, specs)
+
+
+def batch_spec(plan: MeshPlan, global_batch: int, extra_dims: int = 1) -> P:
+    """PartitionSpec for a (batch, ...) input with divisibility fallback."""
+    return plan.spec(("batch",) + (None,) * extra_dims,
+                     (global_batch,) + (1,) * extra_dims)
+
+
+def bytes_of(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+class Sharder:
+    """Callable applying logical-axis sharding constraints inside jit.
+
+    ``Sharder(None)`` (default in models) is the identity — the same model
+    code runs unsharded on CPU and sharded on the production mesh.
+    """
+
+    def __init__(self, plan: Optional[MeshPlan] = None, mesh: Optional[Mesh] = None):
+        self.plan = plan
+        self.mesh = mesh
+
+    def __call__(self, x, axes):
+        if self.plan is None or self.mesh is None:
+            return x
+        spec = self.plan.spec(tuple(axes), tuple(x.shape))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))

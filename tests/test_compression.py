@@ -1,0 +1,85 @@
+"""QSGD / top-k compression with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression import (QuantState, qsgd_compress, qsgd_decompress,
+                               qsgd_init, topk_compress, topk_decompress)
+from repro.compression.qsgd import packed_nbytes
+
+
+def _tree(rng, n=300):
+    return {"w": jnp.asarray(rng.normal(size=(n,)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(17,)).astype(np.float32))}
+
+
+def test_qsgd_roundtrip_error_small(rng):
+    tree = _tree(rng)
+    packed, _, unflatten = qsgd_compress(tree)
+    rec = qsgd_decompress(packed, unflatten)
+    for k in tree:
+        err = np.max(np.abs(np.asarray(rec[k] - tree[k])))
+        assert err < 0.05 * float(jnp.max(jnp.abs(tree[k])))
+
+
+def test_qsgd_wire_reduction(rng):
+    tree = _tree(rng, n=65536)  # large enough to amortise tile padding
+    packed, _, _ = qsgd_compress(tree, block=256)
+    raw = sum(np.asarray(v).nbytes for v in jax.tree.leaves(tree))
+    assert packed_nbytes(packed) < 0.30 * raw  # ~4x reduction
+
+
+def test_qsgd_error_feedback_reduces_bias(rng):
+    """With error feedback, the *accumulated* compressed stream converges
+    to the accumulated true stream (compression is asymptotically unbiased)."""
+    state = qsgd_init(_tree(rng))
+    true_sum = None
+    sent_sum = None
+    for i in range(20):
+        tree = _tree(np.random.default_rng(i))
+        packed, state, unflatten = qsgd_compress(tree, state)
+        rec = qsgd_decompress(packed, unflatten)
+        true_sum = rec if true_sum is None else true_sum
+        if i == 0:
+            true_acc = jax.tree.map(lambda x: x, tree)
+            sent_acc = jax.tree.map(lambda x: x, rec)
+        else:
+            true_acc = jax.tree.map(jnp.add, true_acc, tree)
+            sent_acc = jax.tree.map(jnp.add, sent_acc, rec)
+    resid = np.max(np.abs(np.asarray(sent_acc["w"] - true_acc["w"])))
+    # residual stays bounded by one quantisation step (does not accumulate)
+    assert resid < 0.1
+
+
+@given(frac=st.floats(0.01, 0.5))
+@settings(max_examples=10, deadline=None)
+def test_topk_keeps_largest(frac):
+    rng = np.random.default_rng(1)
+    tree = {"w": jnp.asarray(rng.normal(size=(256,)).astype(np.float32))}
+    payload, _, unflatten = topk_compress(tree, frac)
+    rec = topk_decompress(payload, unflatten)
+    w, r = np.asarray(tree["w"]), np.asarray(rec["w"])
+    kept = np.nonzero(r)[0]
+    assert len(kept) <= max(1, int(0.5 + 273 * frac)) + 1
+    if len(kept):
+        thresh = np.min(np.abs(w[kept]))
+        dropped = np.setdiff1d(np.arange(256), kept)
+        assert np.all(np.abs(w[dropped]) <= thresh + 1e-6)
+
+
+def test_topk_error_feedback_eventually_sends_everything():
+    """One real update followed by zero updates: error feedback must drain
+    every component over subsequent rounds (nothing is lost forever)."""
+    first = {"w": jnp.asarray(np.array([10.0, 1.0, 0.1, 0.01], np.float32))}
+    zeros = {"w": jnp.zeros(4)}
+    state = QuantState(error=jnp.zeros(4))
+    total = jnp.zeros(4)
+    payload, state, unflatten = topk_compress(first, 0.25, state)
+    total = total + topk_decompress(payload, unflatten)["w"]
+    for _ in range(6):
+        payload, state, unflatten = topk_compress(zeros, 0.25, state)
+        total = total + topk_decompress(payload, unflatten)["w"]
+    np.testing.assert_allclose(np.asarray(total),
+                               np.asarray(first["w"]), rtol=1e-6)

@@ -1,0 +1,80 @@
+"""Network model invariants (hypothesis property tests + Table I checks)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.netsim import (BAHRAIN, GEO_REGIONS, HONGKONG, MB, NCAL,
+                               Host, Region, Transfer, geo_distributed_env,
+                               lan_env, make_env, simulate_transfers,
+                               transfer_time)
+
+
+def test_table1_values_loaded():
+    assert NCAL.bw_single == 592 * MB and NCAL.bw_multi == 2946 * MB
+    assert BAHRAIN.latency == pytest.approx(111e-3)
+    assert len(GEO_REGIONS) == 7
+
+
+def test_conn_cap_monotone_saturates():
+    caps = [BAHRAIN.conn_cap(n) for n in (1, 2, 16, 64, 1000)]
+    assert all(b >= a for a, b in zip(caps, caps[1:]))
+    assert caps[-1] == BAHRAIN.bw_multi  # saturates at multi-conn bw
+
+
+@given(nbytes=st.integers(1, 10 ** 10), conns=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_single_transfer_time_positive_and_bounded(nbytes, conns):
+    t = transfer_time(nbytes, HONGKONG, conns)
+    assert t >= HONGKONG.latency
+    # cannot beat the multi-connection cap
+    assert t >= HONGKONG.latency + nbytes / HONGKONG.bw_multi - 1e-9
+
+
+@given(n=st.integers(1, 8), nbytes=st.integers(10 ** 6, 10 ** 9))
+@settings(max_examples=30, deadline=None)
+def test_concurrent_never_faster_than_uncontended(n, nbytes):
+    env = geo_distributed_env()
+    server = env.server
+    dst = env.clients[6]  # bahrain
+    transfers = [Transfer(start=0.0, src=server, dst=dst, nbytes=nbytes,
+                          conns=1) for _ in range(n)]
+    simulate_transfers(transfers)
+    uncontended = transfer_time(nbytes, dst.region, 1)
+    for t in transfers:
+        assert t.finish >= uncontended - 1e-6
+    # conservation: aggregate throughput <= host uplink
+    total_bytes = n * nbytes
+    span = max(t.finish for t in transfers) - dst.region.latency
+    assert total_bytes / span <= server.uplink * 1.01
+
+
+def test_concurrent_beats_sequential_over_wan():
+    env = geo_distributed_env()
+    dst = env.clients[6]
+    n, nbytes = 8, 100 * MB
+    conc = [Transfer(start=0.0, src=env.server, dst=dst, nbytes=nbytes)
+            for _ in range(n)]
+    simulate_transfers(conc)
+    t_conc = max(t.finish for t in conc)
+    t_seq = n * transfer_time(nbytes, dst.region, 1)
+    # paper Fig 4b: concurrency mitigates WAN latency/bw underutilisation
+    assert t_conc < t_seq
+
+
+def test_fluid_staggered_starts():
+    env = geo_distributed_env()
+    dst = env.clients[1]
+    a = Transfer(start=0.0, src=env.server, dst=dst, nbytes=50 * MB)
+    b = Transfer(start=100.0, src=env.server, dst=dst, nbytes=50 * MB)
+    simulate_transfers([a, b])
+    assert a.finish < 100.0  # finished before b starts
+    assert b.finish == pytest.approx(100.0 + transfer_time(50 * MB, dst.region, 1),
+                                     rel=1e-3)
+
+
+def test_environments():
+    for name in ("lan", "geo_proximal", "geo_distributed"):
+        env = make_env(name)
+        assert len(env.clients) == 7
+    assert lan_env().trusted and not geo_distributed_env().trusted

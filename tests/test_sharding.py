@@ -1,0 +1,87 @@
+"""Sharding rules + hypothesis property tests on MeshPlan invariants."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (MULTI_POD_MESH, SINGLE_POD_MESH, SMOKE_MESH,
+                                MeshConfig)
+from repro.sharding.rules import MeshPlan
+
+LOGICAL = ["layers", "vocab", "embed", "heads", "kv_heads", "mlp", "expert",
+           "expert_in", "batch", "seq", "seq_kv", "ssm_inner", "norm", None]
+
+
+def test_basic_resolution():
+    plan = MeshPlan(SINGLE_POD_MESH)
+    assert plan.spec(("vocab", "embed")) == P("model", "data")
+    assert plan.spec(("embed", "heads")) == P("data", "model")
+    assert plan.spec(("norm",)) == P()
+    assert plan.spec(("layers", "embed", "mlp")) == P(None, "data", "model")
+
+
+def test_duplicate_axis_dropped():
+    plan = MeshPlan(SINGLE_POD_MESH)
+    # expert and mlp both map to 'model': second use must be dropped
+    spec = plan.spec(("expert", "expert_in", "mlp"))
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat += list(s) if isinstance(s, tuple) else [s]
+    assert len(flat) == len(set(flat))
+    assert spec[0] == "model"
+
+
+def test_divisibility_fallback():
+    plan = MeshPlan(MULTI_POD_MESH)
+    # batch=1 cannot shard over (pod, data): falls back to unsharded
+    assert plan.spec(("batch",), (1,)) == P()
+    # batch=128 over pod*data=32 works
+    assert plan.spec(("batch",), (128,)) == P(("pod", "data"))
+    # batch=16 shards over pod(2) then data(16) fails -> partial (pod only)
+    assert plan.spec(("batch",), (2,)) == P(("pod",))
+
+
+@given(axes=st.lists(st.sampled_from(LOGICAL), min_size=0, max_size=5),
+       mesh_cfg=st.sampled_from([SINGLE_POD_MESH, MULTI_POD_MESH, SMOKE_MESH]))
+@settings(max_examples=200, deadline=None)
+def test_no_mesh_axis_reused(axes, mesh_cfg):
+    """PartitionSpec invariant: each mesh axis appears at most once."""
+    plan = MeshPlan(mesh_cfg)
+    spec = plan.spec(tuple(axes))
+    flat = []
+    for s in spec:
+        if s is None:
+            continue
+        flat += list(s) if isinstance(s, tuple) else [s]
+    assert len(flat) == len(set(flat))
+    for a in flat:
+        assert a in mesh_cfg.axis_names
+
+
+@given(axes=st.lists(st.sampled_from(LOGICAL), min_size=1, max_size=4),
+       dims=st.lists(st.sampled_from([1, 2, 3, 16, 32, 256, 4096]),
+                     min_size=1, max_size=4))
+@settings(max_examples=200, deadline=None)
+def test_shape_aware_spec_always_divisible(axes, dims):
+    n = min(len(axes), len(dims))
+    axes, dims = tuple(axes[:n]), tuple(dims[:n])
+    plan = MeshPlan(MULTI_POD_MESH)
+    spec = plan.spec(axes, dims)
+    for dim, s in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        if s is None:
+            continue
+        parts = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for p in parts:
+            total *= MULTI_POD_MESH.axis_size(p)
+        assert dim % total == 0, (axes, dims, spec)
+
+
+def test_tree_specs_match_structure():
+    plan = MeshPlan(SINGLE_POD_MESH)
+    axes_tree = {"a": ("embed", "heads"), "b": {"c": ("norm",), "d": None}}
+    specs = plan.tree_specs(axes_tree)
+    assert specs["a"] == P("data", "model")
+    assert specs["b"]["c"] == P()
+    assert specs["b"]["d"] == P()
