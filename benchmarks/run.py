@@ -1,17 +1,31 @@
 """Benchmark harness entry: one module per paper table/figure + the
-beyond-paper cross-pod study. Prints a ``name,us_per_call,derived`` CSV
-after the human-readable sections."""
+beyond-paper cross-pod and fig6 async studies. Prints a
+``name,us_per_call,derived`` CSV after the human-readable sections.
+
+``--quick`` (the CI smoke) skips the JAX-heavy kernel/cross-pod modules
+and runs fig6 in its reduced grid; ``--only NAME [NAME...]`` selects
+specific modules.
+"""
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="netsim-only subset with reduced grids (CI smoke)")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run only these modules by name")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bench_kernels, crosspod_sync,
                             fig2_grpc_concurrency, fig4a_p2p_latency,
                             fig4b_concurrency_speedup, fig4c_broadcast_memory,
-                            fig5_end_to_end, table1_links)
+                            fig5_end_to_end, fig6_async_vs_sync, table1_links)
 
     modules = [
         ("table1", table1_links),
@@ -20,14 +34,28 @@ def main() -> None:
         ("fig4b", fig4b_concurrency_speedup),
         ("fig4c", fig4c_broadcast_memory),
         ("fig5", fig5_end_to_end),
+        ("fig6", fig6_async_vs_sync),
         ("kernels", bench_kernels),
         ("crosspod", crosspod_sync),
     ]
+    if args.quick:
+        modules = [(n, m) for n, m in modules
+                   if n not in ("kernels", "crosspod")]
+    if args.only:
+        known = {n for n, _ in modules}
+        unknown = [n for n in args.only if n not in known]
+        if unknown:
+            ap.error(f"unknown module(s) {unknown}; choose from "
+                     f"{sorted(known)}")
+        modules = [(n, m) for n, m in modules if n in args.only]
     all_rows = []
     failures = 0
     for name, mod in modules:
+        kw = {}
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kw["quick"] = True
         try:
-            all_rows += mod.run(verbose=True)
+            all_rows += mod.run(verbose=True, **kw)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"[bench] {name} FAILED:\n{traceback.format_exc()}",

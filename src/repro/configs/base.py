@@ -194,3 +194,10 @@ class FLConfig:
     round_deadline_s: float = 0.0  # 0 = no deadline (wait for quorum only)
     server_lr: float = 1.0
     seed: int = 0
+
+    # event-driven runtime (fl/scheduler.py; mode != "sync" selects a
+    # strategy from fl/async_strategies.py)
+    mode: str = "sync"  # sync | fedbuff | semisync | hier
+    buffer_k: int = 0  # fedbuff merge buffer; 0 -> max(2, num_clients // 2)
+    staleness_exponent: float = 0.5  # alpha in the (1+s)^-alpha discount
+    max_staleness: int = 0  # discard updates staler than this; 0 = keep all

@@ -39,6 +39,16 @@ class Tier:
     def train_s_per_round(self) -> float:  # back-compat: cloud value
         return self.train_s_cloud
 
+    def async_knobs(self, environment: str, num_clients: int = 7) -> dict:
+        """Recommended event-driven runtime knobs for this tier: merge
+        buffer of half the fleet (FedBuff's sweet spot at cross-silo
+        scale), a semi-sync deadline of ~2.5x the calibrated local epoch
+        (covers compute jitter without stalling on stragglers), and the
+        standard polynomial staleness discount."""
+        return {"buffer_k": max(2, num_clients // 2),
+                "round_deadline_s": 2.5 * self.train_s(environment),
+                "staleness_exponent": 0.5}
+
 
 SMALL = Tier("small", "resnet56", 591_322, int(2.39 * MB), "gld23k",
              20.0, 2.5)

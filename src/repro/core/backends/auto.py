@@ -51,6 +51,9 @@ class AutoBackend:
         self.decisions.append((msg.msg_type, nbytes, choice.name))
         return choice
 
+    def isend(self, msg, now):
+        return self._route(msg).isend(msg, now)
+
     def send(self, msg, now):
         return self._route(msg).send(msg, now)
 
@@ -67,6 +70,9 @@ class AutoBackend:
         if self.s3 is not None:
             return self.s3.recv(now)
         return self.grpc.recv(now)
+
+    def next_arrival(self, after: float = float("-inf")):
+        return self.grpc.next_arrival(after)  # shared endpoint
 
     def p2p_time(self, nbytes, dst_id):
         if nbytes < SMALL_PAYLOAD or self.s3 is None:

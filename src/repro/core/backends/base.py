@@ -2,11 +2,21 @@
 
 Each backend implements the same API over the shared fabric + netsim:
 
+* ``isend(msg, now)``         -> SendHandle (non-blocking completion path)
 * ``send(msg, now)``          -> (sender_free_t, arrive_t)
 * ``broadcast(msgs, now)``    -> (sender_free_t, [arrive_t])   (concurrent)
 * ``sequential_broadcast``    -> same but one send at a time (Fig 4b baseline)
 * ``recv(now)``               -> [(FLMessage with payload, ready_t)]
+* ``next_arrival(after)``     -> earliest pending delivery time (peek)
 * ``p2p_time(nbytes)``        -> analytic single-message latency (Fig 4a)
+
+``isend`` is the shared completion path: ``send`` and
+``sequential_broadcast`` are thin blocking-semantics wrappers over it, and
+the event-driven FL scheduler (fl/scheduler.py) issues bare handles so it
+can interleave many in-flight sends. Backends whose serializer cannot run
+sends in parallel (``ser_parallel=False``) queue overlapping isends on a
+sender-side serializer busy-line; non-overlapping calls — the only pattern
+the blocking API ever produced — are bit-for-bit unchanged.
 
 What differs between backends is exactly what the paper measures: the
 serializer (copy vs zero-copy), connections per transfer, per-send buffer
@@ -38,6 +48,28 @@ class BackendPolicy:
     lan_concurrency_penalty: float = 0.0  # MPI multithreading overhead/send
 
 
+@dataclasses.dataclass
+class SendHandle:
+    """One in-flight non-blocking send (``isend``).
+
+    * ``issued``  — when the send was requested;
+    * ``start``   — sender-side busy-until (serialization / upload done);
+    * ``inbox_t`` — when the delivery lands in the receiver's inbox
+                    (``recv`` called at/after this returns the message);
+    * ``arrive``  — payload availability at the receiver, pre-deserialize
+                    (for object-store backends this includes the GET leg).
+    """
+    msg: FLMessage
+    issued: float
+    start: float
+    inbox_t: float
+    arrive: float
+    nbytes: int = 0
+
+    def done(self, now: float) -> bool:
+        return now + 1e-12 >= self.arrive
+
+
 class CommBackend:
     def __init__(self, policy: BackendPolicy, env: Environment,
                  fabric: Fabric, host_id: str, store=None):
@@ -48,6 +80,7 @@ class CommBackend:
         self.store = store
         self.endpoint = fabric.endpoints.get(host_id) or fabric.register(host_id)
         self.serializer = SERIALIZERS[policy.serializer]
+        self._ser_busy_until = 0.0  # sender serializer busy-line (isend)
 
     # ------------------------------------------------------------------
     @property
@@ -65,22 +98,42 @@ class CommBackend:
     def _overhead(self, region: Region) -> float:
         return self.policy.overhead_rtts * 2 * region.latency
 
+    def _ser_slot(self, now: float, ser_t: float) -> float:
+        """Start time for one serialization on the sender. Serializers that
+        cannot run in parallel queue overlapping isends; calls at
+        non-decreasing, non-overlapping times see ``now`` unchanged."""
+        if self.policy.ser_parallel:
+            return now
+        start = max(now, self._ser_busy_until)
+        self._ser_busy_until = start + ser_t
+        return start
+
     # ------------------------------------------------------------------
-    def send(self, msg: FLMessage, now: float) -> Tuple[float, float]:
+    def isend(self, msg: FLMessage, now: float) -> SendHandle:
+        """Non-blocking send: schedules delivery, returns a completion
+        handle immediately. Multiple in-flight isends interleave (subject
+        to the serializer busy-line)."""
         wire = self.serializer.serialize(msg.payload) if msg.payload is not None \
             else WireData(nbytes=256)
         ser_t = self.serializer.ser_time(wire.nbytes)
         mem = self.endpoint.memory
         alloc = (wire.nbytes if (self.policy.per_send_copy and msg.payload
                                  is not None) else 0) + self.policy.staging_bytes
-        mem.alloc(alloc, now)
+        ser_start = self._ser_slot(now, ser_t)
+        mem.alloc(alloc, ser_start)
         region = self._link_region(msg.receiver)
-        start = now + ser_t
+        start = ser_start + ser_t
         dur = self._overhead(region) + region.latency \
             + wire.nbytes / region.conn_cap(self.policy.conns_per_transfer)
         arrive = self.fabric.deliver(msg, wire, start, dur)
         mem.free(alloc, arrive)
-        return start, arrive
+        return SendHandle(msg=msg, issued=now, start=start, inbox_t=arrive,
+                          arrive=arrive, nbytes=wire.nbytes)
+
+    def send(self, msg: FLMessage, now: float) -> Tuple[float, float]:
+        """Blocking-semantics wrapper over ``isend`` (legacy API)."""
+        h = self.isend(msg, now)
+        return h.start, h.arrive
 
     # ------------------------------------------------------------------
     def _broadcast_transfers(self, msgs, now) -> Tuple[list, list, float]:
@@ -142,13 +195,14 @@ class CommBackend:
         return max(w[1] for w in wires), arrives
 
     def sequential_broadcast(self, msgs: Sequence[FLMessage], now: float):
-        """One at a time (Fig 4b baseline)."""
+        """One at a time (Fig 4b baseline): each isend waits for the
+        previous handle to complete before being issued."""
         t = now
         arrives = []
         for msg in msgs:
-            _, arrive = self.send(msg, t)
-            t = arrive
-            arrives.append(arrive)
+            h = self.isend(msg, t)
+            t = h.arrive  # blocking: wait for completion before the next
+            arrives.append(h.arrive)
         return t, arrives
 
     # ------------------------------------------------------------------
@@ -164,6 +218,13 @@ class CommBackend:
                     msg = dataclasses.replace(msg, payload=payload)
             out.append((msg, ready))
         return out
+
+    def next_arrival(self, after: float = float("-inf")) -> Optional[float]:
+        """Non-blocking peek: earliest pending delivery time strictly
+        after ``after`` (event-loop hook; returns None when idle)."""
+        ts = [d.arrive_time for d in self.endpoint.inbox
+              if d.arrive_time > after]
+        return min(ts) if ts else None
 
     # ------------------------------------------------------------------
     def p2p_time(self, nbytes: int, dst_id: str) -> float:

@@ -22,7 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
-from repro.core.backends.base import BackendPolicy, CommBackend, _delivery
+from repro.core.backends.base import (BackendPolicy, CommBackend, SendHandle,
+                                      _delivery)
 from repro.core.message import FLMessage
 from repro.core.netsim import simulate_transfers
 from repro.core.objectstore import S3_MAX_PARTS, ObjectStore
@@ -41,7 +42,7 @@ class GrpcS3Backend(CommBackend):
         assert store is not None, "grpc+s3 requires an object store"
         self.parts = parts
         self.presign = presign
-        self._key_cache: dict = {}  # fingerprint -> s3 key
+        self._key_cache: dict = {}  # fingerprint -> (s3 key, upload done t)
         self.meta_serializer = SERIALIZERS["protobuf"]  # control channel
 
     # -- helpers ---------------------------------------------------------
@@ -49,20 +50,24 @@ class GrpcS3Backend(CommBackend):
         """Upload payload if new; returns (key, upload_done_t).
         Repeated sends of the same model reuse the cached key."""
         fp = msg.payload.fingerprint()
-        if fp in self._key_cache and self.store.has(self._key_cache[fp]):
+        if fp in self._key_cache and self.store.has(self._key_cache[fp][0]):
+            key, done = self._key_cache[fp]
             self.store.stats["cache_hits"] += 1
-            return self._key_cache[fp], now
+            # the cached upload may still be in flight (concurrent isends
+            # of the same model): readers wait for it to land
+            return key, max(now, done)
         wire = self.serializer.serialize(msg.payload)
         ser_t = self.serializer.ser_time(wire.nbytes)
+        ser_start = self._ser_slot(now, ser_t)
         mem = self.endpoint.memory
-        mem.alloc(wire.nbytes + self.policy.staging_bytes, now)
+        mem.alloc(wire.nbytes + self.policy.staging_bytes, ser_start)
         key = self.store.content_key(fp, msg.round, msg.sender)
         src = self.env.host(self.host_id)
         up_t = self.store.put_time(wire.nbytes, src, self.parts)
-        self.store.put(key, wire, wire.nbytes, now + ser_t + up_t)
-        done = now + ser_t + up_t
+        done = ser_start + ser_t + up_t
+        self.store.put(key, wire, wire.nbytes, done)
         mem.free(wire.nbytes + self.policy.staging_bytes, done)
-        self._key_cache[fp] = key
+        self._key_cache[fp] = (key, done)
         return key, done
 
     def _meta_msg(self, msg: FLMessage, key: str) -> FLMessage:
@@ -76,9 +81,11 @@ class GrpcS3Backend(CommBackend):
         return self._overhead(region) + region.latency + 256 / region.bw_single
 
     # -- api -------------------------------------------------------------
-    def send(self, msg: FLMessage, now: float):
+    def isend(self, msg: FLMessage, now: float):
+        """Non-blocking hybrid send: payload to the object store once,
+        metadata record over gRPC; the receiver pulls on inbox pop."""
         if msg.payload is None:
-            return super().send(msg, now)
+            return super().isend(msg, now)
         key, up_done = self._upload(msg, now)
         meta = self._meta_msg(msg, key)
         region = self._link_region(msg.receiver)
@@ -87,7 +94,9 @@ class GrpcS3Backend(CommBackend):
         # receiver pulls from S3 after metadata arrives
         dst = self.env.host(msg.receiver)
         get_t = self.store.get_time(msg.payload_nbytes, dst, self.parts)
-        return up_done, arrive_meta + get_t
+        return SendHandle(msg=msg, issued=now, start=up_done,
+                          inbox_t=arrive_meta, arrive=arrive_meta + get_t,
+                          nbytes=msg.payload_nbytes)
 
     def broadcast(self, msgs: Sequence[FLMessage], now: float):
         """Single upload + N concurrent multipart downloads."""

@@ -93,10 +93,12 @@ def geo_proximal_env(num_clients: int = 7) -> Environment:
                        tuple(mk(i) for i in range(num_clients)), trusted=True)
 
 
-def geo_distributed_env() -> Environment:
-    clients = tuple(
-        Host(f"client{i}", r, r.bw_multi, r.bw_multi)
-        for i, r in enumerate(GEO_REGIONS))
+def geo_distributed_env(num_clients: int = 7) -> Environment:
+    """Paper's 7-region WAN testbed; >7 clients round-robin over the same
+    regions (multi-client silos — the hierarchical-aggregation regime)."""
+    regions = (GEO_REGIONS[i % len(GEO_REGIONS)] for i in range(num_clients))
+    clients = tuple(Host(f"client{i}", r, r.bw_multi, r.bw_multi)
+                    for i, r in enumerate(regions))
     return Environment("geo_distributed",
                        Host("server", NCAL, NCAL.bw_multi, NCAL.bw_multi),
                        clients)
@@ -110,8 +112,6 @@ ENVIRONMENTS = {
 
 
 def make_env(name: str, num_clients: int = 7) -> Environment:
-    if name == "geo_distributed":
-        return geo_distributed_env()
     return ENVIRONMENTS[name](num_clients)
 
 

@@ -1,6 +1,14 @@
-from repro.fl.aggregator import fedavg, fedavg_quantized
+from repro.fl.aggregator import (fedavg, fedavg_quantized, staleness_weight)
+from repro.fl.async_strategies import (AggregationStrategy, FedBuffStrategy,
+                                       HierarchicalStrategy, SemiSyncStrategy,
+                                       make_strategy)
 from repro.fl.client import FLClient
-from repro.fl.server import FLServer, RoundReport
+from repro.fl.scheduler import (AsyncRunReport, EventLoop, FLScheduler,
+                                UpdateRecord)
+from repro.fl.server import FLServer, RoundReport, quorum_cutoff
 
 __all__ = ["FLServer", "FLClient", "RoundReport", "fedavg",
-           "fedavg_quantized"]
+           "fedavg_quantized", "staleness_weight", "quorum_cutoff",
+           "FLScheduler", "EventLoop", "AsyncRunReport", "UpdateRecord",
+           "AggregationStrategy", "FedBuffStrategy", "SemiSyncStrategy",
+           "HierarchicalStrategy", "make_strategy"]

@@ -1,0 +1,291 @@
+"""Aggregation strategies for the event-driven FL scheduler.
+
+Three modes beyond the paper's synchronous loop, selectable from
+``FLConfig.mode``:
+
+* ``FedBuffStrategy``     — async buffered aggregation: the server merges a
+  staleness-weighted buffer every K arrivals and immediately hands the
+  reporting client the newest global model (FedBuff-style; Nguyen et al.).
+* ``SemiSyncStrategy``    — quorum + deadline rounds reusing the sync
+  straggler policy, but late arrivals are *folded into the next round*
+  (with staleness ≥ 1) instead of dropped.
+* ``HierarchicalStrategy``— topology-aware per-region relays: clients
+  reduce locally over a LAN-class link, then one multi-connection WAN hop
+  per region to the hub (Marfoq et al.'s throughput-optimal topology line).
+  The hub's FedAvg over weighted relay partials is numerically identical
+  to flat FedAvg (tested).
+
+Strategies receive scheduler callbacks (``on_update`` / ``on_timer``) and
+use ``sched.dispatch`` / ``sched.aggregate`` / ``sched.timer`` to shape
+the event flow.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.message import FLMessage, TensorPayload, VirtualPayload
+from repro.core.netsim import (LAN_TCP, Region, Transfer, simulate_transfers,
+                               transfer_time)
+from repro.fl.aggregator import (fedavg, simulated_agg_time, staleness_weight)
+from repro.fl.scheduler import FLScheduler, UpdateRecord
+
+
+class AggregationStrategy:
+    """Base: broadcast-once bootstrap + a staleness weight hook."""
+
+    name = "base"
+    staleness_exponent = 0.0
+
+    def staleness_weight(self, staleness: float) -> float:
+        return staleness_weight(staleness, self.staleness_exponent)
+
+    def start(self, sched: FLScheduler, now: float):
+        self.sched = sched
+        sched.dispatch_many(sched.clients, now)
+
+    def on_update(self, sched: FLScheduler, rec: UpdateRecord, now: float):
+        raise NotImplementedError
+
+    def on_timer(self, sched: FLScheduler, now: float, **data):
+        pass
+
+
+class FedBuffStrategy(AggregationStrategy):
+    """Async FedBuff-style: merge every K arrivals, discount stale updates,
+    re-dispatch the newest global to each reporter immediately."""
+
+    name = "fedbuff"
+
+    def __init__(self, *, buffer_k: int = 3, staleness_exponent: float = 0.5,
+                 max_staleness: int = 0):
+        self.buffer_k = max(1, int(buffer_k))
+        self.staleness_exponent = staleness_exponent
+        self.max_staleness = int(max_staleness)  # 0 = keep everything
+        self.buffer: List[UpdateRecord] = []
+
+    def on_update(self, sched: FLScheduler, rec: UpdateRecord, now: float):
+        t = now
+        if self.max_staleness and rec.staleness > self.max_staleness:
+            sched.discarded += 1
+        else:
+            self.buffer.append(rec)
+            if len(self.buffer) >= self.buffer_k:
+                recs, self.buffer = self.buffer, []
+                t = sched.aggregate(recs, now)
+        if rec.client is not None:
+            sched.dispatch(rec.client, t)
+
+
+class SemiSyncStrategy(AggregationStrategy):
+    """Quorum + deadline rounds; stragglers are folded into the next round
+    (their updates arrive with staleness ≥ 1), never dropped."""
+
+    name = "semisync"
+
+    def __init__(self, *, quorum_fraction: float = 1.0,
+                 round_deadline_s: float = 0.0,
+                 staleness_exponent: float = 0.0):
+        self.quorum_fraction = quorum_fraction
+        self.round_deadline_s = round_deadline_s
+        self.staleness_exponent = staleness_exponent
+        self.round_id = 0
+        self.collected: List[UpdateRecord] = []
+
+    def start(self, sched: FLScheduler, now: float):
+        super().start(sched, now)
+        self._arm(sched, now)
+
+    def _need(self, sched) -> int:
+        # clamp like the sync server: a quorum can never exceed the fleet
+        need = int(np.ceil(self.quorum_fraction * len(sched.clients)))
+        return min(max(1, need), len(sched.clients))
+
+    def _arm(self, sched, now: float):
+        if self.round_deadline_s > 0:
+            sched.timer(now + self.round_deadline_s,
+                        f"deadline#r{self.round_id}", self.on_timer,
+                        round_id=self.round_id)
+
+    def on_update(self, sched, rec: UpdateRecord, now: float):
+        self.collected.append(rec)
+        if len(self.collected) >= self._need(sched):
+            self._close(sched, now)
+
+    def on_timer(self, sched, now: float, round_id: int):
+        if round_id != self.round_id:
+            return  # stale timer from an already-closed round
+        if self.collected:
+            self._close(sched, now)
+        else:
+            self._arm(sched, now)  # nothing arrived yet: extend the round
+
+    def _close(self, sched, now: float):
+        recs, self.collected = self.collected, []
+        done = sched.aggregate(recs, now)
+        self.round_id += 1
+        sched.dispatch_many([r.client for r in recs if r.client is not None],
+                            done)
+        self._arm(sched, done)
+
+
+class HierarchicalStrategy(AggregationStrategy):
+    """Per-region relay aggregators (topology-aware synchronous rounds).
+
+    Round shape: hub -> one WAN hop per region relay -> LAN fan-out to the
+    region's clients; uploads reduce at the relay over LAN, then a single
+    multi-connection WAN hop back to the hub. The relay is colocated with
+    the region's first client and multiplexes ``relay_conns`` connections
+    on its WAN hop — the paper's own Fig 2 concurrency lesson applied to
+    topology. The hub merge of weighted relay partials equals flat FedAvg.
+    """
+
+    name = "hier"
+
+    def __init__(self, *, relay_link: Region = LAN_TCP, relay_conns: int = 8,
+                 staleness_exponent: float = 0.0):
+        self.relay_link = relay_link
+        self.relay_conns = relay_conns
+        self.staleness_exponent = staleness_exponent
+
+    # -- setup -------------------------------------------------------------
+    def start(self, sched: FLScheduler, now: float):
+        self.sched = sched
+        env = sched.env
+        groups: Dict[str, list] = {}
+        for c in sched.clients:
+            groups.setdefault(env.host(c.client_id).region.name, []).append(c)
+        self.groups = dict(sorted(groups.items()))
+        probe = FLMessage("model_sync", sched.backend.host_id, "server",
+                          payload=sched.global_payload)
+        self._be = sched._resolved(probe)
+        self._begin_round(sched, now)
+
+    def _wan_conns(self) -> int:
+        return max(self._be.policy.conns_per_transfer, self.relay_conns)
+
+    def _lan_hop(self, nbytes: int) -> float:
+        ser = self._be.serializer.ser_time(nbytes)
+        deser = self._be.serializer.deser_time(nbytes)
+        return ser + transfer_time(nbytes, self.relay_link) + deser
+
+    # -- round flow --------------------------------------------------------
+    def _begin_round(self, sched, now: float):
+        self.pending = {g: {c.client_id for c in cs}
+                        for g, cs in self.groups.items()}
+        self.partials: Dict[str, List[UpdateRecord]] = {g: []
+                                                        for g in self.groups}
+        self.hub_records: List[UpdateRecord] = []
+        be, env = self._be, sched.env
+        nbytes = sched.global_payload.nbytes
+        ser_t = be.serializer.ser_time(nbytes)
+        hub = env.host(sched.backend.host_id)
+        # hub -> relays: one concurrent multi-connection WAN hop per region
+        transfers, order, t_ser = [], [], now
+        for g, cs in self.groups.items():
+            relay_host = env.host(cs[0].client_id)
+            region = be._link_region(cs[0].client_id)
+            if be.policy.ser_parallel:
+                start = now + ser_t
+            else:
+                t_ser += ser_t
+                start = t_ser
+            transfers.append(Transfer(
+                start=start + be._overhead(region), src=hub, dst=relay_host,
+                nbytes=nbytes, conns=self._wan_conns(), link_region=region,
+                tag=f"hub->{g}"))
+            order.append((g, cs))
+        simulate_transfers(transfers)
+        deser = be.serializer.deser_time(nbytes)
+        for (g, cs), tr in zip(order, transfers):
+            relay_t = tr.finish + deser
+            # relay fans out to its members over the LAN-class link
+            t = relay_t
+            for c in cs:
+                if be.policy.ser_parallel:
+                    ready = relay_t + self._lan_hop(nbytes)
+                else:
+                    t += be.serializer.ser_time(nbytes)
+                    ready = (t + transfer_time(nbytes, self.relay_link)
+                             + deser)
+                sched.loop.call_at(ready, f"hier-model>{c.client_id}",
+                                   self._on_member_model, client=c, group=g)
+
+    def _on_member_model(self, now: float, client, group: str):
+        sched = self.sched
+        msg = FLMessage("model_sync", f"relay:{group}", client.client_id,
+                        round=sched.version, payload=sched.global_payload,
+                        metadata={"version": sched.version})
+        update, _timing, send_start = client.run_round(
+            msg, now, sched.local_steps)
+        nb = update.payload.nbytes
+        relay_recv = send_start + self._lan_hop(nb)
+        rec = UpdateRecord(
+            client=client, payload=update.payload,
+            weight=float(update.metadata.get("num_examples", 1)),
+            version=int(msg.metadata["version"]), staleness=0,
+            arrive_t=relay_recv)
+        sched.loop.call_at(relay_recv, f"hier-relay<{client.client_id}",
+                           self._on_relay_update, group=group, rec=rec)
+
+    def _on_relay_update(self, now: float, group: str, rec: UpdateRecord):
+        sched = self.sched
+        self.partials[group].append(rec)
+        self.pending[group].discard(rec.client.client_id)
+        if self.pending[group]:
+            return
+        recs = self.partials[group]
+        weight = float(sum(r.weight for r in recs))
+        trees = [r.payload.tree for r in recs
+                 if isinstance(r.payload, TensorPayload)]
+        if len(trees) == len(recs):
+            partial, agg_s = fedavg(trees, [r.weight for r in recs])
+            payload = TensorPayload(partial)
+        else:
+            nb = recs[0].payload.nbytes
+            agg_s = simulated_agg_time(nb, len(recs))
+            payload = VirtualPayload(nb, tag=f"relay:{group}")
+        be = self._be
+        region = be._link_region(recs[0].client.client_id)
+        wan = (be.serializer.ser_time(payload.nbytes) + be._overhead(region)
+               + transfer_time(payload.nbytes, region, self._wan_conns())
+               + be.serializer.deser_time(payload.nbytes))
+        hub_rec = UpdateRecord(client=recs[0].client, payload=payload,
+                               weight=weight, version=recs[0].version,
+                               staleness=0, arrive_t=now + agg_s + wan,
+                               count=len(recs))
+        sched.loop.call_at(hub_rec.arrive_t, f"hier-hub<{group}",
+                           self._on_hub_partial, rec=hub_rec)
+
+    def _on_hub_partial(self, now: float, rec: UpdateRecord):
+        sched = self.sched
+        self.hub_records.append(rec)
+        if len(self.hub_records) < len(self.groups):
+            return
+        recs, self.hub_records = self.hub_records, []
+        done = sched.aggregate(recs, now)
+        if not sched.loop.stopped:
+            self._begin_round(sched, done)
+
+
+def make_strategy(cfg, num_clients: Optional[int] = None,
+                  **overrides) -> AggregationStrategy:
+    """Strategy factory from ``FLConfig`` knobs (mode + buffer/staleness)."""
+    n = num_clients or cfg.num_clients
+    mode = cfg.mode
+    if mode == "fedbuff":
+        k = cfg.buffer_k or max(2, n // 2)
+        return FedBuffStrategy(buffer_k=k,
+                               staleness_exponent=cfg.staleness_exponent,
+                               max_staleness=cfg.max_staleness, **overrides)
+    if mode == "semisync":
+        return SemiSyncStrategy(quorum_fraction=cfg.quorum_fraction,
+                                round_deadline_s=cfg.round_deadline_s,
+                                staleness_exponent=cfg.staleness_exponent,
+                                **overrides)
+    if mode == "hier":
+        return HierarchicalStrategy(
+            staleness_exponent=cfg.staleness_exponent, **overrides)
+    raise KeyError(f"unknown scheduler mode '{mode}' "
+                   "(sync rounds use FLServer.run_round)")

@@ -40,7 +40,12 @@ class FLClient:
                  train_fn: Optional[Callable] = None,
                  sim_train_s: float = 0.0, batch_size: int = 16,
                  straggle_factor: float = 1.0, seed: int = 0):
-        """train_fn(params, batch) -> (new_params, loss) — jit'd by caller."""
+        """train_fn(params, batch) -> (new_params, loss) — jit'd by caller.
+
+        ``sim_train_s`` > 0 with a live ``train_fn`` trains for real but
+        charges the calibrated time instead of measured wall seconds —
+        "live compute, simulated clock", which keeps event-driven runs
+        deterministic (jit compile jitter never leaks into the sim)."""
         self.client_id = client_id
         self.backend = backend
         self.dataset = dataset
@@ -50,6 +55,8 @@ class FLClient:
         self.straggle_factor = straggle_factor
         self.seed = seed
         self._round = 0
+        self._sends = 0  # distinct virtual updates must not alias in the
+        # object store's content-addressed cache (each round re-uploads)
 
     # ------------------------------------------------------------------
     def local_train(self, params, local_steps: int):
@@ -81,11 +88,15 @@ class FLClient:
 
         if isinstance(payload, VirtualPayload) or self.train_fn is None:
             train_s = self.sim_train_s * self.straggle_factor
-            update_payload = VirtualPayload(nbytes, tag=f"upd:{self.client_id}")
+            self._sends += 1
+            update_payload = VirtualPayload(
+                nbytes, tag=f"upd:{self.client_id}:{self._sends}")
             num_examples = 128
         else:
             new_params, loss, train_s = self.local_train(payload.tree,
                                                          local_steps)
+            if self.sim_train_s > 0:
+                train_s = self.sim_train_s  # live compute, simulated clock
             train_s *= self.straggle_factor
             update_payload = TensorPayload(new_params)
             num_examples = self.dataset.num_examples()
@@ -98,5 +109,9 @@ class FLClient:
         t += mig_out
         update = FLMessage("client_update", self.client_id, server_id,
                            round=msg.round, payload=update_payload,
-                           metadata={"num_examples": num_examples})
+                           metadata={"num_examples": num_examples,
+                                     # global version this update was
+                                     # trained against (async staleness)
+                                     "version": msg.metadata.get(
+                                         "version", msg.round)})
         return update, timing, t

@@ -1,0 +1,294 @@
+"""Event-driven FL runtime — clients driven independently, not in lockstep.
+
+The paper's Fig 5 loop (``FLServer.run_round``) models synchronous rounds:
+every client trains on the same global version and the server blocks on a
+quorum. The interesting scale regime — stragglers, WAN heterogeneity,
+throughput-optimal topologies (Marfoq et al.) — is asynchronous. This
+module provides that runtime:
+
+* ``EventLoop``    — deterministic discrete-event queue over the simulated
+  clock. Events are ordered by ``(time, insertion seq)`` so ties resolve in
+  schedule order and replaying the same deployment reproduces the exact
+  same trace (tested).
+* ``FLScheduler``  — drives each ``FLClient`` through its own
+  dispatch -> train -> upload pipeline using the backends' non-blocking
+  ``isend`` handles and inbox polling (``recv`` / ``next_arrival``), and
+  delegates *when and how to aggregate* to a pluggable strategy
+  (fl/async_strategies.py): FedBuff-style buffered async, semi-synchronous
+  quorum+deadline, or hierarchical per-region relays.
+
+Payload movement is real whenever payloads are real (TensorPayload trees
+travel through the same serializers/fabric as the sync path); time is
+simulated-clock seconds from netsim either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.message import FLMessage, TensorPayload, VirtualPayload
+from repro.fl.aggregator import (fedavg, merge_global, simulated_agg_time,
+                                 staleness_weight)
+from repro.fl.client import PCIE_BW, FLClient
+
+
+@dataclasses.dataclass
+class UpdateRecord:
+    """One client (or relay) update as seen by the aggregation strategy."""
+    client: Optional[FLClient]
+    payload: Any  # TensorPayload | VirtualPayload | PackedPayload
+    weight: float  # num_examples (or summed, for relay partials)
+    version: int  # global version the update was trained against
+    staleness: int  # server version delta at merge decision time
+    arrive_t: float
+    count: int = 1  # client updates folded in (relay partials carry many)
+
+
+@dataclasses.dataclass
+class AggregationEvent:
+    time: float
+    version: int
+    n_updates: int
+    mean_staleness: float
+    effective_weight: float  # sum of staleness discounts alpha(s)
+    loss: Optional[float] = None
+
+
+@dataclasses.dataclass
+class AsyncRunReport:
+    """What one event-driven run produced (the fig6 results surface)."""
+    mode: str
+    backend: str
+    sim_time: float
+    n_aggregations: int
+    n_client_updates: int
+    effective_updates: float
+    mean_staleness: float
+    aggregations_per_hour: float
+    client_updates_per_hour: float
+    time_to_target: Optional[float]
+    final_loss: Optional[float]
+    n_discarded: int
+    n_events: int
+
+
+class EventLoop:
+    """Deterministic discrete-event loop: (time, seq)-ordered heap."""
+
+    def __init__(self):
+        self._q: list = []
+        self._seq = 0
+        self.now = 0.0
+        self.stopped = False
+        self.trace: List[tuple] = []  # (time, event name) — determinism probe
+
+    def call_at(self, t: float, name: str, fn: Callable, **kw):
+        """Schedule ``fn(now, **kw)``; never earlier than the current time."""
+        heapq.heappush(self._q, (max(float(t), self.now), self._seq, name,
+                                 fn, kw))
+        self._seq += 1
+
+    def stop(self):
+        self.stopped = True
+
+    def run(self, until: float = math.inf) -> float:
+        while self._q and not self.stopped:
+            t, _, name, fn, kw = self._q[0]
+            if t > until:
+                break
+            heapq.heappop(self._q)
+            self.now = t
+            self.trace.append((round(t, 9), name))
+            fn(t, **kw)
+        return self.now
+
+
+class FLScheduler:
+    """Drives an FL deployment through an EventLoop under a strategy."""
+
+    def __init__(self, backend, clients: Sequence[FLClient], strategy, *,
+                 local_steps: int = 10, server_lr: float = 1.0):
+        self.backend = backend  # server-side CommBackend (or AUTO)
+        self.clients = list(clients)
+        self.strategy = strategy
+        self.local_steps = local_steps
+        self.server_lr = server_lr
+        self.env = backend.env
+        self.loop = EventLoop()
+        self.version = 0
+        self.global_payload = None
+        self.global_params = None  # real pytree in live mode
+        self.n_aggregations = 0
+        self.n_updates_applied = 0
+        self.effective_updates = 0.0
+        self.discarded = 0
+        self.time_to_target: Optional[float] = None
+        self.agg_log: List[AggregationEvent] = []
+        self.update_log: List[tuple] = []  # (arrive_t, client_id, staleness)
+        self._agg_busy_until = 0.0  # server merges are serialized
+        self._max_agg: Optional[int] = None
+        self._target_eff: Optional[float] = None
+
+    # -- plumbing ----------------------------------------------------------
+    def _resolved(self, msg: FLMessage):
+        be = self.backend
+        return be.resolve(msg) if hasattr(be, "resolve") else be
+
+    def timer(self, t: float, name: str, fn: Callable, **kw):
+        """Schedule a strategy callback ``fn(scheduler, now, **kw)``."""
+        self.loop.call_at(t, name, lambda now, **k: fn(self, now, **k), **kw)
+
+    # -- client pipeline ---------------------------------------------------
+    def _model_msg(self, client: FLClient) -> FLMessage:
+        return FLMessage("model_sync", self.backend.host_id,
+                         client.client_id, round=self.version,
+                         payload=self.global_payload,
+                         metadata={"version": self.version})
+
+    def dispatch(self, client: FLClient, now: float):
+        """Send the current global model to one client (non-blocking isend;
+        concurrent dispatches interleave on the shared completion path)."""
+        h = self.backend.isend(self._model_msg(client), now)
+        self.loop.call_at(h.inbox_t, f"model>{client.client_id}",
+                          self._on_client_recv, client=client)
+
+    def dispatch_many(self, clients: Sequence[FLClient], now: float):
+        """Burst dispatch (round start / round close): rides the backend's
+        contention-aware concurrent broadcast — the same fluid model the
+        sync server charges — instead of independent analytic isends."""
+        clients = list(clients)
+        if len(clients) <= 1:
+            for c in clients:
+                self.dispatch(c, now)
+            return
+        msgs = [self._model_msg(c) for c in clients]
+        _, arrives = self.backend.broadcast(msgs, now)
+        for c, arrive in zip(clients, arrives):
+            self.loop.call_at(arrive, f"model>{c.client_id}",
+                              self._on_client_recv, client=c)
+
+    def _on_client_recv(self, now: float, client: FLClient):
+        for msg, ready in client.backend.recv(now):
+            if msg.msg_type != "model_sync":
+                continue
+            update, _timing, send_start = client.run_round(
+                msg, ready, self.local_steps)
+            uh = client.backend.isend(update, send_start)
+            self.loop.call_at(uh.inbox_t, f"update>{client.client_id}",
+                              self._on_server_recv)
+
+    def _on_server_recv(self, now: float):
+        for msg, ready in self.backend.recv(now):
+            if msg.msg_type != "client_update":
+                continue
+            self.loop.call_at(ready, f"apply<{msg.sender}", self._on_apply,
+                              msg=msg)
+
+    def _on_apply(self, now: float, msg: FLMessage):
+        client = next((c for c in self.clients
+                       if c.client_id == msg.sender), None)
+        version = int(msg.metadata.get("version", msg.round))
+        staleness = self.version - version
+        rec = UpdateRecord(client=client, payload=msg.payload,
+                           weight=float(msg.metadata.get("num_examples", 1)),
+                           version=version, staleness=staleness, arrive_t=now)
+        self.update_log.append((now, msg.sender, staleness))
+        self.strategy.on_update(self, rec, now)
+
+    # -- aggregation -------------------------------------------------------
+    def aggregate(self, records: Sequence[UpdateRecord], now: float) -> float:
+        """Staleness-weighted buffered aggregate; bumps the global version.
+        Returns the simulated completion time."""
+        records = list(records)
+        if not records:
+            return now
+        alphas = [self.strategy.staleness_weight(r.staleness)
+                  for r in records]
+        eff = [r.weight * a for r, a in zip(records, alphas)]
+        nbytes = self.global_payload.nbytes
+        trees = [r.payload.tree for r in records
+                 if isinstance(r.payload, TensorPayload)]
+        if len(trees) == len(records) and sum(eff) > 0:
+            merged, agg_s = fedavg(trees, eff)
+            lam = self.server_lr * (sum(eff) /
+                                    max(sum(r.weight for r in records), 1e-12))
+            self.global_params = merge_global(self.global_params, merged, lam)
+            self.global_payload = TensorPayload(self.global_params)
+        else:
+            agg_s = simulated_agg_time(nbytes, len(records))
+            # a merged model is a *new* payload: refresh the virtual tag so
+            # object-store content caching doesn't hand out stale-free sends
+            self.global_payload = VirtualPayload(
+                nbytes, tag=f"model:v{self.version + 1}")
+        mig_s = 2 * nbytes / PCIE_BW
+        done = max(now, self._agg_busy_until) + mig_s + agg_s
+        self._agg_busy_until = done
+        self.version += 1
+        self.n_aggregations += 1
+        self.n_updates_applied += sum(r.count for r in records)
+        self.effective_updates += sum(a * r.count
+                                      for a, r in zip(alphas, records))
+        losses = [getattr(r.client, "last_loss", None) for r in records
+                  if r.client is not None]
+        losses = [l for l in losses if l is not None]
+        self.agg_log.append(AggregationEvent(
+            time=done, version=self.version, n_updates=len(records),
+            mean_staleness=float(np.mean([r.staleness for r in records])),
+            effective_weight=float(sum(alphas)),
+            loss=float(np.mean(losses)) if losses else None))
+        if (self._target_eff is not None and self.time_to_target is None
+                and self.effective_updates >= self._target_eff):
+            self.time_to_target = done
+        reached_target = (self._target_eff is not None
+                          and self.time_to_target is not None)
+        reached_cap = (self._max_agg is not None
+                       and self.n_aggregations >= self._max_agg)
+        if reached_target or reached_cap:
+            self.loop.stop()
+        return done
+
+    # -- entry point -------------------------------------------------------
+    def run(self, global_payload, *, until: float = math.inf,
+            max_aggregations: Optional[int] = None,
+            target_effective_updates: Optional[float] = None) -> AsyncRunReport:
+        if (math.isinf(until) and max_aggregations is None
+                and target_effective_updates is None):
+            raise ValueError("unbounded run: pass until=, max_aggregations= "
+                             "or target_effective_updates=")
+        self.global_payload = global_payload
+        if isinstance(global_payload, TensorPayload):
+            self.global_params = global_payload.tree
+        self._max_agg = max_aggregations
+        self._target_eff = target_effective_updates
+        self.strategy.start(self, self.loop.now)
+        self.loop.run(until=until)
+        return self.report()
+
+    def report(self) -> AsyncRunReport:
+        # the stop() that capped the run fires at the *triggering* event;
+        # the final merge still runs to completion on the simulated clock
+        span = self.loop.now
+        if self.agg_log:
+            span = max(span, self.agg_log[-1].time)
+        stal = [s for (_, _, s) in self.update_log]
+        losses = [e.loss for e in self.agg_log if e.loss is not None]
+        return AsyncRunReport(
+            mode=getattr(self.strategy, "name", "?"),
+            backend=getattr(self.backend, "name", "?"),
+            sim_time=span,
+            n_aggregations=self.n_aggregations,
+            n_client_updates=self.n_updates_applied,
+            effective_updates=self.effective_updates,
+            mean_staleness=float(np.mean(stal)) if stal else 0.0,
+            aggregations_per_hour=3600.0 * self.n_aggregations
+            / max(span, 1e-9),
+            client_updates_per_hour=3600.0 * self.n_updates_applied
+            / max(span, 1e-9),
+            time_to_target=self.time_to_target,
+            final_loss=losses[-1] if losses else None,
+            n_discarded=self.discarded,
+            n_events=len(self.loop.trace))

@@ -160,13 +160,9 @@ class FLServer:
 
         # 4) quorum / deadline aggregation
         ready_sorted = sorted((v[0], cid) for cid, v in arrivals.items())
-        need = max(1, int(np.ceil(self.quorum_fraction * len(clients))))
-        need = min(need, len(ready_sorted))
-        cutoff_t = ready_sorted[need - 1][0] if ready_sorted else t0
-        if self.round_deadline_s:
-            cutoff_t = min(cutoff_t, t0 + self.round_deadline_s)
-        counted = [cid for (at, cid) in ready_sorted if at <= cutoff_t + 1e-9]
-        late = [cid for (at, cid) in ready_sorted if at > cutoff_t + 1e-9]
+        cutoff_t, counted, late = quorum_cutoff(
+            ready_sorted, len(clients), self.quorum_fraction,
+            self.round_deadline_s, t0)
 
         # 5) aggregate
         updates, weights = [], []
@@ -213,6 +209,37 @@ class FLServer:
             self.ckpt.save(self.round, self.global_params,
                            meta={"sim_time": self.now})
         return report
+
+
+    # ------------------------------------------------------------------
+    def run_async(self, global_payload, strategy, **limits):
+        """Event-driven execution of this deployment (fl/scheduler.py):
+        same backend + clients, but the strategy decides when to merge.
+        Returns (AsyncRunReport, FLScheduler)."""
+        from repro.fl.scheduler import FLScheduler
+        sched = FLScheduler(self.backend, self.clients, strategy,
+                            local_steps=self.local_steps,
+                            server_lr=self.server_lr)
+        report = sched.run(global_payload, **limits)
+        if sched.global_params is not None:
+            self.global_params = sched.global_params
+        self.now = sched.loop.now
+        return report, sched
+
+
+def quorum_cutoff(ready_sorted, n_expected: int, quorum_fraction: float,
+                  round_deadline_s: float, t0: float):
+    """Shared quorum/deadline policy: when does a sync(-ish) round close,
+    who made it, who is late. ``ready_sorted``: sorted (arrive_t, cid)."""
+    ready_sorted = list(ready_sorted)
+    need = max(1, int(np.ceil(quorum_fraction * n_expected)))
+    need = min(need, len(ready_sorted))
+    cutoff_t = ready_sorted[need - 1][0] if ready_sorted else t0
+    if round_deadline_s:
+        cutoff_t = min(cutoff_t, t0 + round_deadline_s)
+    counted = [cid for (at, cid) in ready_sorted if at <= cutoff_t + 1e-9]
+    late = [cid for (at, cid) in ready_sorted if at > cutoff_t + 1e-9]
+    return cutoff_t, counted, late
 
 
 def _is_mpi(backend) -> bool:

@@ -6,6 +6,10 @@ really move through the backend; time is simulated-clock seconds.
 
     PYTHONPATH=src python -m repro.launch.fl_train --backend grpc+s3 \
         --environment geo_distributed --rounds 3 --tier small
+
+``--mode fedbuff|semisync|hier`` switches to the event-driven runtime
+(fl/scheduler.py): clients run independently and ``--rounds`` counts
+server aggregations instead of lockstep rounds.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ from repro.core import (Fabric, FLMessage, ObjectStore, TensorPayload,
 from repro.core.backends import BACKEND_NAMES
 from repro.core.netsim import NCAL
 from repro.data import make_silo_datasets
-from repro.fl import FLClient, FLServer
+from repro.fl import FLClient, FLServer, make_strategy
 from repro.fl.fault import FaultPlan, apply_stragglers
 
 
@@ -60,12 +64,18 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
             return params2, loss
         return train_fn
 
+    # event-driven modes charge the tier-calibrated training time instead
+    # of measured wall seconds ("live compute, simulated clock"): jit
+    # compile jitter must not reorder event arrivals between runs
+    sim_train = (0.0 if fl_cfg.mode == "sync"
+                 else TIERS[tier].train_s(fl_cfg.environment))
     clients = []
     for i, host in enumerate(env.clients):
         cb = make_backend(fl_cfg.backend, env, fabric, host.host_id,
                           store=store)
         clients.append(FLClient(host.host_id, cb, dataset=silos[i],
                                 train_fn=make_train_fn(), batch_size=16,
+                                sim_train_s=sim_train,
                                 seed=fl_cfg.seed + i))
     server_backend = make_backend(fl_cfg.backend, env, fabric, "server",
                                   store=store)
@@ -74,6 +84,31 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
                       round_deadline_s=fl_cfg.round_deadline_s,
                       local_steps=local_steps)
     return server, params, env, store
+
+
+def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
+                     args) -> int:
+    """Async / semi-sync / hierarchical execution over the same deployment."""
+    strategy = make_strategy(fl_cfg, fl_cfg.num_clients)
+    report, sched = server.run_async(TensorPayload(params), strategy,
+                                     max_aggregations=args.rounds)
+    print(f"[fl:{report.mode}] backend={report.backend} "
+          f"sim_time={report.sim_time:.2f}s "
+          f"aggregations={report.n_aggregations} "
+          f"client_updates={report.n_client_updates} "
+          f"(effective {report.effective_updates:.2f}, "
+          f"mean staleness {report.mean_staleness:.2f}, "
+          f"{report.n_discarded} discarded)")
+    for ev in sched.agg_log:
+        print(f"    v{ev.version}: t={ev.time:8.2f}s n={ev.n_updates} "
+              f"staleness={ev.mean_staleness:.2f} "
+              f"loss={ev.loss if ev.loss is not None else float('nan'):.4f}")
+    losses = [ev.loss for ev in sched.agg_log if ev.loss is not None]
+    ok = len(losses) >= 2 and losses[-1] < losses[0] + 1e-6
+    print(f"[fl:{report.mode}] throughput={report.aggregations_per_hour:.1f} "
+          f"agg/h, {report.client_updates_per_hour:.1f} updates/h "
+          f"({'improving' if ok else 'check'})  s3_stats={store.stats}")
+    return 0
 
 
 def main(argv=None):
@@ -87,6 +122,14 @@ def main(argv=None):
     ap.add_argument("--quorum", type=float, default=1.0)
     ap.add_argument("--drop-rate", type=float, default=0.0)
     ap.add_argument("--tier", default="small")
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "fedbuff", "semisync", "hier"])
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="fedbuff merge buffer (0 = num_clients // 2)")
+    ap.add_argument("--staleness-exponent", type=float, default=0.5)
+    ap.add_argument("--max-staleness", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="semisync round deadline, simulated seconds")
     args = ap.parse_args(argv)
 
     if args.backend == "grpc+s3" and args.environment == "lan":
@@ -95,9 +138,15 @@ def main(argv=None):
 
     fl_cfg = FLConfig(num_clients=args.clients, backend=args.backend,
                       environment=args.environment, rounds=args.rounds,
-                      quorum_fraction=args.quorum)
+                      quorum_fraction=args.quorum,
+                      round_deadline_s=args.deadline, mode=args.mode,
+                      buffer_k=args.buffer_k,
+                      staleness_exponent=args.staleness_exponent,
+                      max_staleness=args.max_staleness)
     server, params, env, store = build_deployment(
-        fl_cfg, local_steps=args.local_steps)
+        fl_cfg, tier=args.tier, local_steps=args.local_steps)
+    if args.mode != "sync":
+        return run_event_driven(fl_cfg, server, params, store, args)
     fault = FaultPlan(drop_rate=args.drop_rate, seed=1)
 
     losses = []

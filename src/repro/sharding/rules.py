@@ -81,6 +81,7 @@ class MeshPlan:
         dims = []
         for i, a in enumerate(axes):
             phys = tuple(p for p in rules.get(a, ()) if p not in used)
+            truncated = False
             if shape is not None and phys:
                 total = math.prod(self.mesh_cfg.axis_size(p) for p in phys)
                 if shape[i] % total != 0:
@@ -94,13 +95,16 @@ class MeshPlan:
                             run *= self.mesh_cfg.axis_size(p)
                         else:
                             break
+                    truncated = len(keep) < len(phys)
                     phys = tuple(keep)
             used.update(phys)
             if len(phys) == 0:
                 dims.append(None)
-            elif len(phys) == 1:
+            elif len(phys) == 1 and not truncated:
                 dims.append(phys[0])
             else:
+                # keep the tuple form for a truncated multi-axis rule:
+                # P(('pod',)) documents that ('pod', 'data') was requested
                 dims.append(phys)
         while dims and dims[-1] is None:
             dims.pop()

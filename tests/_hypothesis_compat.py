@@ -1,0 +1,88 @@
+"""Fallback shims so the property tests degrade gracefully when
+``hypothesis`` is not installed (the seed image ships without it).
+
+With hypothesis present, this module re-exports the real ``given`` /
+``settings`` / ``strategies``. Without it, ``given`` runs the test body
+over a deterministic seeded sample of each strategy (``max_examples``
+draws, honouring ``@settings``) — weaker than real shrinking/coverage,
+but the invariants still execute and the module collects cleanly.
+
+Usage in test modules::
+
+    from tests._hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal images
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class _StrategyModule:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.example(r) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _StrategyModule()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
+                 **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rnd = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = {k: s.example(rnd)
+                             for k, s in strategy_kw.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest resolves fixtures from the signature: hide the
+            # strategy-provided parameters (and the __wrapped__ chain
+            # functools.wraps leaves behind, which pytest would follow)
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategy_kw]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

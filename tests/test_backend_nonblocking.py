@@ -1,0 +1,126 @@
+"""Non-blocking send path: isend handles, the serializer busy-line, and
+the regression guarantee that the legacy blocking semantics (send /
+sequential_broadcast — the Fig 4b baseline) are arithmetically unchanged
+now that they share the isend completion path.
+"""
+import pytest
+
+from repro.core import (Fabric, FLMessage, ObjectStore, VirtualPayload,
+                        make_backend, make_env)
+from repro.core.netsim import MB, NCAL
+
+NBYTES = 50 * MB
+
+
+@pytest.fixture
+def deployment():
+    env = make_env("geo_distributed")
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    return env, fabric, store
+
+
+def _msg(dst, nbytes=NBYTES, tag="m"):
+    return FLMessage("model_sync", "server", dst,
+                     payload=VirtualPayload(nbytes, tag=tag))
+
+
+def _legacy_send_times(be, dst, nbytes, now):
+    """The pre-isend blocking formula, written out by hand."""
+    ser_t = be.serializer.ser_time(nbytes)
+    region = be._link_region(dst)
+    start = now + ser_t
+    arrive = (start + be._overhead(region) + region.latency
+              + nbytes / region.conn_cap(be.policy.conns_per_transfer))
+    return start, arrive
+
+
+@pytest.mark.parametrize("backend", ["grpc", "mpi_generic", "mpi_mem_buff",
+                                     "torch_rpc"])
+def test_send_preserves_legacy_blocking_arithmetic(backend, deployment):
+    env, fabric, store = deployment
+    be = make_backend(backend, env, fabric, "server", store=store)
+    start, arrive = be.send(_msg("client3"), 7.0)
+    exp_start, exp_arrive = _legacy_send_times(be, "client3", NBYTES, 7.0)
+    assert start == pytest.approx(exp_start, rel=1e-12)
+    assert arrive == pytest.approx(exp_arrive, rel=1e-12)
+
+
+def test_sequential_broadcast_chains_on_completion(deployment):
+    """Fig 4b baseline: send i+1 is issued only when send i has arrived."""
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store)
+    msgs = [_msg(c.host_id, tag=f"s{i}") for i, c in enumerate(env.clients)]
+    done, arrives = be.sequential_broadcast(msgs, 0.0)
+    t = 0.0
+    for m in msgs:
+        _, t = _legacy_send_times(be, m.receiver, NBYTES, t)
+    assert done == pytest.approx(t, rel=1e-12)
+    assert arrives == sorted(arrives)  # strictly chained
+    assert done == arrives[-1]
+
+
+def test_grpc_s3_send_preserves_legacy_path(deployment):
+    env, fabric, store = deployment
+    be = make_backend("grpc+s3", env, fabric, "server", store=store)
+    msg = _msg("client3")
+    h = be.isend(msg, 0.0)
+    # sender-side completion = serialize + multipart PUT
+    src = env.host("server")
+    ser_t = be.serializer.ser_time(NBYTES)
+    assert h.start == pytest.approx(
+        ser_t + store.put_time(NBYTES, src, be.parts), rel=1e-12)
+    # receiver availability = metadata hop + multipart GET after the PUT
+    region = be._link_region("client3")
+    dst = env.host("client3")
+    exp_arrive = (h.start + be._meta_duration(region)
+                  + store.get_time(NBYTES, dst, be.parts))
+    assert h.arrive == pytest.approx(exp_arrive, rel=1e-12)
+    assert h.inbox_t < h.arrive  # metadata lands before the payload GET
+    s2 = make_backend("grpc+s3", env, fabric, "server", store=store)
+    start, arrive = s2.send(_msg("client3", tag="again"), 0.0)
+    assert (start, arrive) == (pytest.approx(h.start), pytest.approx(h.arrive))
+
+
+def test_isend_queues_on_serializer_busy_line(deployment):
+    """Overlapping isends on a copy serializer (grpc: ser_parallel=False)
+    serialize one after another; zero-copy backends start in parallel."""
+    env, fabric, store = deployment
+    grpc = make_backend("grpc", env, fabric, "server", store=store)
+    ser_t = grpc.serializer.ser_time(NBYTES)
+    h1 = grpc.isend(_msg("client1", tag="a"), 0.0)
+    h2 = grpc.isend(_msg("client2", tag="b"), 0.0)
+    assert h1.start == pytest.approx(ser_t, rel=1e-12)
+    assert h2.start == pytest.approx(2 * ser_t, rel=1e-12)  # queued
+
+    rpc = make_backend("torch_rpc", env, fabric, "server", store=store)
+    r1 = rpc.isend(_msg("client1", tag="c"), 0.0)
+    r2 = rpc.isend(_msg("client2", tag="d"), 0.0)
+    assert r1.start == pytest.approx(r2.start, rel=1e-12)  # parallel ser
+
+
+def test_isend_handle_done_and_next_arrival(deployment):
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store)
+    cl = make_backend("grpc", env, fabric, "client2", store=store)
+    h = be.isend(_msg("client2"), 0.0)
+    assert not h.done(h.arrive / 2) and h.done(h.arrive)
+    assert cl.next_arrival() == pytest.approx(h.inbox_t)
+    assert cl.next_arrival(after=h.inbox_t) is None  # strictly-after peek
+    got = cl.recv(h.arrive + 1.0)
+    assert len(got) == 1
+    assert cl.next_arrival() is None  # drained
+
+
+def test_auto_backend_isend_routes_and_peeks(deployment):
+    env, fabric, store = deployment
+    be = make_backend("auto", env, fabric, "server", store=store)
+    cl = make_backend("auto", env, fabric, "client1", store=store)
+    h_small = be.isend(_msg("client1", nbytes=1 * MB, tag="sm"), 0.0)
+    h_large = be.isend(_msg("client1", nbytes=200 * MB, tag="lg"), 0.0)
+    assert h_large.inbox_t < h_large.arrive  # rode S3: meta then GET
+    assert h_small.inbox_t == h_small.arrive  # rode plain gRPC
+    assert cl.next_arrival() == pytest.approx(
+        min(h_small.inbox_t, h_large.inbox_t))

@@ -11,6 +11,9 @@ from repro.fl.fault import FaultPlan, apply_stragglers
 from repro.launch.fl_train import build_deployment
 
 
+pytestmark = pytest.mark.slow  # minutes-long; PR CI runs -m 'not slow'
+
+
 def run_rounds(backend, environment, rounds=2, **kw):
     fl_cfg = FLConfig(backend=backend, environment=environment,
                       rounds=rounds, **{k: v for k, v in kw.items()

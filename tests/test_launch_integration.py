@@ -11,6 +11,9 @@ from repro.launch.mesh import make_smoke_mesh
 from repro.launch.step_builders import bundle_for
 
 
+pytestmark = pytest.mark.slow  # minutes-long; PR CI runs -m 'not slow'
+
+
 @pytest.mark.parametrize("arch,kind", [
     ("qwen3-8b", "train"), ("qwen3-8b", "decode"),
     ("granite-moe-1b-a400m", "train"), ("zamba2-1.2b", "decode"),

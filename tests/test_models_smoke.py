@@ -11,6 +11,9 @@ from repro.configs.shapes import SHAPES, applicability
 from repro.models import build_model, param_count
 
 
+pytestmark = pytest.mark.slow  # minutes-long; PR CI runs -m 'not slow'
+
+
 def _batch(cfg, rng, b=2, s=16):
     batch = {}
     if cfg.external_embeddings:

@@ -1,0 +1,226 @@
+"""Event-driven FL runtime: determinism, sync-equivalence, topology.
+
+Covers the scheduler invariants the async modes rely on:
+* the event loop replays the exact same trace for the same deployment;
+* FedBuff with buffer K = n_clients and staleness weight ≡ 1 produces the
+  same global model as one synchronous FedAvg round;
+* hierarchical (relay) aggregation is numerically flat FedAvg;
+* semi-sync folds stragglers into later rounds instead of dropping them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Fabric, ObjectStore, TensorPayload, VirtualPayload,
+                        make_backend, make_env)
+from repro.core.netsim import NCAL
+from repro.data import make_silo_datasets
+from repro.fl import (FedBuffStrategy, FLClient, FLScheduler, FLServer,
+                      HierarchicalStrategy, SemiSyncStrategy)
+from repro.fl.scheduler import EventLoop
+
+N_FEATURES = 8 * 8 * 3
+N_CLASSES = 4
+
+
+def _linear_train_fn():
+    @jax.jit
+    def train_fn(params, batch):
+        def loss_fn(p):
+            x = batch["images"].reshape(batch["images"].shape[0], -1)
+            logits = x @ p["w"] + p["b"]
+            onehot = jax.nn.one_hot(batch["labels"], N_CLASSES)
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot,
+                                     axis=-1))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+        return new, loss
+    return train_fn
+
+
+def _init_params():
+    return {"w": jnp.zeros((N_FEATURES, N_CLASSES), jnp.float32),
+            "b": jnp.zeros((N_CLASSES,), jnp.float32)}
+
+
+def _deployment(backend="grpc", env_name="lan", n=4, *, live=True, seed=0,
+                sim_train_s=5.0, straggle=None):
+    env = make_env(env_name, n)
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    silos = (make_silo_datasets(n, kind="image", examples_per_silo=24,
+                                num_classes=N_CLASSES, image_size=8,
+                                seed=seed) if live else None)
+    clients = []
+    for i, host in enumerate(env.clients):
+        cb = make_backend(backend, env, fabric, host.host_id, store=store)
+        if live:
+            # sim_train_s keeps the simulated clock deterministic (jit
+            # compile wall time must not reorder event-driven arrivals)
+            c = FLClient(host.host_id, cb, dataset=silos[i],
+                         train_fn=_linear_train_fn(), batch_size=8,
+                         sim_train_s=sim_train_s, seed=seed + i)
+        else:
+            c = FLClient(host.host_id, cb, sim_train_s=sim_train_s)
+        if straggle and host.host_id in straggle:
+            c.straggle_factor = straggle[host.host_id]
+        clients.append(c)
+    sb = make_backend(backend, env, fabric, "server", store=store)
+    return sb, clients
+
+
+# ---------------------------------------------------------------------------
+# event loop / determinism
+# ---------------------------------------------------------------------------
+
+def test_event_loop_orders_by_time_then_insertion():
+    loop = EventLoop()
+    seen = []
+    loop.call_at(2.0, "b", lambda now: seen.append("b"))
+    loop.call_at(1.0, "a", lambda now: seen.append("a"))
+    loop.call_at(2.0, "c", lambda now: seen.append("c"))  # tie: after b
+    loop.run()
+    assert seen == ["a", "b", "c"]
+    assert [name for _, name in loop.trace] == ["a", "b", "c"]
+
+
+def test_event_loop_never_schedules_into_the_past():
+    loop = EventLoop()
+    times = []
+
+    def late(now):
+        loop.call_at(now - 5.0, "x", lambda t: times.append(t))
+
+    loop.call_at(10.0, "late", late)
+    loop.run()
+    assert times == [10.0]  # clamped to the current clock
+
+
+def _sim_run(max_agg=5):
+    sb, clients = _deployment("grpc", "geo_distributed", 7, live=False,
+                              straggle={"client6": 3.0})
+    sched = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=3, staleness_exponent=0.5),
+                        local_steps=1)
+    sched.run(VirtualPayload(32 << 20, tag="det"), max_aggregations=max_agg)
+    return sched
+
+
+def test_event_ordering_is_deterministic_across_runs():
+    a, b = _sim_run(), _sim_run()
+    assert a.loop.trace == b.loop.trace
+    assert [(e.time, e.version, e.n_updates) for e in a.agg_log] == \
+           [(e.time, e.version, e.n_updates) for e in b.agg_log]
+    assert a.update_log == b.update_log
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalences
+# ---------------------------------------------------------------------------
+
+def test_fedbuff_full_buffer_equals_sync_fedavg():
+    """K = n_clients + staleness weight ≡ 1 + server_lr 1 is sync FedAvg."""
+    n = 4
+    sb, clients = _deployment("grpc", "lan", n, live=True)
+    server = FLServer(sb, clients, local_steps=2)
+    server.run_round(TensorPayload(_init_params()))
+    sync_params = server.global_params
+
+    sb2, clients2 = _deployment("grpc", "lan", n, live=True)
+    sched = FLScheduler(
+        sb2, clients2, FedBuffStrategy(buffer_k=n, staleness_exponent=0.0),
+        local_steps=2)
+    sched.run(TensorPayload(_init_params()), max_aggregations=1)
+    for k in sync_params:
+        np.testing.assert_allclose(np.asarray(sched.global_params[k]),
+                                   np.asarray(sync_params[k]), atol=1e-5)
+
+
+def test_hierarchical_aggregation_matches_flat_fedavg():
+    """Relay-local FedAvg + weighted hub FedAvg == flat FedAvg (8 clients
+    round-robin over 7 regions: one region carries two silos)."""
+    n = 8
+    sb, clients = _deployment("grpc", "geo_distributed", n, live=True)
+    server = FLServer(sb, clients, local_steps=2)
+    server.run_round(TensorPayload(_init_params()))
+    flat_params = server.global_params
+
+    sb2, clients2 = _deployment("grpc", "geo_distributed", n, live=True)
+    sched = FLScheduler(sb2, clients2,
+                        HierarchicalStrategy(staleness_exponent=0.0),
+                        local_steps=2)
+    rep = sched.run(TensorPayload(_init_params()), max_aggregations=1)
+    assert rep.n_client_updates == n  # every silo folded through its relay
+    for k in flat_params:
+        np.testing.assert_allclose(np.asarray(sched.global_params[k]),
+                                   np.asarray(flat_params[k]), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# async semantics
+# ---------------------------------------------------------------------------
+
+def test_semisync_folds_stragglers_instead_of_dropping():
+    straggler = "client3"
+    sb, clients = _deployment("grpc", "geo_distributed", 4, live=False,
+                              straggle={straggler: 3.0})
+    sched = FLScheduler(
+        sb, clients,
+        SemiSyncStrategy(quorum_fraction=0.5, round_deadline_s=30.0,
+                         staleness_exponent=0.25),
+        local_steps=1)
+    rep = sched.run(VirtualPayload(16 << 20, tag="semi"),
+                    max_aggregations=6)
+    stragler_arrivals = [s for (_, cid, s) in sched.update_log
+                         if cid == straggler]
+    assert stragler_arrivals, "straggler update never surfaced"
+    assert max(stragler_arrivals) >= 1  # merged late, with staleness
+    assert rep.n_discarded == 0  # folded into later rounds, never dropped
+    assert rep.n_aggregations == 6
+
+
+def test_fedbuff_staleness_discount_reduces_effective_weight():
+    sb, clients = _deployment("grpc", "geo_distributed", 4, live=False,
+                              straggle={"client2": 10.0})
+    sched = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=2, staleness_exponent=0.5),
+                        local_steps=1)
+    rep = sched.run(VirtualPayload(16 << 20, tag="stale"),
+                    max_aggregations=6)
+    assert rep.mean_staleness > 0
+    assert rep.effective_updates < rep.n_client_updates
+
+
+def test_fedbuff_max_staleness_discards():
+    sb, clients = _deployment("grpc", "geo_distributed", 4, live=False,
+                              straggle={"client2": 50.0})
+    sched = FLScheduler(
+        sb, clients,
+        FedBuffStrategy(buffer_k=2, staleness_exponent=0.5, max_staleness=1),
+        local_steps=1)
+    rep = sched.run(VirtualPayload(16 << 20, tag="cap"), max_aggregations=6)
+    assert rep.n_discarded >= 1
+
+
+def test_async_run_requires_a_bound():
+    sb, clients = _deployment("grpc", "lan", 2, live=False)
+    sched = FLScheduler(sb, clients, FedBuffStrategy(buffer_k=2))
+    with pytest.raises(ValueError):
+        sched.run(VirtualPayload(1 << 20))
+
+
+def test_run_async_entrypoint_reports_throughput():
+    sb, clients = _deployment("grpc", "lan", 3, live=False)
+    server = FLServer(sb, clients, local_steps=1)
+    report, sched = server.run_async(
+        VirtualPayload(8 << 20, tag="ep"),
+        FedBuffStrategy(buffer_k=3, staleness_exponent=0.0),
+        max_aggregations=2)
+    assert report.n_aggregations == 2
+    assert report.aggregations_per_hour > 0
+    # span covers the final merge, which completes after the stop event
+    assert report.sim_time >= sched.loop.now > 0
+    assert report.sim_time == pytest.approx(sched.agg_log[-1].time)

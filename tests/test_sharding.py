@@ -1,7 +1,7 @@
 """Sharding rules + hypothesis property tests on MeshPlan invariants."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import (MULTI_POD_MESH, SINGLE_POD_MESH, SMOKE_MESH,
