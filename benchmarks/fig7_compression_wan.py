@@ -1,0 +1,250 @@
+"""Fig 7 (beyond the paper): gradient compression on the wire stack.
+
+The paper cites QSGD-family compression as orthogonal to the backend
+choice; the ChannelStack (core/channel.py) makes it an insertable stage.
+This benchmark measures what that composition buys on the paper's own
+14-client WAN grid (2 clients per Table-I region), per backend x
+compression:
+
+* ``hier``     — per-region relay aggregation with compression on the
+  relay -> hub WAN hop only (the LAN reduce stays exact);
+* ``fedbuff``  — buffered async with client-update compression on the
+  backend channel itself (full client -> server path).
+
+Plus a *fidelity* study with real tensors: hierarchical relays with QSGD
+(error feedback per region) must land within quantisation tolerance of
+flat synchronous FedAvg after several rounds, with the per-region
+residual bounded (error feedback does not accumulate).
+
+Emits ``benchmarks/out/fig7_compression_wan.json`` and validates the
+headline claims: qsgd on the hier WAN hop improves round throughput over
+uncompressed hier for gRPC, and hier+qsgd == flat FedAvg within
+tolerance.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs.paper_tiers import TIERS
+from repro.core import (Fabric, ObjectStore, TensorPayload, VirtualPayload,
+                        make_backend, make_env)
+from repro.core.netsim import NCAL
+from repro.fl.async_strategies import FedBuffStrategy, HierarchicalStrategy
+from repro.fl.client import FLClient
+from repro.fl.scheduler import FLScheduler
+from repro.fl.server import FLServer
+
+N_CLIENTS = 14
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "fig7_compression_wan.json")
+
+
+def _make_deployment(backend_name, tier, compression=None):
+    env = make_env("geo_distributed", N_CLIENTS)
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    clients = [
+        FLClient(h.host_id,
+                 make_backend(backend_name, env, fabric, h.host_id,
+                              store=store, compression=compression),
+                 sim_train_s=tier.train_s("geo_distributed"))
+        for h in env.clients]
+    server_backend = make_backend(backend_name, env, fabric, "server",
+                                  store=store)
+    return server_backend, clients
+
+
+def _run_cell(mode, backend_name, tier, compression, max_agg):
+    spec = None if compression == "none" else compression
+    if mode == "hier":
+        # compression rides the relay WAN hop inside the strategy
+        sb, clients = _make_deployment(backend_name, tier)
+        strategy = HierarchicalStrategy(wan_compression=spec)
+    else:  # fedbuff: the client backends' channels compress the updates
+        sb, clients = _make_deployment(backend_name, tier, compression=spec)
+        strategy = FedBuffStrategy(buffer_k=max(2, N_CLIENTS // 2),
+                                   staleness_exponent=0.5)
+    sched = FLScheduler(sb, clients, strategy, local_steps=1)
+    rep = sched.run(VirtualPayload(tier.payload_bytes, tag="fig7"),
+                    max_aggregations=max_agg)
+    return {"aggregations_per_hour": rep.aggregations_per_hour,
+            "updates_per_hour": rep.client_updates_per_hour,
+            "sim_time_s": rep.sim_time,
+            "n_aggregations": rep.n_aggregations}
+
+
+# ---------------------------------------------------------------------------
+# fidelity: hier + qsgd (error feedback) vs flat synchronous FedAvg
+# ---------------------------------------------------------------------------
+
+N_FEATURES = 8 * 8 * 3
+N_CLASSES = 4
+
+
+def _linear_train_fn():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def train_fn(params, batch):
+        def loss_fn(p):
+            x = batch["images"].reshape(batch["images"].shape[0], -1)
+            logits = x @ p["w"] + p["b"]
+            onehot = jax.nn.one_hot(batch["labels"], N_CLASSES)
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot,
+                                     axis=-1))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return jax.tree.map(lambda p, g: p - 0.1 * g, params, grads), loss
+    return train_fn
+
+
+def _live_deployment(n):
+    from repro.data import make_silo_datasets
+    env = make_env("geo_distributed", n)
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    silos = make_silo_datasets(n, kind="image", examples_per_silo=24,
+                               num_classes=N_CLASSES, image_size=8, seed=0)
+    clients = [FLClient(h.host_id,
+                        make_backend("grpc", env, fabric, h.host_id,
+                                     store=store),
+                        dataset=silos[i], train_fn=_linear_train_fn(),
+                        batch_size=8, sim_train_s=5.0, seed=i)
+               for i, h in enumerate(env.clients)]
+    sb = make_backend("grpc", env, fabric, "server", store=store)
+    return sb, clients
+
+
+def _init_params():
+    import jax.numpy as jnp
+    return {"w": jnp.zeros((N_FEATURES, N_CLASSES), jnp.float32),
+            "b": jnp.zeros((N_CLASSES,), jnp.float32)}
+
+
+def _fidelity(rounds):
+    """Returns (max |hier_qsgd - flat|, quantisation tolerance, residual
+    inf-norms per round-ish probe)."""
+    n = 8
+    sb, clients = _live_deployment(n)
+    server = FLServer(sb, clients, local_steps=2)
+    params = _init_params()
+    for _ in range(rounds):
+        server.run_round(TensorPayload(params))
+        params = server.global_params
+    flat_params = params
+
+    sb2, clients2 = _live_deployment(n)
+    strat = HierarchicalStrategy(staleness_exponent=0.0,
+                                 wan_compression="qsgd")
+    sched = FLScheduler(sb2, clients2, strat, local_steps=2)
+    sched.run(TensorPayload(_init_params()), max_aggregations=rounds)
+
+    err = max(float(np.max(np.abs(np.asarray(sched.global_params[k])
+                                  - np.asarray(flat_params[k]))))
+              for k in flat_params)
+    # per-element quantisation step <= max|block| / 127; the relay
+    # partials are O(update magnitude), so tolerate a few steps of the
+    # largest update coordinate (error feedback keeps multi-round drift
+    # in this band instead of accumulating rounds * step)
+    init = _init_params()
+    upd = max(float(np.max(np.abs(np.asarray(flat_params[k])
+                                  - np.asarray(init[k]))))
+              for k in flat_params)
+    tol = max(8.0 * upd / 127.0, 1e-4)
+    residuals = [float(np.max(np.abs(np.asarray(s.error))))
+                 for s in strat._wan_stage._state.values()]
+    return err, tol, upd, residuals
+
+
+def run(verbose=True, quick=False):
+    tier = TIERS["big"]
+    backends = ["grpc", "grpc+s3"]
+    compressions = ["none", "qsgd"] if quick else ["none", "qsgd",
+                                                   "topk:0.05"]
+    modes = ["hier"] if quick else ["hier", "fedbuff"]
+    max_agg = 3 if quick else 5
+
+    rows, report = [], {"n_clients": N_CLIENTS, "tier": tier.name,
+                        "cells": []}
+    for mode in modes:
+        for backend_name in backends:
+            cell = {"mode": mode, "backend": backend_name,
+                    "compressions": {}}
+            for comp in compressions:
+                m = _run_cell(mode, backend_name, tier, comp, max_agg)
+                cell["compressions"][comp] = m
+                rows.append({
+                    "name": f"fig7/{mode}/{backend_name}/{comp}",
+                    "round_s": 3600.0 / max(m["aggregations_per_hour"],
+                                            1e-9),
+                    "agg_per_h": m["aggregations_per_hour"],
+                    "updates_per_h": m["updates_per_hour"],
+                })
+            report["cells"].append(cell)
+            if verbose:
+                parts = "  ".join(
+                    f"{c}={cell['compressions'][c]['aggregations_per_hour']:8.1f}/h"
+                    for c in compressions)
+                print(f"[fig7] {mode:8s} {backend_name:9s}  {parts}")
+
+    err, tol, upd, residuals = _fidelity(rounds=2 if quick else 3)
+    report["fidelity"] = {"max_abs_err": err, "tolerance": tol,
+                          "max_abs_update": upd,
+                          "ef_residual_inf_norms": residuals}
+    rows.append({"name": "fig7/fidelity/hier_qsgd_vs_flat",
+                 "max_abs_err": err, "tolerance": tol})
+    if verbose:
+        print(f"[fig7] fidelity: max|hier+qsgd - flat fedavg| = {err:.2e} "
+              f"(tol {tol:.2e}); EF residual inf-norms "
+              f"{['%.2e' % r for r in residuals]}")
+
+    report["validation"] = _validate(report, verbose)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    if verbose:
+        print(f"[fig7] JSON report -> {OUT_PATH}")
+    return rows
+
+
+def _validate(report, verbose):
+    """Headline claims: (1) qsgd on the hier relay WAN hop beats
+    uncompressed hier round throughput for gRPC; (2) hier+qsgd matches
+    flat FedAvg within quantisation tolerance, with the error-feedback
+    residual bounded by the same band (not accumulating)."""
+    wins = []
+    for cell in report["cells"]:
+        if cell["mode"] != "hier":
+            continue
+        base = cell["compressions"]["none"]["aggregations_per_hour"]
+        comp = cell["compressions"]["qsgd"]["aggregations_per_hour"]
+        if comp > base:
+            wins.append(cell["backend"])
+    assert "grpc" in wins, (
+        f"fig7: qsgd on the hier WAN hop did not improve gRPC round "
+        f"throughput (wins: {wins})")
+    fid = report["fidelity"]
+    assert fid["max_abs_err"] <= fid["tolerance"], (
+        f"fig7: hier+qsgd drifted {fid['max_abs_err']:.3e} from flat "
+        f"FedAvg (tolerance {fid['tolerance']:.3e})")
+    assert all(r <= fid["tolerance"] for r in
+               fid["ef_residual_inf_norms"]), (
+        f"fig7: error-feedback residual unbounded: "
+        f"{fid['ef_residual_inf_norms']} > {fid['tolerance']:.3e}")
+    if verbose:
+        print(f"[fig7] validation: hier qsgd > none for {wins}; "
+              f"fidelity within tolerance")
+    return {"hier_qsgd_beats_none": sorted(wins),
+            "fidelity_within_tolerance": True}
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -25,7 +25,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_kernels, crosspod_sync,
                             fig2_grpc_concurrency, fig4a_p2p_latency,
                             fig4b_concurrency_speedup, fig4c_broadcast_memory,
-                            fig5_end_to_end, fig6_async_vs_sync, table1_links)
+                            fig5_end_to_end, fig6_async_vs_sync,
+                            fig7_compression_wan, table1_links)
 
     modules = [
         ("table1", table1_links),
@@ -35,6 +36,7 @@ def main(argv=None) -> None:
         ("fig4c", fig4c_broadcast_memory),
         ("fig5", fig5_end_to_end),
         ("fig6", fig6_async_vs_sync),
+        ("fig7", fig7_compression_wan),
         ("kernels", bench_kernels),
         ("crosspod", crosspod_sync),
     ]

@@ -1,0 +1,204 @@
+"""Payload-level codec adapters for the wire pipeline (core/channel.py).
+
+A codec turns one payload into a smaller one and back, *invertibly*: the
+forward pass returns an ``info`` dict carrying everything the receiver
+needs to reconstruct the original (tree structure, original byte size),
+which the Channel records on the wire as stage provenance. Error-feedback
+state (the QSGD/top-k residual) stays on the *sender* — the decode side is
+stateless, so any receiver can decode any wire.
+
+Codecs handle all three payload flavours:
+
+* ``TensorPayload``  — real compression through the Pallas kernels
+  (qsgd int8 blocks / top-k sparsification), optional error feedback;
+* ``VirtualPayload`` — the byte count is scaled by the codec's wire ratio
+  (paper-scale benchmark runs: identical accounting, no memcpy);
+* ``PackedPayload``  — already compressed: passed through untouched.
+
+Simulated codec throughputs are accelerator-class (the quantize kernel is
+bandwidth-bound, far from the protobuf serializer's 0.16 GB/s): they make
+compression cheap but not free, so the win on a LAN-class hop can vanish
+while the WAN hop win stays large — which is the point of Fig 7.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.compression.qsgd import QuantState, qsgd_compress, qsgd_decompress
+from repro.compression.topk import topk_compress, topk_decompress
+from repro.core.message import (PackedPayload, TensorPayload, VirtualPayload)
+from repro.kernels import ops
+
+GB = 1024 ** 3
+
+
+def tree_meta(tree):
+    """Picklable structure record: (treedef, shapes, dtypes)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef, [np.shape(l) for l in leaves],
+            [np.asarray(l).dtype for l in leaves])
+
+
+def unflatten_from_meta(vec, meta):
+    """Inverse of ``ops.flatten_pytree`` driven by a ``tree_meta`` record
+    (the closure returned by flatten_pytree cannot travel on a wire)."""
+    treedef, shapes, dtypes = meta
+    out, off = [], 0
+    vec = np.asarray(vec)
+    for shape, dt in zip(shapes, dtypes):
+        size = int(np.prod(shape)) if shape else 1
+        out.append(vec[off:off + size].reshape(shape).astype(dt))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+class BaseCodec:
+    """compress(payload, state) -> (payload', new_state, info);
+    decompress(payload', info) -> payload. ``info`` is wire provenance."""
+
+    name = "codec"
+    enc_bw = 2.0 * GB  # simulated compress throughput (bytes/s of input)
+    dec_bw = 4.0 * GB  # simulated decompress throughput
+
+    def signature(self) -> str:
+        raise NotImplementedError
+
+    def ratio(self) -> float:
+        """Wire bytes per input byte (virtual-payload scaling)."""
+        raise NotImplementedError
+
+    def enc_time(self, orig_nbytes: int) -> float:
+        return orig_nbytes / self.enc_bw
+
+    def dec_time(self, orig_nbytes: int) -> float:
+        return orig_nbytes / self.dec_bw
+
+    # -- shared plumbing -------------------------------------------------
+    def compress(self, payload, state=None) -> Tuple[object, object, Optional[dict]]:
+        if isinstance(payload, PackedPayload):
+            return payload, state, None  # already compressed: skip stage
+        if isinstance(payload, VirtualPayload):
+            nb = int(round(payload.nbytes * self.ratio()))
+            out = VirtualPayload(nb, tag=f"{payload.tag}|{self.name}")
+            return out, state, {"codec": self.name, "virtual": True,
+                                "orig_nbytes": payload.nbytes,
+                                "orig_tag": payload.tag}
+        if isinstance(payload, TensorPayload):
+            return self._compress_tree(payload, state)
+        raise TypeError(f"{self.name}: cannot compress {type(payload)}")
+
+    def decompress(self, payload, info):
+        if info is None:
+            return payload
+        if info.get("virtual"):
+            return VirtualPayload(info["orig_nbytes"],
+                                  tag=info.get("orig_tag", ""))
+        return self._decompress_tree(payload, info)
+
+    def init_state(self, payload):
+        """Fresh error-feedback state for a tensor payload (None = EF off
+        or payload not a tensor)."""
+        if isinstance(payload, TensorPayload):
+            flat, _ = ops.flatten_pytree(payload.tree)
+            return QuantState(error=np.zeros_like(np.asarray(flat)))
+        return None
+
+    def state_matches(self, state, payload) -> bool:
+        """Does an existing residual fit this payload? (A peer stream can
+        legally carry differently-shaped messages; feedback only composes
+        across same-shaped ones.)"""
+        if state is None or not isinstance(payload, TensorPayload):
+            return False
+        elems = sum(int(np.prod(np.shape(l)))
+                    for l in jax.tree.leaves(payload.tree))
+        return int(np.size(state.error)) == elems
+
+
+class QsgdCodec(BaseCodec):
+    """QSGD int8 block quantisation (Alistarh et al. 2017) behind the
+    Pallas quantize kernel. Wire = int8 values + one f32 scale per block."""
+
+    name = "qsgd"
+
+    def __init__(self, block: int = 256):
+        self.block = int(block)
+
+    def signature(self) -> str:
+        return f"qsgd(b{self.block})"
+
+    def ratio(self) -> float:
+        # f32 -> int8 (1/4) plus a 4-byte scale per `block` elements
+        return 0.25 * (1.0 + 4.0 / self.block)
+
+    def _compress_tree(self, payload: TensorPayload, state):
+        packed, new_state, _ = qsgd_compress(payload.tree, state,
+                                             block=self.block)
+        packed = jax.tree.map(np.asarray, packed)
+        out = PackedPayload(packed)
+        info = {"codec": self.name, "orig_nbytes": payload.nbytes,
+                "tree_meta": tree_meta(payload.tree)}
+        return out, new_state, info
+
+    def _decompress_tree(self, payload: PackedPayload, info):
+        flat = ops.dequantize_flat(payload.packed)
+        return TensorPayload(unflatten_from_meta(flat, info["tree_meta"]))
+
+
+class TopkCodec(BaseCodec):
+    """Magnitude top-k sparsification (Wangni et al. 2018). Wire = int32
+    indices + f32 values of the k largest-|.| coordinates."""
+
+    name = "topk"
+
+    def __init__(self, k_frac: float = 0.05):
+        self.k_frac = float(k_frac)
+
+    def signature(self) -> str:
+        return f"topk(k{self.k_frac:g})"
+
+    def ratio(self) -> float:
+        return 2.0 * self.k_frac  # (4B idx + 4B val) per kept f32 element
+
+    def _compress_tree(self, payload: TensorPayload, state):
+        sparse, new_state, _ = topk_compress(payload.tree, self.k_frac, state)
+        sparse = jax.tree.map(np.asarray, sparse)
+        out = PackedPayload(sparse)
+        info = {"codec": self.name, "orig_nbytes": payload.nbytes,
+                "tree_meta": tree_meta(payload.tree)}
+        return out, new_state, info
+
+    def _decompress_tree(self, payload: PackedPayload, info):
+        p = payload.packed
+        flat = np.zeros(int(p["n"]), np.asarray(p["vals"]).dtype)
+        flat[np.asarray(p["idx"])] = np.asarray(p["vals"])
+        return TensorPayload(unflatten_from_meta(flat, info["tree_meta"]))
+
+
+def make_codec(spec) -> Optional[BaseCodec]:
+    """Parse a compression spec: None/'none' -> None, 'qsgd'/'qsgd:128'
+    (block), 'topk'/'topk:0.1' (kept fraction), or a BaseCodec instance."""
+    if spec is None or isinstance(spec, BaseCodec):
+        return spec
+    spec = str(spec).strip().lower()
+    if spec in ("", "none"):
+        return None
+    name, _, arg = spec.partition(":")
+    if name == "qsgd":
+        return QsgdCodec(block=int(arg)) if arg else QsgdCodec()
+    if name == "topk":
+        return TopkCodec(k_frac=float(arg)) if arg else TopkCodec()
+    raise KeyError(f"unknown compression spec '{spec}' "
+                   "(use none | qsgd[:block] | topk[:frac])")
+
+
+CODECS = {"qsgd": QsgdCodec, "topk": TopkCodec}
+
+
+def codec_for(name: str) -> BaseCodec:
+    """Default-parameter codec instance for decode-side inversion (all
+    decode parameters ride in the wire's stage info, so defaults are
+    fine)."""
+    return CODECS[name]()

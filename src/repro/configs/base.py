@@ -201,3 +201,12 @@ class FLConfig:
     buffer_k: int = 0  # fedbuff merge buffer; 0 -> max(2, num_clients // 2)
     staleness_exponent: float = 0.5  # alpha in the (1+s)^-alpha discount
     max_staleness: int = 0  # discard updates staler than this; 0 = keep all
+    # FedAsync-style adaptivity: scale alpha by each update's percentile
+    # rank among observed staleness (fl/async_strategies.py)
+    staleness_adaptive: bool = False
+
+    # wire pipeline (core/channel.py): gradient compression on the client
+    # update path — and, in hier mode, on the relay WAN hop only (the LAN
+    # reduce stays exact) — plus chunked send pipelining
+    compression: str = "none"  # none | qsgd[:block] | topk[:frac]
+    chunk_mb: float = 0.0  # 0 = unchunked wires

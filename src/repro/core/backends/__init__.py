@@ -47,14 +47,23 @@ BACKEND_NAMES = ["mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc",
 
 
 def make_backend(name: str, env: Environment, fabric: Fabric, host_id: str,
-                 store=None, **kw):
+                 store=None, *, compression=None, chunk_mb: float = 0.0,
+                 **kw):
+    """``compression``/``chunk_mb`` configure the backend's wire stack
+    (core/channel.py): 'qsgd[:block]' / 'topk[:frac]' insert a
+    CompressStage, chunk_mb > 0 a ChunkStage. Defaults reproduce the
+    plain [SerializeStage] stack bit-for-bit."""
     if name == "grpc+s3":
-        return GrpcS3Backend(env, fabric, host_id, store, **kw)
+        return GrpcS3Backend(env, fabric, host_id, store,
+                             compression=compression, chunk_mb=chunk_mb,
+                             **kw)
     if name == "auto":
         from repro.core.backends.auto import AutoBackend
-        return AutoBackend(env, fabric, host_id, store, **kw)
+        return AutoBackend(env, fabric, host_id, store,
+                           compression=compression, chunk_mb=chunk_mb, **kw)
     if name in POLICIES:
-        return CommBackend(POLICIES[name], env, fabric, host_id, store)
+        return CommBackend(POLICIES[name], env, fabric, host_id, store,
+                           compression=compression, chunk_mb=chunk_mb)
     raise KeyError(f"unknown backend '{name}'; options: {BACKEND_NAMES}")
 
 

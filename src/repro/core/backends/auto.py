@@ -18,15 +18,22 @@ SMALL_PAYLOAD = 10 * 1024 * 1024  # paper: <10 MB -> pure gRPC
 class AutoBackend:
     name = "auto"
 
-    def __init__(self, env, fabric, host_id, store=None, **kw):
+    def __init__(self, env, fabric, host_id, store=None, *,
+                 compression=None, chunk_mb: float = 0.0, **kw):
         from repro.core.backends import POLICIES
         self.env = env
         self.host_id = host_id
         self.store = store
-        self.grpc = CommBackend(POLICIES["grpc"], env, fabric, host_id)
+        # every routed backend carries the same wire-stack configuration;
+        # decode follows the wire's recorded stages, so mixed routes stay
+        # coherent
+        self.grpc = CommBackend(POLICIES["grpc"], env, fabric, host_id,
+                                compression=compression, chunk_mb=chunk_mb)
         self.membuff = CommBackend(POLICIES["mpi_mem_buff"], env, fabric,
-                                   host_id)
-        self.s3 = (GrpcS3Backend(env, fabric, host_id, store, **kw)
+                                   host_id, compression=compression,
+                                   chunk_mb=chunk_mb)
+        self.s3 = (GrpcS3Backend(env, fabric, host_id, store,
+                                 compression=compression, **kw)
                    if store is not None and env.name != "lan" else None)
         self.endpoint = self.grpc.endpoint
         self.decisions: list = []

@@ -28,11 +28,14 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+from repro.core.channel import Encoded, make_channel
 from repro.core.message import FLMessage
 from repro.core.netsim import LAN_IB, LAN_TCP, Environment, Region, Transfer, \
     simulate_transfers
-from repro.core.serialization import SERIALIZERS, WireData, decode_wire
+from repro.core.serialization import SERIALIZERS, WireData
 from repro.core.transport import Fabric
+
+MB = 1024 ** 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +75,9 @@ class SendHandle:
 
 class CommBackend:
     def __init__(self, policy: BackendPolicy, env: Environment,
-                 fabric: Fabric, host_id: str, store=None):
+                 fabric: Fabric, host_id: str, store=None, *,
+                 compression=None, chunk_mb: float = 0.0,
+                 error_feedback: bool = True):
         self.policy = policy
         self.env = env
         self.fabric = fabric
@@ -80,7 +85,21 @@ class CommBackend:
         self.store = store
         self.endpoint = fabric.endpoints.get(host_id) or fabric.register(host_id)
         self.serializer = SERIALIZERS[policy.serializer]
+        # the wire pipeline every send/recv path drives (core/channel.py);
+        # default stack = [SerializeStage] -> pre-stack behaviour, exactly
+        self.channel = make_channel(policy.serializer,
+                                    compression=compression,
+                                    chunk_bytes=int(chunk_mb * MB),
+                                    error_feedback=error_feedback)
         self._ser_busy_until = 0.0  # sender serializer busy-line (isend)
+
+    def _encode(self, msg: FLMessage) -> Encoded:
+        """Stack-encode one message's payload (256 B for metadata-only,
+        which still occupies the serializer for its header's worth)."""
+        if msg.payload is None:
+            return Encoded(wire=WireData(nbytes=256),
+                           cost_s=self.serializer.ser_time(256))
+        return self.channel.encode(msg.payload, peer=msg.receiver)
 
     # ------------------------------------------------------------------
     @property
@@ -113,22 +132,35 @@ class CommBackend:
         """Non-blocking send: schedules delivery, returns a completion
         handle immediately. Multiple in-flight isends interleave (subject
         to the serializer busy-line)."""
-        wire = self.serializer.serialize(msg.payload) if msg.payload is not None \
-            else WireData(nbytes=256)
-        ser_t = self.serializer.ser_time(wire.nbytes)
+        enc = self._encode(msg)
+        ser_t = enc.cost_s
         mem = self.endpoint.memory
-        alloc = (wire.nbytes if (self.policy.per_send_copy and msg.payload
-                                 is not None) else 0) + self.policy.staging_bytes
+        alloc = (enc.wire.nbytes if (self.policy.per_send_copy and msg.payload
+                                     is not None) else 0) \
+            + self.policy.staging_bytes + enc.extra_alloc
         ser_start = self._ser_slot(now, ser_t)
         mem.alloc(alloc, ser_start)
         region = self._link_region(msg.receiver)
         start = ser_start + ser_t
-        dur = self._overhead(region) + region.latency \
-            + wire.nbytes / region.conn_cap(self.policy.conns_per_transfer)
-        arrive = self.fabric.deliver(msg, wire, start, dur)
+        if enc.chunks:
+            # pipelined chunks: chunk i's transfer starts once it is
+            # encoded AND the link is free (overlaps encode with network)
+            rate = region.conn_cap(self.policy.conns_per_transfer)
+            base = self._overhead(region) + region.latency
+            link_free, arrivals = ser_start, []
+            for nb, ready_off in enc.chunks:
+                dep = max(ser_start + ready_off, link_free)
+                link_free = dep + nb / rate
+                arrivals.append(base + link_free)
+            arrive = self.fabric.deliver_chunked(msg, enc.wire, arrivals)
+        else:
+            dur = self._overhead(region) + region.latency \
+                + enc.wire.nbytes / region.conn_cap(
+                    self.policy.conns_per_transfer)
+            arrive = self.fabric.deliver(msg, enc.wire, start, dur)
         mem.free(alloc, arrive)
         return SendHandle(msg=msg, issued=now, start=start, inbox_t=arrive,
-                          arrive=arrive, nbytes=wire.nbytes)
+                          arrive=arrive, nbytes=enc.wire.nbytes)
 
     def send(self, msg: FLMessage, now: float) -> Tuple[float, float]:
         """Blocking-semantics wrapper over ``isend`` (legacy API)."""
@@ -136,20 +168,19 @@ class CommBackend:
         return h.start, h.arrive
 
     # ------------------------------------------------------------------
-    def _broadcast_transfers(self, msgs, now) -> Tuple[list, list, float]:
-        """Common prep: serialize (sequential or parallel), build transfers."""
-        wires, ser_done = [], now
+    def _broadcast_transfers(self, msgs, now) -> Tuple[list, list]:
+        """Common prep: stack-encode (sequential or parallel), build
+        transfers. Returns ([(Encoded, encode_done_t)], transfers)."""
+        encs, ser_done = [], now
         for msg in msgs:
-            wire = self.serializer.serialize(msg.payload) \
-                if msg.payload is not None else WireData(nbytes=256)
-            t = self.serializer.ser_time(wire.nbytes)
+            enc = self._encode(msg)
             if self.policy.ser_parallel:
-                ser_done = max(ser_done, now + t)
-                start = now + t
+                enc_done = now + enc.cost_s
+                ser_done = max(ser_done, enc_done)
             else:
-                start = ser_done + t
-                ser_done = start
-            wires.append((wire, start))
+                enc_done = ser_done + enc.cost_s
+                ser_done = enc_done
+            encs.append((enc, enc_done))
         transfers = []
         n_active = len(msgs)
         # MPI-style multithreaded progress engines lose efficiency on LAN
@@ -161,38 +192,49 @@ class CommBackend:
         if penalty > 1.0:
             import dataclasses as _dc
             src = _dc.replace(src, uplink=src.uplink / penalty)
-        for msg, (wire, start) in zip(msgs, wires):
+        for msg, (enc, enc_done) in zip(msgs, encs):
             region = self._link_region(msg.receiver)
             eff_region = Region(region.name,
                                 region.bw_single / penalty,
                                 region.bw_multi / penalty, region.latency)
+            # chunk pipelining overlaps encode with transfer on the isend
+            # path only: the fluid solver moves whole wires with no
+            # inter-chunk dependencies, so dispatching a broadcast at
+            # first-chunk-ready could finish a transfer before its encode
+            # completes — broadcasts keep whole-wire (encode-complete)
+            # dispatch
             transfers.append(Transfer(
-                start=start + self._overhead(region),
+                start=enc_done + self._overhead(region),
                 src=src,
                 dst=self.env.host(msg.receiver),
-                nbytes=wire.nbytes,
+                nbytes=enc.wire.nbytes,
                 conns=self.policy.conns_per_transfer,
                 link_region=eff_region, tag=f"msg{msg.msg_id}"))
-        return wires, transfers, ser_done
+        return encs, transfers
 
     def broadcast(self, msgs: Sequence[FLMessage], now: float):
         """Concurrent dispatch (the FL server's global-model distribution)."""
-        wires, transfers, _ = self._broadcast_transfers(msgs, now)
+        encs, transfers = self._broadcast_transfers(msgs, now)
         mem = self.endpoint.memory
         allocs = []
-        for msg, (wire, start) in zip(msgs, wires):
-            a = (wire.nbytes if (self.policy.per_send_copy and msg.payload
-                                 is not None) else 0) + self.policy.staging_bytes
-            mem.alloc(a, start)
+        for msg, (enc, start) in zip(msgs, encs):
+            a = (enc.wire.nbytes if (self.policy.per_send_copy and msg.payload
+                                     is not None) else 0) \
+                + self.policy.staging_bytes + enc.extra_alloc
+            # buffered from *dispatch*: issuing N concurrent sends
+            # materialises N request buffers immediately (memory ∝
+            # concurrency, Fig 2 bottom / Fig 4c), even while the
+            # serializer busy-line is still draining them onto the wire
+            mem.alloc(a, now)
             allocs.append(a)
         simulate_transfers(transfers)
         arrives = []
-        for msg, (wire, _), tr, a in zip(msgs, wires, transfers, allocs):
+        for msg, (enc, _), tr, a in zip(msgs, encs, transfers, allocs):
             self.fabric.endpoints[msg.receiver].inbox.append(
-                _delivery(msg, wire, tr.finish))
+                _delivery(msg, enc.wire, tr.finish))
             mem.free(a, tr.finish)
             arrives.append(tr.finish)
-        return max(w[1] for w in wires), arrives
+        return max(e[1] for e in encs), arrives
 
     def sequential_broadcast(self, msgs: Sequence[FLMessage], now: float):
         """One at a time (Fig 4b baseline): each isend waits for the
@@ -212,18 +254,20 @@ class CommBackend:
             ready = d.arrive_time
             msg = d.msg
             if d.wire is not None and d.wire.nbytes > 256:
-                ready += self.serializer.deser_time(d.wire.nbytes)
+                # the channel inverts whatever stages the wire records
+                # (codec-aware: AUTO/mixed fleets decode correctly)
+                payload, dec_s = self.channel.decode(d.wire)
+                ready += dec_s
                 if msg.payload is None or d.wire.buffers is not None:
-                    payload = decode_wire(d.wire, self.serializer)
                     msg = dataclasses.replace(msg, payload=payload)
             out.append((msg, ready))
         return out
 
     def next_arrival(self, after: float = float("-inf")) -> Optional[float]:
-        """Non-blocking peek: earliest pending delivery time strictly
-        after ``after`` (event-loop hook; returns None when idle)."""
-        ts = [d.arrive_time for d in self.endpoint.inbox
-              if d.arrive_time > after]
+        """Non-blocking peek: earliest pending message-complete time
+        strictly after ``after`` (event-loop hook; returns None when
+        idle). Chunked wires count once, at their last chunk."""
+        ts = [t for t in self.endpoint.pending_times() if t > after]
         return min(ts) if ts else None
 
     # ------------------------------------------------------------------

@@ -27,7 +27,7 @@ from repro.core.backends.base import (BackendPolicy, CommBackend, SendHandle,
 from repro.core.message import FLMessage
 from repro.core.netsim import simulate_transfers
 from repro.core.objectstore import S3_MAX_PARTS, ObjectStore
-from repro.core.serialization import SERIALIZERS, WireData, decode_wire
+from repro.core.serialization import SERIALIZERS, WireData
 
 GRPC_S3_POLICY = BackendPolicy(
     name="grpc+s3", serializer="generic", conns_per_transfer=S3_MAX_PARTS,
@@ -37,8 +37,16 @@ GRPC_S3_POLICY = BackendPolicy(
 
 class GrpcS3Backend(CommBackend):
     def __init__(self, env, fabric, host_id, store: ObjectStore,
-                 parts: int = S3_MAX_PARTS, presign: bool = True):
-        super().__init__(GRPC_S3_POLICY, env, fabric, host_id, store)
+                 parts: int = S3_MAX_PARTS, presign: bool = True,
+                 compression=None, chunk_mb: float = 0.0):
+        # chunk_mb accepted for interface parity but not stacked:
+        # multipart PUT/GET *is* this backend's chunk pipelining.
+        # Error feedback is off: the content-addressed cache re-serves a
+        # stored wire for identical payloads, which is incompatible with
+        # a stateful feedback loop (the residual would silently freeze on
+        # cache hits while other backends kept refining)
+        super().__init__(GRPC_S3_POLICY, env, fabric, host_id, store,
+                         compression=compression, error_feedback=False)
         assert store is not None, "grpc+s3 requires an object store"
         self.parts = parts
         self.presign = presign
@@ -46,27 +54,36 @@ class GrpcS3Backend(CommBackend):
         self.meta_serializer = SERIALIZERS["protobuf"]  # control channel
 
     # -- helpers ---------------------------------------------------------
+    def _fingerprint(self, msg: FLMessage):
+        """Content identity of the stored object = payload x wire stack:
+        the same model compressed differently is a different wire, so the
+        cache keys on the *post-compression* wire it would produce."""
+        return (msg.payload.fingerprint(), self.channel.signature())
+
     def _upload(self, msg: FLMessage, now: float) -> Tuple[str, float]:
-        """Upload payload if new; returns (key, upload_done_t).
+        """Stack-encode + upload payload if new; returns (key, done_t).
         Repeated sends of the same model reuse the cached key."""
-        fp = msg.payload.fingerprint()
+        fp = self._fingerprint(msg)
         if fp in self._key_cache and self.store.has(self._key_cache[fp][0]):
             key, done = self._key_cache[fp]
             self.store.stats["cache_hits"] += 1
             # the cached upload may still be in flight (concurrent isends
             # of the same model): readers wait for it to land
             return key, max(now, done)
-        wire = self.serializer.serialize(msg.payload)
-        ser_t = self.serializer.ser_time(wire.nbytes)
+        # one shared compression stream for the store (a single object
+        # serves every receiver), hence peer="s3"
+        enc = self.channel.encode(msg.payload, peer="s3")
+        ser_t = enc.cost_s
         ser_start = self._ser_slot(now, ser_t)
         mem = self.endpoint.memory
-        mem.alloc(wire.nbytes + self.policy.staging_bytes, ser_start)
+        alloc = enc.wire.nbytes + self.policy.staging_bytes + enc.extra_alloc
+        mem.alloc(alloc, ser_start)
         key = self.store.content_key(fp, msg.round, msg.sender)
         src = self.env.host(self.host_id)
-        up_t = self.store.put_time(wire.nbytes, src, self.parts)
+        up_t = self.store.put_time(enc.wire.nbytes, src, self.parts)
         done = ser_start + ser_t + up_t
-        self.store.put(key, wire, wire.nbytes, done)
-        mem.free(wire.nbytes + self.policy.staging_bytes, done)
+        self.store.put(key, enc.wire, enc.wire.nbytes, done)
+        mem.free(alloc, done)
         self._key_cache[fp] = (key, done)
         return key, done
 
@@ -91,12 +108,14 @@ class GrpcS3Backend(CommBackend):
         region = self._link_region(msg.receiver)
         arrive_meta = self.fabric.deliver(meta, WireData(nbytes=256), up_done,
                                           self._meta_duration(region))
-        # receiver pulls from S3 after metadata arrives
+        # receiver pulls from S3 after metadata arrives; what moves is the
+        # stored (post-stack, possibly compressed) wire, not the payload
+        wire_nbytes = self.store.size(key)
         dst = self.env.host(msg.receiver)
-        get_t = self.store.get_time(msg.payload_nbytes, dst, self.parts)
+        get_t = self.store.get_time(wire_nbytes, dst, self.parts)
         return SendHandle(msg=msg, issued=now, start=up_done,
                           inbox_t=arrive_meta, arrive=arrive_meta + get_t,
-                          nbytes=msg.payload_nbytes)
+                          nbytes=wire_nbytes)
 
     def broadcast(self, msgs: Sequence[FLMessage], now: float):
         """Single upload + N concurrent multipart downloads."""
@@ -116,7 +135,9 @@ class GrpcS3Backend(CommBackend):
         simulate_transfers(transfers)
         for (msg, meta), tr in zip(metas, transfers):
             obj, _ = self.store.get(meta.metadata["s3_key"])
-            d_t = self.serializer.deser_time(obj.nbytes)
+            d_t = (self.channel.decode_time(obj.wire)
+                   if obj.wire is not None
+                   else self.serializer.deser_time(obj.nbytes))
             self.fabric.endpoints[msg.receiver].inbox.append(
                 _delivery(msg, obj.wire, tr.finish))
             arrives.append(tr.finish + d_t)
@@ -134,12 +155,16 @@ class GrpcS3Backend(CommBackend):
                 ready += attempts * self.store.get_time(obj.nbytes, dst,
                                                         self.parts)
                 if obj.wire is not None:
-                    payload = self.serializer.deserialize(obj.wire)
-                    ready += self.serializer.deser_time(obj.nbytes)
+                    # decode by the wire's recorded stages, not this
+                    # backend's serializer: the object may have been
+                    # produced by a different codec (AUTO routing) or
+                    # carry a compression stage
+                    payload, dec_s = self.channel.decode(obj.wire)
+                    ready += dec_s
                     msg = dataclasses.replace(msg, payload=payload)
             elif d.wire is not None and d.wire.nbytes > 256:
-                ready += self.serializer.deser_time(d.wire.nbytes)
-                payload = decode_wire(d.wire, self.serializer)
+                payload, dec_s = self.channel.decode(d.wire)
+                ready += dec_s
                 msg = dataclasses.replace(msg, payload=payload)
             out.append((msg, ready))
         return out

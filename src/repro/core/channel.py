@@ -1,0 +1,246 @@
+"""ChannelStack: the composable wire pipeline every backend drives.
+
+A ``Channel`` owns an ordered stack of ``WireStage`` objects and exposes a
+single ``encode`` / ``decode`` pair. Backends no longer call serializers
+directly — the three formerly copy-pasted serialize paths
+(``CommBackend.isend``, ``CommBackend._broadcast_transfers``,
+``GrpcS3Backend._upload``) all drive the same stack, which is the
+insertion point the repo lacked for gradient compression and chunked
+pipelining (paper: compression is orthogonal to backend choice, QSGD /
+Alistarh et al. 2017; survey arXiv:2405.20431 frames transport and
+compression as separable, composable layers).
+
+Stages and the domains they act on:
+
+* ``CompressStage``   (payload domain) — wraps a ``compression.stages``
+  codec (qsgd / topk) with per-peer error-feedback state. Quantisation
+  needs tensor semantics (and the EF residual), so it transforms the
+  *payload* before serialization; byte-level codecs (zlib-family) would
+  instead layer in the wire domain. Charges simulated codec time plus the
+  materialised compressed buffer's exact bytes.
+* ``SerializeStage``  (payload -> wire) — the per-backend serializer
+  (copy vs zero-copy view); charges the serializer's calibrated
+  throughput on the bytes it actually writes (post-compression).
+* ``ChunkStage``      (wire domain) — splits large wires into fixed-size
+  chunks so encode overlaps the network transfer; the transport delivers
+  chunk-granularly (transport.Fabric.deliver_chunked) and backends
+  pipeline chunk i's transfer behind chunk i-1's.
+
+Encode applies payload-domain stages, then the serialize stage, then wire
+stages; decode inverts the provenance recorded on ``WireData.stages``
+right-to-left, so a receiver decodes by *what the wire says was done to
+it*, never by its own configuration (AUTO routing, mixed fleets, and the
+object store all stay coherent). With the default ``[SerializeStage]``
+stack every byte and every simulated second is identical to the
+pre-stack code — regression-tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.serialization import (BaseSerializer, SERIALIZERS, WireData,
+                                      decode_wire)
+
+MB = 1024 ** 2
+
+
+@dataclasses.dataclass
+class Encoded:
+    """Result of one ``Channel.encode``: the final wire plus the stack's
+    itemised simulated-time / memory charges."""
+    wire: WireData
+    cost_s: float  # total sender-side encode time (all stages)
+    extra_alloc: int = 0  # stage-materialised bytes beyond the policy's own
+    # chunk plan: (chunk_nbytes, encode-complete offset from encode start).
+    # None when the wire rides whole.
+    chunks: Optional[List[Tuple[int, float]]] = None
+    charges: List[Tuple[str, float, int]] = dataclasses.field(
+        default_factory=list)  # (stage name, seconds, alloc bytes)
+
+
+class WireStage:
+    """One pipeline stage. ``phase`` orders application on encode:
+    payload-domain stages (0) run before the serialize stage (1), wire
+    stages (2) after. Decode inverts recorded provenance right-to-left."""
+
+    name = "stage"
+    phase = 1
+
+    def signature(self) -> str:
+        return self.name
+
+
+class SerializeStage(WireStage):
+    """payload -> WireData through a calibrated serializer."""
+
+    name = "serialize"
+    phase = 1
+
+    def __init__(self, serializer: BaseSerializer):
+        self.serializer = serializer
+
+    def signature(self) -> str:
+        return self.serializer.name
+
+
+class CompressStage(WireStage):
+    """Payload-domain compression with per-peer error feedback.
+
+    The residual state is keyed by the destination peer so concurrent
+    streams (one per receiver, or one per relay WAN hop) each keep their
+    own unbiased feedback loop; ``peer=None`` uses one shared stream
+    (broadcast / object-store uploads, where one wire serves everyone)."""
+
+    name = "compress"
+    phase = 0
+
+    def __init__(self, codec, *, error_feedback: bool = True):
+        from repro.compression.stages import make_codec
+        self.codec = make_codec(codec)
+        self.error_feedback = error_feedback
+        self._state: dict = {}  # peer -> residual QuantState
+
+    def signature(self) -> str:
+        return self.codec.signature()
+
+    def compress(self, payload, peer):
+        state = self._state.get(peer)
+        if self.error_feedback and not self.codec.state_matches(state,
+                                                                payload):
+            state = self.codec.init_state(payload)  # new/shape-changed
+        out, new_state, info = self.codec.compress(payload, state)
+        if self.error_feedback and new_state is not None:
+            self._state[peer] = new_state
+        return out, info
+
+
+class ChunkStage(WireStage):
+    """Split wires larger than ``chunk_bytes`` into pipelined chunks."""
+
+    name = "chunk"
+    phase = 2
+
+    def __init__(self, chunk_bytes: int):
+        self.chunk_bytes = int(chunk_bytes)
+
+    def signature(self) -> str:
+        return f"chunk({self.chunk_bytes / MB:g}MB)"
+
+    def split(self, nbytes: int) -> Optional[List[int]]:
+        if self.chunk_bytes <= 0 or nbytes <= self.chunk_bytes:
+            return None
+        sizes = [self.chunk_bytes] * (nbytes // self.chunk_bytes)
+        if nbytes % self.chunk_bytes:
+            sizes.append(nbytes % self.chunk_bytes)
+        return sizes
+
+
+class Channel:
+    """One backend's wire pipeline: an ordered WireStage stack driven
+    through a single encode/decode pair."""
+
+    def __init__(self, stages: List[WireStage]):
+        assert any(isinstance(s, SerializeStage) for s in stages), \
+            "a Channel needs a SerializeStage"
+        self.stages = list(stages)
+        self._order = sorted(self.stages, key=lambda s: s.phase)
+        self.serializer = next(s.serializer for s in stages
+                               if isinstance(s, SerializeStage))
+
+    # ------------------------------------------------------------------
+    def signature(self) -> str:
+        """Stable stack identity — the object store's content-addressed
+        cache keys on (payload fingerprint, this), i.e. the
+        post-compression wire."""
+        return "|".join(s.signature() for s in self._order)
+
+    # ------------------------------------------------------------------
+    def encode(self, payload, peer: Optional[str] = None) -> Encoded:
+        """Run the stack forward: payload -> wire (+ itemised charges)."""
+        charges: List[Tuple[str, float, int]] = []
+        infos: List[dict] = []
+        wire: Optional[WireData] = None
+        chunks = None
+        for stage in self._order:
+            if isinstance(stage, CompressStage):
+                orig_nbytes = payload.nbytes
+                payload, info = stage.compress(payload, peer)
+                if info is not None:
+                    charges.append((stage.name,
+                                    stage.codec.enc_time(orig_nbytes),
+                                    payload.nbytes))
+                    infos.append(info)
+            elif isinstance(stage, SerializeStage):
+                wire = stage.serializer.serialize(payload)
+                charges.append((stage.name,
+                                stage.serializer.ser_time(wire.nbytes), 0))
+                infos.append({"stage": "serialize", "codec": wire.codec})
+            elif isinstance(stage, ChunkStage):
+                sizes = stage.split(wire.nbytes)
+                if sizes is not None:
+                    chunks = sizes
+                    infos.append({"stage": "chunk", "chunks": list(sizes)})
+        cost_s = sum(c[1] for c in charges)
+        wire.stages = infos
+        enc = Encoded(wire=wire, cost_s=cost_s,
+                      extra_alloc=sum(c[2] for c in charges),
+                      charges=charges)
+        if chunks is not None:
+            # encode completes proportionally to bytes produced: chunk i
+            # is transferable once its share of the encode work is done
+            cum, plan = 0, []
+            for nb in chunks:
+                cum += nb
+                plan.append((nb, cost_s * cum / wire.nbytes))
+            enc.chunks = plan
+        return enc
+
+    # ------------------------------------------------------------------
+    def _decode_steps(self, wire: WireData):
+        """(callable, seconds) per inverse stage, provenance right-to-left.
+        Legacy bare wires (no provenance) decode exactly as before the
+        stack existed: codec-aware deserialize at the receiver's
+        calibrated throughput."""
+        steps = []
+        infos = wire.stages or [{"stage": "serialize", "codec": wire.codec}]
+        for info in reversed(infos):
+            kind = info.get("stage", "compress")
+            if kind == "chunk":
+                continue  # reassembly is the transport's job (free here)
+            if kind == "serialize":
+                steps.append((lambda p, w=wire: decode_wire(w, self.serializer),
+                              self.serializer.deser_time(wire.nbytes)))
+            else:  # compress
+                from repro.compression.stages import codec_for
+                codec = codec_for(info["codec"])
+                steps.append((lambda p, c=codec, i=info: c.decompress(p, i),
+                              codec.dec_time(info["orig_nbytes"])))
+        return steps
+
+    def decode(self, wire: WireData):
+        """Invert the wire's recorded stages. Returns (payload, cost_s)."""
+        payload = None
+        cost = 0.0
+        for fn, seconds in self._decode_steps(wire):
+            payload = fn(payload)
+            cost += seconds
+        return payload, cost
+
+    def decode_time(self, wire: WireData) -> float:
+        """Decode cost without materialising (planners/broadcast)."""
+        return sum(seconds for _, seconds in self._decode_steps(wire))
+
+
+def make_channel(serializer_name: str, *, compression=None,
+                 chunk_bytes: int = 0,
+                 error_feedback: bool = True) -> Channel:
+    """Standard stack builder: [Compress?] -> Serialize -> [Chunk?]."""
+    from repro.compression.stages import make_codec
+    stages: List[WireStage] = [SerializeStage(SERIALIZERS[serializer_name])]
+    codec = make_codec(compression)
+    if codec is not None:
+        stages.append(CompressStage(codec, error_feedback=error_feedback))
+    if chunk_bytes and chunk_bytes > 0:
+        stages.append(ChunkStage(chunk_bytes))
+    return Channel(stages)

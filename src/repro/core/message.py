@@ -45,15 +45,21 @@ class TensorPayload:
 
 @dataclasses.dataclass
 class PackedPayload:
-    packed: dict  # q/scales/block/orig_len (repro.kernels.ops)
+    """Compressed pytree: either q/scales/block/orig_len (qsgd int8 blocks,
+    repro.kernels.ops) or idx/vals/n (top-k sparsification)."""
+    packed: dict
 
     @property
     def nbytes(self) -> int:
+        if "idx" in self.packed:  # top-k: int32 indices + f32 values
+            return int(np.size(self.packed["idx"])) * 4 + \
+                int(np.size(self.packed["vals"])) * 4
         return int(np.size(self.packed["q"])) + \
             int(np.size(self.packed["scales"])) * 4
 
     def fingerprint(self) -> int:
-        return hash(("packed", self.nbytes, int(self.packed["orig_len"])))
+        orig = self.packed.get("orig_len", self.packed.get("n", 0))
+        return hash(("packed", self.nbytes, int(orig)))
 
 
 @dataclasses.dataclass

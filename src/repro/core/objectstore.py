@@ -70,6 +70,10 @@ class ObjectStore:
     def has(self, key: str) -> bool:
         return key in self._objects
 
+    def size(self, key: str) -> int:
+        """Stored wire bytes (a HEAD request — no data-plane stats)."""
+        return self._objects[key].nbytes
+
     # -- data plane ------------------------------------------------------
     def _maybe_fail(self) -> bool:
         # deterministic pseudo-randomness (no wall clock)

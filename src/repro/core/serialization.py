@@ -38,6 +38,11 @@ class WireData:
     copied: bool = False  # did serialisation allocate a copy?
     obj: Optional[Any] = None  # structure needed to reconstruct
     codec: str = ""  # which serializer produced this wire (decode with same)
+    # stage provenance (core/channel.py): one info dict per WireStage that
+    # shaped this wire, in encode-application order. The receiving Channel
+    # inverts them right-to-left; an empty list means a legacy bare wire
+    # (decode_wire with the receiver's serializer, exactly as before).
+    stages: list = dataclasses.field(default_factory=list)
 
 
 class BaseSerializer:
@@ -127,6 +132,12 @@ class BufferSerializer(BaseSerializer):
                             obj=("tree", treedef,
                                  [(a.shape, a.dtype) for a in arrs]))
         if isinstance(payload, PackedPayload):
+            if "idx" in payload.packed:  # top-k sparse form
+                arrs = [np.asarray(payload.packed["idx"]),
+                        np.asarray(payload.packed["vals"])]
+                return WireData(nbytes=sum(a.nbytes for a in arrs),
+                                buffers=arrs,
+                                obj=("topk", int(payload.packed["n"])))
             arrs = [np.asarray(payload.packed["q"]),
                     np.asarray(payload.packed["scales"])]
             return WireData(nbytes=sum(a.nbytes for a in arrs), buffers=arrs,
@@ -142,6 +153,9 @@ class BufferSerializer(BaseSerializer):
         if kind == "tree":
             _, treedef, _ = wire.obj
             return TensorPayload(jax.tree.unflatten(treedef, wire.buffers))
+        if kind == "topk":
+            return PackedPayload({"idx": wire.buffers[0],
+                                  "vals": wire.buffers[1], "n": wire.obj[1]})
         _, block, orig = wire.obj
         return PackedPayload({"q": wire.buffers[0], "scales": wire.buffers[1],
                               "block": block, "orig_len": orig})

@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 from collections import defaultdict
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.message import FLMessage
 from repro.core.netsim import Environment, Transfer, simulate_transfers
@@ -20,25 +21,41 @@ from repro.core.serialization import WireData
 
 class MemoryMeter:
     """Logical allocation tracker (bytes). alloc/free pairs bracket buffer
-    lifetimes; ``peak`` is what Fig 4c reports."""
+    lifetimes; ``peak`` is what Fig 4c reports.
+
+    Events carry *simulated* timestamps that are routinely issued out of
+    call order (a backend allocs at a future serialize-start and frees at
+    an even-further-future arrival before the next call allocs at an
+    earlier time), so ``peak`` is computed from the time-sorted event
+    timeline — a call-order running maximum both overstates sequential
+    lifetimes that merely *appear* nested in call order and understates
+    genuinely overlapping ones."""
 
     def __init__(self):
         self.current = 0
-        self.peak = 0
-        self.events: List = []  # (time, current) timeline when time known
+        self.events: List = []  # (time, +/- delta bytes) in call order
 
     def alloc(self, nbytes: int, now: float = 0.0):
         self.current += int(nbytes)
-        self.peak = max(self.peak, self.current)
-        self.events.append((now, self.current))
+        self.events.append((float(now), int(nbytes)))
 
     def free(self, nbytes: int, now: float = 0.0):
         self.current -= int(nbytes)
-        self.events.append((now, self.current))
+        self.events.append((float(now), -int(nbytes)))
+
+    @property
+    def peak(self) -> int:
+        """Max concurrent bytes over the time-sorted timeline (stable sort:
+        same-timestamp events keep call order)."""
+        cur = mx = 0
+        for _, delta in sorted(self.events, key=lambda e: e[0]):
+            cur += delta
+            if cur > mx:
+                mx = cur
+        return mx
 
     def reset(self):
         self.current = 0
-        self.peak = 0
         self.events.clear()
 
 
@@ -47,6 +64,12 @@ class Delivery:
     msg: FLMessage
     wire: Optional[WireData]
     arrive_time: float
+    # chunk-granular deliveries (ChunkStage wires): (index, total,
+    # transfer id). Only the last chunk carries the wire; the endpoint
+    # reassembles and releases the message when every chunk has landed.
+    # The transfer id — not the msg_id — is the grouping key, so
+    # retransmitting the same message never wedges two half-sets together.
+    chunk: Optional[tuple] = None
 
 
 class Endpoint:
@@ -56,9 +79,38 @@ class Endpoint:
         self.memory = MemoryMeter()
 
     def pop_ready(self, now: float) -> List[Delivery]:
-        ready = [d for d in self.inbox if d.arrive_time <= now + 1e-12]
-        self.inbox = [d for d in self.inbox if d.arrive_time > now + 1e-12]
+        ready, keep = [], []
+        partial: dict = {}  # transfer id -> chunk deliveries
+        for d in self.inbox:
+            if d.chunk is not None:
+                partial.setdefault(d.chunk[2], []).append(d)
+            elif d.arrive_time <= now + 1e-12:
+                ready.append(d)
+            else:
+                keep.append(d)
+        for ds in partial.values():
+            n_total = ds[0].chunk[1]
+            last = max(d.arrive_time for d in ds)
+            if len(ds) == n_total and last <= now + 1e-12:
+                wire = next(d.wire for d in ds if d.wire is not None)
+                ready.append(Delivery(ds[0].msg, wire, last))
+            else:
+                keep.extend(ds)
+        self.inbox = keep
         return sorted(ready, key=lambda d: d.arrive_time)
+
+    def pending_times(self) -> List[float]:
+        """Message-complete times of everything still in the inbox (a
+        chunked transfer counts once, at its last chunk's arrival)."""
+        times, last_chunk = [], {}
+        for d in self.inbox:
+            if d.chunk is None:
+                times.append(d.arrive_time)
+            else:
+                xid = d.chunk[2]
+                last_chunk[xid] = max(last_chunk.get(xid, -1e18),
+                                      d.arrive_time)
+        return times + list(last_chunk.values())
 
 
 class Fabric:
@@ -69,6 +121,7 @@ class Fabric:
         self.endpoints: Dict[str, Endpoint] = {}
         self.clock = 0.0
         self.stats = defaultdict(float)
+        self._chunk_xfer_ids = itertools.count()
 
     def register(self, host_id: str) -> Endpoint:
         ep = Endpoint(host_id)
@@ -88,6 +141,22 @@ class Fabric:
         self.stats["messages"] += 1
         self.stats["bytes"] += wire.nbytes if wire else 0
         return arrive
+
+    def deliver_chunked(self, msg: FLMessage, wire: WireData,
+                        chunk_arrivals: Sequence[float]):
+        """Chunk-granular delivery of one wire (ChunkStage): each chunk
+        lands independently; the receiving endpoint reassembles and
+        releases the message at the last chunk's arrival. Returns it."""
+        inbox = self.endpoints[msg.receiver].inbox
+        n = len(chunk_arrivals)
+        xid = next(self._chunk_xfer_ids)
+        for i, t in enumerate(chunk_arrivals):
+            inbox.append(Delivery(msg, wire if i == n - 1 else None, t,
+                                  chunk=(i, n, xid)))
+        self.stats["messages"] += 1
+        self.stats["chunks"] += n
+        self.stats["bytes"] += wire.nbytes
+        return max(chunk_arrivals)
 
     # -- batched concurrent transfers (fluid model) ---------------------
     def deliver_concurrent(self, sends):

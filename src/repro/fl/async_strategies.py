@@ -54,19 +54,44 @@ class AggregationStrategy:
 
 class FedBuffStrategy(AggregationStrategy):
     """Async FedBuff-style: merge every K arrivals, discount stale updates,
-    re-dispatch the newest global to each reporter immediately."""
+    re-dispatch the newest global to each reporter immediately.
+
+    ``staleness_adaptive`` (FedAsync-style; Xie et al. 2019) scales the
+    discount exponent by each update's percentile rank among the staleness
+    values observed so far: an update staler than most of the fleet is
+    discounted harder than the fixed ``(1+s)^-a`` curve, a fresher-than-
+    typical one more gently. With adaptivity off the weighting *is* the
+    fixed polynomial — tested."""
 
     name = "fedbuff"
 
     def __init__(self, *, buffer_k: int = 3, staleness_exponent: float = 0.5,
-                 max_staleness: int = 0):
+                 max_staleness: int = 0, staleness_adaptive: bool = False,
+                 adaptive_window: int = 64):
         self.buffer_k = max(1, int(buffer_k))
         self.staleness_exponent = staleness_exponent
         self.max_staleness = int(max_staleness)  # 0 = keep everything
+        self.staleness_adaptive = bool(staleness_adaptive)
+        self.adaptive_window = int(adaptive_window)
+        self.observed: List[float] = []  # rolling staleness window
         self.buffer: List[UpdateRecord] = []
+
+    def staleness_weight(self, staleness: float) -> float:
+        exponent = self.staleness_exponent
+        if self.staleness_adaptive and self.observed:
+            # percentile rank in [0, 1]; exponent spans [0.5a, 1.5a]
+            rank = np.mean([o <= staleness for o in self.observed])
+            exponent = self.staleness_exponent * (0.5 + float(rank))
+        return staleness_weight(staleness, exponent)
+
+    def observe(self, staleness: float):
+        self.observed.append(float(staleness))
+        if len(self.observed) > self.adaptive_window:
+            del self.observed[:-self.adaptive_window]
 
     def on_update(self, sched: FLScheduler, rec: UpdateRecord, now: float):
         t = now
+        self.observe(rec.staleness)
         if self.max_staleness and rec.staleness > self.max_staleness:
             sched.discarded += 1
         else:
@@ -144,10 +169,18 @@ class HierarchicalStrategy(AggregationStrategy):
     name = "hier"
 
     def __init__(self, *, relay_link: Region = LAN_TCP, relay_conns: int = 8,
-                 staleness_exponent: float = 0.0):
+                 staleness_exponent: float = 0.0, wan_compression=None):
         self.relay_link = relay_link
         self.relay_conns = relay_conns
         self.staleness_exponent = staleness_exponent
+        # gradient compression on the relay -> hub WAN hop *only*: the
+        # LAN-local reduce and the model downlink stay exact, so the hub
+        # merges dequantised partials and error feedback keeps each
+        # region's residual bounded across rounds. The same CompressStage
+        # the backend channels use, keyed per region instead of per peer.
+        from repro.core.channel import CompressStage
+        self._wan_stage = (CompressStage(wan_compression)
+                           if wan_compression is not None else None)
 
     # -- setup -------------------------------------------------------------
     def start(self, sched: FLScheduler, now: float):
@@ -248,9 +281,22 @@ class HierarchicalStrategy(AggregationStrategy):
             payload = VirtualPayload(nb, tag=f"relay:{group}")
         be = self._be
         region = be._link_region(recs[0].client.client_id)
-        wan = (be.serializer.ser_time(payload.nbytes) + be._overhead(region)
-               + transfer_time(payload.nbytes, region, self._wan_conns())
-               + be.serializer.deser_time(payload.nbytes))
+        wan_payload, codec_s = payload, 0.0
+        if self._wan_stage is not None:
+            orig_nbytes = payload.nbytes
+            wan_payload, info = self._wan_stage.compress(payload, group)
+            if info is not None:
+                codec = self._wan_stage.codec
+                codec_s = (codec.enc_time(orig_nbytes)
+                           + codec.dec_time(info["orig_nbytes"]))
+                # the hub sees the *decompressed* partial — exactly what
+                # the wire can carry, so hier+qsgd aggregates differ from
+                # flat FedAvg only by the (error-fed) quantisation noise
+                payload = codec.decompress(wan_payload, info)
+        nb = wan_payload.nbytes
+        wan = (be.serializer.ser_time(nb) + be._overhead(region)
+               + transfer_time(nb, region, self._wan_conns())
+               + be.serializer.deser_time(nb) + codec_s)
         hub_rec = UpdateRecord(client=recs[0].client, payload=payload,
                                weight=weight, version=recs[0].version,
                                staleness=0, arrive_t=now + agg_s + wan,
@@ -274,17 +320,24 @@ def make_strategy(cfg, num_clients: Optional[int] = None,
     """Strategy factory from ``FLConfig`` knobs (mode + buffer/staleness)."""
     n = num_clients or cfg.num_clients
     mode = cfg.mode
+    compression = getattr(cfg, "compression", "none")
     if mode == "fedbuff":
         k = cfg.buffer_k or max(2, n // 2)
         return FedBuffStrategy(buffer_k=k,
                                staleness_exponent=cfg.staleness_exponent,
-                               max_staleness=cfg.max_staleness, **overrides)
+                               max_staleness=cfg.max_staleness,
+                               staleness_adaptive=getattr(
+                                   cfg, "staleness_adaptive", False),
+                               **overrides)
     if mode == "semisync":
         return SemiSyncStrategy(quorum_fraction=cfg.quorum_fraction,
                                 round_deadline_s=cfg.round_deadline_s,
                                 staleness_exponent=cfg.staleness_exponent,
                                 **overrides)
     if mode == "hier":
+        overrides.setdefault(
+            "wan_compression",
+            None if compression in ("", "none") else compression)
         return HierarchicalStrategy(
             staleness_exponent=cfg.staleness_exponent, **overrides)
     raise KeyError(f"unknown scheduler mode '{mode}' "

@@ -72,25 +72,34 @@ class FLServer:
             transfers, meta = [], []
             for client, msg, start in sends:
                 cb = self._client_backend(client, msg)
-                ser = cb.serializer.ser_time(msg.payload_nbytes)
+                # store exactly what the client's wire stack produces and
+                # charge those bytes (a compressing channel stores the
+                # smaller wire); virtual paper-scale payloads keep their
+                # nominal size
+                enc = (cb.channel.encode(msg.payload, peer="s3")
+                       if isinstance(msg.payload, TensorPayload) else None)
+                wire = enc.wire if enc is not None else None
+                nbytes = wire.nbytes if wire is not None \
+                    else msg.payload_nbytes
+                ser = (enc.cost_s if enc is not None
+                       else cb.serializer.ser_time(msg.payload_nbytes))
                 src = cb.env.host(client.client_id)
-                put = s3.store.put_time(msg.payload_nbytes, src, s3.parts)
-                key = s3.store.content_key(msg.payload.fingerprint(),
-                                           msg.round, client.client_id)
-                wire = None
-                if isinstance(msg.payload, TensorPayload):
-                    wire = cb.serializer.serialize(msg.payload)
-                s3.store.put(key, wire, msg.payload_nbytes, start + ser + put)
+                put = s3.store.put_time(nbytes, src, s3.parts)
+                key = s3.store.content_key(
+                    (msg.payload.fingerprint(), cb.channel.signature()),
+                    msg.round, client.client_id)
+                s3.store.put(key, wire, nbytes, start + ser + put)
                 region = cb._link_region("server")
                 meta_arrive = start + ser + put + cb._overhead(region) \
                     + region.latency
                 dst = s3.env.host("server")
                 tr = s3.store.get_transfer(key, dst, meta_arrive, s3.parts)
                 transfers.append(tr)
-                meta.append((client, msg, ser, key))
+                meta.append((client, msg, ser, key, wire))
             simulate_transfers(transfers)
-            for (client, msg, ser, key), tr in zip(meta, transfers):
-                deser = s3.serializer.deser_time(msg.payload_nbytes)
+            for (client, msg, ser, key, wire), tr in zip(meta, transfers):
+                deser = (s3.channel.decode_time(wire) if wire is not None
+                         else s3.serializer.deser_time(msg.payload_nbytes))
                 out[client.client_id] = (tr.finish + deser, ser, msg, key)
             return out
         # direct backends: concurrent client->server transfers

@@ -99,6 +99,72 @@ def test_s3_key_cache_single_upload(deployment):
     assert store.stats["cache_hits"] == 2
 
 
+def test_s3_key_cache_across_rounds_one_upload_n_gets(deployment):
+    """Re-broadcasting the *same* model across rounds hits the
+    content-addressed cache: one upload total, one GET per delivery."""
+    env, fabric, store = deployment
+    be = make_backend("grpc+s3", env, fabric, "server", store=store)
+    payload = VirtualPayload(LARGE, tag="modelA")
+    n = len(env.clients)
+    t = 0.0
+    for r in range(3):
+        msgs = [FLMessage("model_sync", "server", c.host_id, round=r,
+                          payload=payload) for c in env.clients]
+        t, _ = be.broadcast(msgs, t)
+        for c in env.clients:
+            fabric.endpoints[c.host_id].inbox.clear()
+    assert store.stats["puts"] == 1
+    assert store.stats["cache_hits"] == 2  # rounds 2 and 3
+    assert store.stats["gets"] == 3 * n
+
+
+def test_s3_key_cache_invalidates_on_payload_or_compression_change(
+        deployment):
+    env, fabric, store = deployment
+    be = make_backend("grpc+s3", env, fabric, "server", store=store)
+    be.send(FLMessage("m", "server", "client1",
+                      payload=VirtualPayload(LARGE, tag="v1")), 0.0)
+    assert store.stats["puts"] == 1
+    # a *new* model (different fingerprint) re-uploads
+    be.send(FLMessage("m", "server", "client1",
+                      payload=VirtualPayload(LARGE, tag="v2")), 0.0)
+    assert store.stats["puts"] == 2
+    # same payload through a *compressing* stack is a different wire:
+    # the cache keys on the post-compression wire, so it must re-upload
+    be_q = make_backend("grpc+s3", env, fabric, "server", store=store,
+                        compression="qsgd")
+    be_q.send(FLMessage("m", "server", "client1",
+                        payload=VirtualPayload(LARGE, tag="v2")), 0.0)
+    assert store.stats["puts"] == 3
+    assert len(store._objects) == 3  # three distinct content keys
+    # and the compressed object is the smaller wire
+    sizes = sorted(o.nbytes for o in store._objects.values())
+    assert sizes[0] < 0.3 * LARGE
+
+
+def test_s3_recv_decodes_with_producing_codec(deployment):
+    """Satellite regression: a stored wire produced by a *different*
+    serializer (AUTO routing / mixed fleets) must decode with its own
+    codec, not the receiver's generic pickle deserializer."""
+    env, fabric, store = deployment
+    tree = {"w": np.arange(256, dtype=np.float32).reshape(16, 16)}
+    be = make_backend("grpc+s3", env, fabric, "server", store=store)
+    cl = make_backend("grpc+s3", env, fabric, "client2", store=store)
+    msg = FLMessage("model_sync", "server", "client2",
+                    payload=TensorPayload(tree))
+    h = be.isend(msg, 0.0)
+    # swap the stored wire for a membuff-coded one (what an AUTO-routed
+    # zero-copy sender would have produced for the same model)
+    from repro.core.serialization import SERIALIZERS
+    key = list(store._objects)[0]
+    alt = SERIALIZERS["membuff"].serialize(TensorPayload(tree))
+    store.put(key, alt, alt.nbytes, 0.0)
+    got = cl.recv(h.arrive + 100)
+    assert len(got) == 1
+    np.testing.assert_array_equal(np.asarray(got[0][0].payload.tree["w"]),
+                                  tree["w"])
+
+
 def test_s3_refetch_after_failure():
     env = make_env("geo_distributed")
     fabric = Fabric(env)

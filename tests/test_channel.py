@@ -1,0 +1,286 @@
+"""ChannelStack: default-stack equivalence, compression stages with error
+feedback, chunked pipelining, provenance-driven decode, and the
+MemoryMeter time-sorted peak."""
+import numpy as np
+import pytest
+
+from repro.compression.stages import QsgdCodec, TopkCodec, make_codec
+from repro.core import (Fabric, FLMessage, MemoryMeter, ObjectStore,
+                        TensorPayload, VirtualPayload, make_backend,
+                        make_env)
+from repro.core.channel import (ChunkStage, CompressStage, SerializeStage,
+                                make_channel)
+from repro.core.netsim import MB, NCAL
+from repro.core.serialization import SERIALIZERS, checksum
+
+
+@pytest.fixture
+def tree(rng):
+    return {"w": rng.normal(size=(64, 32)).astype(np.float32),
+            "b": rng.normal(size=(32,)).astype(np.float32)}
+
+
+@pytest.fixture
+def deployment():
+    env = make_env("geo_distributed")
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    return env, fabric, store
+
+
+# ---------------------------------------------------------------------------
+# default [SerializeStage] stack == pre-stack serializer behaviour
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["generic", "protobuf", "membuff",
+                                  "tensor_rpc"])
+def test_default_stack_matches_bare_serializer(name, tree):
+    ser = SERIALIZERS[name]
+    ch = make_channel(name)
+    assert [type(s) for s in ch.stages] == [SerializeStage]
+    payload = TensorPayload(tree)
+    enc = ch.encode(payload)
+    ref = ser.serialize(payload)
+    assert enc.wire.nbytes == ref.nbytes
+    assert checksum(enc.wire) == checksum(ref)
+    assert enc.cost_s == pytest.approx(ser.ser_time(ref.nbytes))
+    assert enc.extra_alloc == 0 and enc.chunks is None
+    out, dec_s = ch.decode(enc.wire)
+    assert dec_s == pytest.approx(ser.deser_time(ref.nbytes))
+    np.testing.assert_array_equal(np.asarray(out.tree["w"]), tree["w"])
+
+
+def test_wire_provenance_recorded(tree):
+    ch = make_channel("generic", compression="qsgd", chunk_bytes=1024)
+    enc = ch.encode(TensorPayload(tree))
+    kinds = [i.get("stage", "compress") for i in enc.wire.stages]
+    assert kinds == ["compress", "serialize", "chunk"]
+    assert ch.signature() == "qsgd(b256)|generic|chunk(0.000976562MB)"
+
+
+def test_legacy_bare_wire_decodes_codec_aware(tree):
+    """A wire with no stage provenance (hand-built / pre-stack) decodes
+    with the codec that produced it, not the receiver's serializer."""
+    wire = SERIALIZERS["membuff"].serialize(TensorPayload(tree))
+    assert wire.stages == []
+    receiver = make_channel("generic")  # different serializer family
+    out, _ = receiver.decode(wire)
+    np.testing.assert_array_equal(np.asarray(out.tree["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# compression stages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,codec_cls", [("qsgd", QsgdCodec),
+                                            ("topk:0.25", TopkCodec)])
+@pytest.mark.parametrize("serializer", ["generic", "membuff"])
+def test_compressed_roundtrip(spec, codec_cls, serializer, tree):
+    ch = make_channel(serializer, compression=spec)
+    payload = TensorPayload(tree)
+    enc = ch.encode(payload, peer="server")
+    assert enc.wire.nbytes < 0.6 * payload.nbytes  # genuinely smaller
+    assert enc.extra_alloc > 0  # the compressed buffer is charged
+    out, dec_s = ch.decode(enc.wire)
+    assert dec_s > 0
+    assert isinstance(out, TensorPayload)
+    # block-quantisation tolerance: a few steps of the per-block max
+    tol = (np.max(np.abs(tree["w"])) / 127.0) * 2 if spec == "qsgd" else None
+    if spec == "qsgd":
+        np.testing.assert_allclose(np.asarray(out.tree["w"]), tree["w"],
+                                   atol=tol)
+    else:  # top-k: kept coordinates exact, dropped ones zero
+        got = np.asarray(out.tree["w"])
+        mask = got != 0
+        np.testing.assert_allclose(got[mask], tree["w"][mask], atol=1e-6)
+
+
+def test_virtual_payload_compression_invertible():
+    ch = make_channel("generic", compression="qsgd")
+    enc = ch.encode(VirtualPayload(100 * MB, tag="model:v3"), peer="x")
+    assert enc.wire.nbytes < 30 * MB  # ~4x
+    out, _ = ch.decode(enc.wire)
+    assert isinstance(out, VirtualPayload)
+    assert out.size == 100 * MB and out.tag == "model:v3"
+
+
+def test_error_feedback_state_is_per_peer(tree):
+    ch = make_channel("generic", compression="qsgd")
+    stage = next(s for s in ch.stages if isinstance(s, CompressStage))
+    ch.encode(TensorPayload(tree), peer="a")
+    ch.encode(TensorPayload(tree), peer="b")
+    assert set(stage._state) == {"a", "b"}
+    # the residual is the quantisation error: bounded by the block step
+    err = np.asarray(stage._state["a"].error)
+    step = max(np.abs(tree[k]).max() for k in tree) / 127.0
+    assert np.max(np.abs(err)) <= 2 * step
+
+
+def test_error_feedback_carries_residual_across_sends(tree):
+    """Second send re-injects the first send's quantisation error: the
+    mean decoded value over two sends is closer to the truth than one
+    EF-less quantisation."""
+    payload = TensorPayload(tree)
+    ch_ef = make_channel("generic", compression="qsgd")
+    outs = []
+    for _ in range(2):
+        enc = ch_ef.encode(payload, peer="server")
+        outs.append(np.asarray(ch_ef.decode(enc.wire)[0].tree["w"]))
+    mean_ef = (outs[0] + outs[1]) / 2
+
+    ch_raw = make_channel("generic", compression="qsgd",
+                          error_feedback=False)
+    raw = np.asarray(
+        ch_raw.decode(ch_raw.encode(payload, peer="server").wire)[0].tree["w"])
+    assert np.abs(mean_ef - tree["w"]).mean() < \
+        np.abs(raw - tree["w"]).mean() + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# chunked pipelining
+# ---------------------------------------------------------------------------
+
+def test_chunk_stage_splits_and_small_wires_pass_through():
+    st = ChunkStage(4 * MB)
+    assert st.split(3 * MB) is None
+    sizes = st.split(10 * MB)
+    assert sum(sizes) == 10 * MB and max(sizes) == 4 * MB
+
+
+def test_chunked_isend_delivers_once_and_faster(deployment):
+    env, fabric, store = deployment
+    whole = make_backend("grpc", env, fabric, "server", store=store)
+    h0 = whole.isend(FLMessage("m", "server", "client2",
+                               payload=VirtualPayload(64 * MB)), 0.0)
+    fabric.endpoints["client2"].inbox.clear()
+
+    chunked = make_backend("grpc", env, fabric, "server", store=store,
+                           chunk_mb=8)
+    h1 = chunked.isend(FLMessage("m", "server", "client2",
+                                 payload=VirtualPayload(64 * MB)), 0.0)
+    # pipelining overlaps the serializer with the network: strictly earlier
+    assert h1.arrive < h0.arrive
+    assert fabric.stats["chunks"] == 8
+    cl = make_backend("grpc", env, fabric, "client2", store=store)
+    # chunk-granular inbox: nothing pops until the *last* chunk landed
+    assert cl.recv(h1.arrive - 1e-6) == []
+    assert cl.next_arrival() == pytest.approx(h1.arrive)
+    got = cl.recv(h1.arrive + 1.0)
+    assert len(got) == 1
+    assert got[0][0].payload.nbytes == 64 * MB
+
+
+def test_chunked_retransmit_of_same_message_does_not_wedge(deployment):
+    """Chunk groups key on the transfer, not the msg_id: re-sending the
+    same message (retransmit semantics) yields two complete deliveries
+    instead of one wedged 2n-chunk group."""
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store,
+                      chunk_mb=8)
+    cl = make_backend("grpc", env, fabric, "client2", store=store)
+    msg = FLMessage("m", "server", "client2",
+                    payload=VirtualPayload(32 * MB))
+    h1 = be.isend(msg, 0.0)
+    h2 = be.isend(msg, h1.arrive)  # same msg_id rides again
+    got = cl.recv(h2.arrive + 1.0)
+    assert len(got) == 2
+    assert cl.next_arrival() is None  # nothing left half-assembled
+
+
+def test_unchunked_backend_has_no_chunk_deliveries(deployment):
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store)
+    be.isend(FLMessage("m", "server", "client1",
+                       payload=VirtualPayload(64 * MB)), 0.0)
+    assert fabric.stats["chunks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# compression over real backends (end to end)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["grpc", "mpi_mem_buff", "grpc+s3"])
+def test_compressed_send_roundtrips_over_backend(backend, deployment,
+                                                 tree):
+    env, fabric, store = deployment
+    be = make_backend(backend, env, fabric, "server", store=store,
+                      compression="qsgd")
+    # the receiver is configured *without* compression: decode follows
+    # the wire's recorded stages, not the receiver's own stack
+    cl = make_backend(backend, env, fabric, "client2", store=store)
+    h = be.isend(FLMessage("model_sync", "server", "client2",
+                           payload=TensorPayload(tree)), 0.0)
+    assert h.nbytes < 0.6 * TensorPayload(tree).nbytes
+    got = cl.recv(h.arrive + 100)
+    assert len(got) == 1
+    out = got[0][0].payload
+    tol = np.max(np.abs(tree["w"])) / 127.0 * 2
+    np.testing.assert_allclose(np.asarray(out.tree["w"]), tree["w"],
+                               atol=tol)
+    fabric.endpoints["client2"].inbox.clear()
+
+
+def test_s3_compressed_repeat_send_hits_cache_stateless(deployment, tree):
+    """Content addressing requires encode to be a pure function of the
+    payload: grpc+s3 runs its CompressStage without error feedback, so a
+    cache hit serves exactly the wire a re-encode would have produced
+    (no silently-frozen residual)."""
+    env, fabric, store = deployment
+    be = make_backend("grpc+s3", env, fabric, "server", store=store,
+                      compression="qsgd")
+    p = TensorPayload(tree)
+    h1 = be.isend(FLMessage("m", "server", "client1", payload=p), 0.0)
+    be.isend(FLMessage("m", "server", "client2", payload=p), h1.arrive)
+    assert store.stats["puts"] == 1 and store.stats["cache_hits"] == 1
+    stage = next(s for s in be.channel.stages
+                 if isinstance(s, CompressStage))
+    assert stage._state == {}  # stateless stream on the s3 path
+
+
+def test_compression_speeds_up_wan_send(deployment):
+    env, fabric, store = deployment
+    plain = make_backend("grpc", env, fabric, "server", store=store)
+    comp = make_backend("grpc", env, fabric, "server", store=store,
+                        compression="qsgd")
+    msg = lambda tag: FLMessage("m", "server", "client5",
+                                payload=VirtualPayload(200 * MB, tag=tag))
+    t_plain = plain.isend(msg("a"), 0.0).arrive
+    t_comp = comp.isend(msg("b"), 0.0).arrive
+    assert t_comp < 0.5 * t_plain  # 4x fewer bytes through ser + WAN
+
+
+# ---------------------------------------------------------------------------
+# MemoryMeter: time-sorted peak (regression for out-of-order events)
+# ---------------------------------------------------------------------------
+
+def test_memory_meter_peak_uses_event_timeline():
+    m = MemoryMeter()
+    # call order: alloc A, alloc B, free A, free B — but the *timeline*
+    # says A lives [0, 2] and B lives [5, 7]: they never overlap
+    m.alloc(100, 0.0)
+    m.alloc(50, 5.0)
+    m.free(100, 2.0)
+    m.free(50, 7.0)
+    assert m.peak == 100  # call-order running max would claim 150
+
+
+def test_memory_meter_detects_true_overlap_despite_call_order():
+    m = MemoryMeter()
+    # call order interleaves alloc/free pairs, but both live over [0, 10]
+    m.alloc(100, 0.0)
+    m.free(100, 10.0)
+    m.alloc(50, 1.0)
+    m.free(50, 9.0)
+    assert m.peak == 150  # call-order running max would claim 100
+
+
+def test_memory_meter_reset_and_current():
+    m = MemoryMeter()
+    m.alloc(10, 1.0)
+    assert m.current == 10 and m.peak == 10
+    m.free(10, 2.0)
+    assert m.current == 0
+    m.reset()
+    assert m.peak == 0 and m.events == []

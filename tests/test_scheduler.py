@@ -205,6 +205,83 @@ def test_fedbuff_max_staleness_discards():
     assert rep.n_discarded >= 1
 
 
+def test_adaptive_staleness_off_matches_fixed_polynomial():
+    """staleness_adaptive=False is the exact (1+s)^-a discount, even with
+    a populated observation window."""
+    from repro.fl.aggregator import staleness_weight
+    s = FedBuffStrategy(buffer_k=2, staleness_exponent=0.5)
+    for obs in [0, 1, 4, 9, 2]:
+        s.observe(obs)
+    for st in [0, 1, 3, 9]:
+        assert s.staleness_weight(st) == staleness_weight(st, 0.5)
+
+
+def test_adaptive_staleness_scales_exponent_by_percentile():
+    from repro.fl.aggregator import staleness_weight
+    s = FedBuffStrategy(buffer_k=2, staleness_exponent=0.5,
+                        staleness_adaptive=True)
+    for obs in [0, 1, 2, 3, 8, 9]:
+        s.observe(obs)
+    # staler than most observed -> rank ~1 -> exponent ~1.5a (harsher)
+    assert s.staleness_weight(9) < staleness_weight(9, 0.5)
+    # fresher than everything -> rank ~1/6 -> exponent < a (gentler)
+    assert s.staleness_weight(0.5) > staleness_weight(0.5, 0.5)
+    # the adaptive exponent stays in the a/2 .. 3a/2 band (weights shrink
+    # as the exponent grows)
+    assert staleness_weight(9, 0.25) >= s.staleness_weight(9) >= \
+        staleness_weight(9, 0.75)
+    s.observe(10)  # rank of 9 drops below 1.0: still inside the band
+    assert staleness_weight(9, 0.25) >= s.staleness_weight(9) >= \
+        staleness_weight(9, 0.75)
+
+
+def test_adaptive_staleness_end_to_end_discounts_more():
+    """With a heavy straggler, percentile-adaptive discounting weighs the
+    stale tail harder than the fixed exponent run."""
+    def run(adaptive):
+        sb, clients = _deployment("grpc", "geo_distributed", 4, live=False,
+                                  straggle={"client2": 10.0})
+        sched = FLScheduler(
+            sb, clients,
+            FedBuffStrategy(buffer_k=2, staleness_exponent=0.5,
+                            staleness_adaptive=adaptive),
+            local_steps=1)
+        return sched.run(VirtualPayload(16 << 20, tag="ad"),
+                         max_aggregations=6)
+    fixed, adaptive = run(False), run(True)
+    assert fixed.n_client_updates == adaptive.n_client_updates
+    assert adaptive.effective_updates != fixed.effective_updates
+
+
+def test_hierarchical_qsgd_wan_hop_matches_flat_within_tolerance():
+    """Compression on the relay WAN hop only: the hub merges dequantised
+    partials, so multi-round hier+qsgd tracks flat FedAvg within the
+    quantisation band (error feedback prevents drift accumulation)."""
+    n = 8
+    rounds = 2
+    sb, clients = _deployment("grpc", "geo_distributed", n, live=True)
+    server = FLServer(sb, clients, local_steps=2)
+    params = _init_params()
+    for _ in range(rounds):
+        server.run_round(TensorPayload(params))
+        params = server.global_params
+
+    sb2, clients2 = _deployment("grpc", "geo_distributed", n, live=True)
+    strat = HierarchicalStrategy(staleness_exponent=0.0,
+                                 wan_compression="qsgd")
+    sched = FLScheduler(sb2, clients2, strat, local_steps=2)
+    sched.run(TensorPayload(_init_params()), max_aggregations=rounds)
+
+    upd = max(float(np.max(np.abs(np.asarray(params[k])))) for k in params)
+    tol = max(8.0 * upd / 127.0, 1e-4)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(sched.global_params[k]),
+                                   np.asarray(params[k]), atol=tol)
+    # error-feedback residuals stay in the quantisation band
+    for state in strat._wan_stage._state.values():
+        assert float(np.max(np.abs(np.asarray(state.error)))) <= tol
+
+
 def test_async_run_requires_a_bound():
     sb, clients = _deployment("grpc", "lan", 2, live=False)
     sched = FLScheduler(sb, clients, FedBuffStrategy(buffer_k=2))
