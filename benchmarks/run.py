@@ -26,7 +26,8 @@ def main(argv=None) -> None:
                             fig2_grpc_concurrency, fig4a_p2p_latency,
                             fig4b_concurrency_speedup, fig4c_broadcast_memory,
                             fig5_end_to_end, fig6_async_vs_sync,
-                            fig7_compression_wan, table1_links)
+                            fig7_compression_wan, fig8_faults_wan,
+                            table1_links)
 
     modules = [
         ("table1", table1_links),
@@ -37,6 +38,7 @@ def main(argv=None) -> None:
         ("fig5", fig5_end_to_end),
         ("fig6", fig6_async_vs_sync),
         ("fig7", fig7_compression_wan),
+        ("fig8", fig8_faults_wan),
         ("kernels", bench_kernels),
         ("crosspod", crosspod_sync),
     ]

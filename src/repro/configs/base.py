@@ -210,3 +210,10 @@ class FLConfig:
     # reduce stays exact) — plus chunked send pipelining
     compression: str = "none"  # none | qsgd[:block] | topk[:frac]
     chunk_mb: float = 0.0  # 0 = unchunked wires
+
+    # fault & churn injection (fl/fault.py, core/netsim.LinkFaultModel)
+    # availability trace spec: "" = no churn; "auto:UP/DOWN" = generated
+    # exponential up/down periods; else explicit "client0:leave@T,join@T"
+    availability_trace: str = ""
+    link_loss_rate: float = 0.0  # per-chunk wire loss on every direct link
+    region_quorum: float = 0.5  # hier: min live fraction per region

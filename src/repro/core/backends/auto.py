@@ -1,8 +1,15 @@
 """AUTO backend — the paper's §VII deployment guideline as code.
 
-Per message: payloads < 10 MB (or no object store / LAN) ride plain gRPC;
-large payloads in untrusted WANs ride gRPC+S3; trusted LAN prefers
-MPI_MEM_BUFF for buffer-like payloads.
+Per message: payloads whose *wire* footprint is < 10 MB (or no object
+store / LAN) ride plain gRPC; large payloads in untrusted WANs ride
+gRPC+S3; trusted LAN prefers MPI_MEM_BUFF for buffer-like payloads.
+
+The 10 MB threshold is about bytes on the wire, so routing sees the
+channel's post-stack size estimate: a qsgd-compressed 32 MB update
+shrinks to ~8 MB and must ride plain gRPC, while the same update
+uncompressed rides gRPC+S3. Batched broadcasts route *per message* —
+one small control record in a batch of large models must not drag the
+models onto gRPC (or vice versa).
 """
 from __future__ import annotations
 
@@ -10,7 +17,7 @@ from typing import Sequence
 
 from repro.core.backends.base import CommBackend
 from repro.core.backends.grpc_s3 import GrpcS3Backend
-from repro.core.message import FLMessage
+from repro.core.message import FLMessage, PackedPayload
 
 SMALL_PAYLOAD = 10 * 1024 * 1024  # paper: <10 MB -> pure gRPC
 
@@ -22,6 +29,7 @@ class AutoBackend:
                  compression=None, chunk_mb: float = 0.0, **kw):
         from repro.core.backends import POLICIES
         self.env = env
+        self.fabric = fabric
         self.host_id = host_id
         self.store = store
         # every routed backend carries the same wire-stack configuration;
@@ -35,27 +43,36 @@ class AutoBackend:
         self.s3 = (GrpcS3Backend(env, fabric, host_id, store,
                                  compression=compression, **kw)
                    if store is not None and env.name != "lan" else None)
+        from repro.compression.stages import make_codec
+        self._codec = make_codec(compression)
         self.endpoint = self.grpc.endpoint
-        self.decisions: list = []
+        self.decisions: list = []  # (msg_type, wire nbytes estimate, backend)
+
+    # ------------------------------------------------------------------
+    def _wire_nbytes(self, nbytes: int, payload=None) -> int:
+        """Post-stack wire size estimate: the codec's wire ratio applied
+        to the payload (already-packed payloads pass the CompressStage
+        untouched, so they route on their own size)."""
+        if self._codec is None or isinstance(payload, PackedPayload):
+            return nbytes
+        return int(round(nbytes * self._codec.ratio()))
+
+    def _pick(self, wire_nbytes: int):
+        if wire_nbytes < SMALL_PAYLOAD or self.s3 is None:
+            return self.membuff if (self.env.trusted and
+                                    self.env.name == "lan") else self.grpc
+        return self.s3
 
     def resolve(self, msg: FLMessage):
         """The concrete backend this message would ride (no logging) —
         lets orchestrators (FLServer upload phase) plan with the right
         serializer/policy."""
-        nbytes = msg.payload_nbytes
-        if nbytes < SMALL_PAYLOAD or self.s3 is None:
-            return self.membuff if (self.env.trusted and
-                                    self.env.name == "lan") else self.grpc
-        return self.s3
+        return self._pick(self._wire_nbytes(msg.payload_nbytes, msg.payload))
 
     def _route(self, msg: FLMessage):
-        nbytes = msg.payload_nbytes
-        if nbytes < SMALL_PAYLOAD or self.s3 is None:
-            choice = self.membuff if (self.env.trusted and
-                                      self.env.name == "lan") else self.grpc
-        else:
-            choice = self.s3
-        self.decisions.append((msg.msg_type, nbytes, choice.name))
+        wire_nbytes = self._wire_nbytes(msg.payload_nbytes, msg.payload)
+        choice = self._pick(wire_nbytes)
+        self.decisions.append((msg.msg_type, wire_nbytes, choice.name))
         return choice
 
     def isend(self, msg, now):
@@ -65,10 +82,35 @@ class AutoBackend:
         return self._route(msg).send(msg, now)
 
     def broadcast(self, msgs: Sequence[FLMessage], now):
-        return self._route(msgs[0]).broadcast(msgs, now)
+        """Per-message routing: each routed subset rides its own
+        backend's concurrent dispatch (timing semantics per backend are
+        unchanged — grpc's fluid contention, s3's single upload + N
+        GETs); arrivals come back in input order."""
+        routed: dict = {}
+        for i, msg in enumerate(msgs):
+            routed.setdefault(id(self._route(msg)), []).append(i)
+        backends = {id(b): b for b in (self.grpc, self.membuff, self.s3)
+                    if b is not None}
+        sender_done = now
+        arrives = [0.0] * len(msgs)
+        for bid, idxs in routed.items():
+            done, arr = backends[bid].broadcast([msgs[i] for i in idxs], now)
+            sender_done = max(sender_done, done)
+            for i, a in zip(idxs, arr):
+                arrives[i] = a
+        return sender_done, arrives
 
     def sequential_broadcast(self, msgs, now):
-        return self._route(msgs[0]).sequential_broadcast(msgs, now)
+        """One at a time, each message on its own routed backend (the
+        Fig 4b blocking chain crosses backends unchanged: isend, wait,
+        next; a fault-failed send resolves at its give-up time)."""
+        t = now
+        arrives = []
+        for msg in msgs:
+            h = self._route(msg).isend(msg, t)
+            t = h.start if h.failed else h.arrive
+            arrives.append(h.arrive)
+        return t, arrives
 
     def recv(self, now):
         # all three share one endpoint; GrpcS3Backend.recv handles both
@@ -82,6 +124,4 @@ class AutoBackend:
         return self.grpc.next_arrival(after)  # shared endpoint
 
     def p2p_time(self, nbytes, dst_id):
-        if nbytes < SMALL_PAYLOAD or self.s3 is None:
-            return self.grpc.p2p_time(nbytes, dst_id)
-        return self.s3.p2p_time(nbytes, dst_id)
+        return self._pick(self._wire_nbytes(nbytes)).p2p_time(nbytes, dst_id)

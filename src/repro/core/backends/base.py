@@ -61,6 +61,10 @@ class SendHandle:
                     (``recv`` called at/after this returns the message);
     * ``arrive``  — payload availability at the receiver, pre-deserialize
                     (for object-store backends this includes the GET leg).
+    * ``failed``  — the fault model exhausted the bounded chunk
+                    retransmits: nothing was delivered (``arrive`` is
+                    inf, ``start`` is the sender's give-up time); the
+                    caller decides whether to re-issue.
     """
     msg: FLMessage
     issued: float
@@ -68,6 +72,7 @@ class SendHandle:
     inbox_t: float
     arrive: float
     nbytes: int = 0
+    failed: bool = False
 
     def done(self, now: float) -> bool:
         return now + 1e-12 >= self.arrive
@@ -127,6 +132,37 @@ class CommBackend:
         self._ser_busy_until = start + ser_t
         return start
 
+    def _link_schedule(self, dst_id: str, depart: float, nbytes: float,
+                       rate: float, region: Region, xid: Optional[int],
+                       chunk_index: int):
+        """Completion of one link transmission under the fabric's fault
+        model: the departure is shifted past blackout windows, each lost
+        transmission costs the chunk's wire time plus a detection timeout
+        before the retransmit. Returns ``(finish, give_up_t)`` —
+        ``finish`` is None when the bounded retries are exhausted, with
+        ``give_up_t`` the moment the sender abandons the transfer. With
+        no fault model installed this is exactly ``depart + nbytes/rate``."""
+        fm = self.fabric.fault_model
+        tx = nbytes / rate
+        if fm is None:
+            return depart + tx, depart + tx
+        if xid is None:
+            xid = self.fabric.next_transfer_id()
+        hosts = (self.host_id, dst_id)
+        t = fm.delay(hosts, depart)
+        n = fm.attempts(self.host_id, dst_id, xid, chunk_index)
+        # lost transmissions each pay their wire time + a detection
+        # timeout; retransmits are the transmissions beyond the original
+        lost_tx = (fm.max_retries + 1) if n is None else (n - 1)
+        for _ in range(lost_tx):
+            t = fm.delay(hosts, t + tx + fm.detect_delay(region))
+        if n is None:
+            self.fabric.stats["retransmits"] += fm.max_retries
+            self.fabric.stats["transfers_failed"] += 1
+            return None, t
+        self.fabric.stats["retransmits"] += lost_tx
+        return t + tx, t + tx
+
     # ------------------------------------------------------------------
     def isend(self, msg: FLMessage, now: float) -> SendHandle:
         """Non-blocking send: schedules delivery, returns a completion
@@ -142,22 +178,44 @@ class CommBackend:
         mem.alloc(alloc, ser_start)
         region = self._link_region(msg.receiver)
         start = ser_start + ser_t
+        rate = region.conn_cap(self.policy.conns_per_transfer)
+        base = self._overhead(region) + region.latency
+        failed_at = None
         if enc.chunks:
             # pipelined chunks: chunk i's transfer starts once it is
             # encoded AND the link is free (overlaps encode with network)
-            rate = region.conn_cap(self.policy.conns_per_transfer)
-            base = self._overhead(region) + region.latency
+            xid = self.fabric.next_transfer_id()
             link_free, arrivals = ser_start, []
-            for nb, ready_off in enc.chunks:
+            for i, (nb, ready_off) in enumerate(enc.chunks):
                 dep = max(ser_start + ready_off, link_free)
-                link_free = dep + nb / rate
-                arrivals.append(base + link_free)
-            arrive = self.fabric.deliver_chunked(msg, enc.wire, arrivals)
+                fin, give_up = self._link_schedule(msg.receiver, dep, nb,
+                                                   rate, region, xid, i)
+                if fin is None:
+                    failed_at = give_up
+                    break
+                link_free = fin
+                arrivals.append(base + fin)
+            if failed_at is None:
+                arrive = self.fabric.deliver_chunked(msg, enc.wire, arrivals,
+                                                     xid=xid)
         else:
-            dur = self._overhead(region) + region.latency \
-                + enc.wire.nbytes / region.conn_cap(
-                    self.policy.conns_per_transfer)
-            arrive = self.fabric.deliver(msg, enc.wire, start, dur)
+            fin, give_up = self._link_schedule(msg.receiver, start,
+                                               enc.wire.nbytes, rate, region,
+                                               None, 0)
+            if fin is None:
+                failed_at = give_up
+            else:
+                arrive = self.fabric.deliver(msg, enc.wire, start,
+                                             base + fin - start)
+        if failed_at is not None:
+            # bounded retries exhausted: nothing is delivered; the sender
+            # frees its buffers when it gives up and surfaces the failure.
+            # ``start`` carries the give-up time — the earliest moment a
+            # caller can causally know the send failed and re-issue it
+            mem.free(alloc, failed_at)
+            return SendHandle(msg=msg, issued=now, start=failed_at,
+                              inbox_t=float("inf"), arrive=float("inf"),
+                              nbytes=enc.wire.nbytes, failed=True)
         mem.free(alloc, arrive)
         return SendHandle(msg=msg, issued=now, start=start, inbox_t=arrive,
                           arrive=arrive, nbytes=enc.wire.nbytes)
@@ -192,11 +250,15 @@ class CommBackend:
         if penalty > 1.0:
             import dataclasses as _dc
             src = _dc.replace(src, uplink=src.uplink / penalty)
+        fm = self.fabric.fault_model
         for msg, (enc, enc_done) in zip(msgs, encs):
             region = self._link_region(msg.receiver)
             eff_region = Region(region.name,
                                 region.bw_single / penalty,
                                 region.bw_multi / penalty, region.latency)
+            start = enc_done + self._overhead(region)
+            if fm is not None:
+                start = fm.delay((self.host_id, msg.receiver), start)
             # chunk pipelining overlaps encode with transfer on the isend
             # path only: the fluid solver moves whole wires with no
             # inter-chunk dependencies, so dispatching a broadcast at
@@ -204,7 +266,7 @@ class CommBackend:
             # completes — broadcasts keep whole-wire (encode-complete)
             # dispatch
             transfers.append(Transfer(
-                start=enc_done + self._overhead(region),
+                start=start,
                 src=src,
                 dst=self.env.host(msg.receiver),
                 nbytes=enc.wire.nbytes,
@@ -228,22 +290,42 @@ class CommBackend:
             mem.alloc(a, now)
             allocs.append(a)
         simulate_transfers(transfers)
+        fm = self.fabric.fault_model
         arrives = []
         for msg, (enc, _), tr, a in zip(msgs, encs, transfers, allocs):
+            finish = tr.finish
+            if fm is not None:
+                # the concurrent-broadcast path models a reliable stream:
+                # lost chunks are retransmitted serially after the fluid
+                # transfer (capped at max_retries, always delivered —
+                # bounded-failure semantics live on the isend path)
+                xid = self.fabric.next_transfer_id()
+                n = fm.attempts(self.host_id, msg.receiver, xid, 0,
+                                forced=True)
+                if n > 1:
+                    region = self._link_region(msg.receiver)
+                    rate = region.conn_cap(self.policy.conns_per_transfer)
+                    finish += (n - 1) * (enc.wire.nbytes / rate
+                                         + fm.detect_delay(region))
+                    self.fabric.stats["retransmits"] += n - 1
             self.fabric.endpoints[msg.receiver].inbox.append(
-                _delivery(msg, enc.wire, tr.finish))
-            mem.free(a, tr.finish)
-            arrives.append(tr.finish)
+                _delivery(msg, enc.wire, finish))
+            mem.free(a, finish)
+            arrives.append(finish)
         return max(e[1] for e in encs), arrives
 
     def sequential_broadcast(self, msgs: Sequence[FLMessage], now: float):
         """One at a time (Fig 4b baseline): each isend waits for the
-        previous handle to complete before being issued."""
+        previous handle to complete before being issued. A fault-failed
+        send resolves at the sender's give-up time — the chain continues
+        from there (its inf arrive in the result marks the loss) instead
+        of pushing every later send to t=inf."""
         t = now
         arrives = []
         for msg in msgs:
             h = self.isend(msg, t)
-            t = h.arrive  # blocking: wait for completion before the next
+            # blocking: wait for completion (or failure detection)
+            t = h.start if h.failed else h.arrive
             arrives.append(h.arrive)
         return t, arrives
 

@@ -87,6 +87,16 @@ class GrpcS3Backend(CommBackend):
         self._key_cache[fp] = (key, done)
         return key, done
 
+    def has_cached_upload(self, msg: FLMessage) -> bool:
+        """Would sending this payload re-serve the stored object (no
+        sender re-upload)? The late-join re-fetch accounting hinges on
+        this: a rejoining client only gets the single-upload/multi-
+        download deal if the current model is still in the store."""
+        if msg.payload is None:
+            return False
+        fp = self._fingerprint(msg)
+        return fp in self._key_cache and self.store.has(self._key_cache[fp][0])
+
     def _meta_msg(self, msg: FLMessage, key: str) -> FLMessage:
         extra = {"s3_key": key, "payload_nbytes": msg.payload_nbytes}
         if self.presign:
@@ -106,8 +116,20 @@ class GrpcS3Backend(CommBackend):
         key, up_done = self._upload(msg, now)
         meta = self._meta_msg(msg, key)
         region = self._link_region(msg.receiver)
-        arrive_meta = self.fabric.deliver(meta, WireData(nbytes=256), up_done,
-                                          self._meta_duration(region))
+        # the gRPC control leg rides the same faultable link as every
+        # direct backend; the payload leg's resilience is the store's
+        # (durable object + GET retries), so a failed *meta* record is
+        # the only way this send can fail
+        fin, give_up = self._link_schedule(msg.receiver, up_done, 256,
+                                           region.bw_single, region, None, 0)
+        if fin is None:
+            # start = the give-up time (when the sender learns of the loss)
+            return SendHandle(msg=msg, issued=now, start=give_up,
+                              inbox_t=float("inf"), arrive=float("inf"),
+                              nbytes=self.store.size(key), failed=True)
+        arrive_meta = self.fabric.deliver(
+            meta, WireData(nbytes=256), up_done,
+            self._overhead(region) + region.latency + fin - up_done)
         # receiver pulls from S3 after metadata arrives; what moves is the
         # stored (post-stack, possibly compressed) wire, not the payload
         wire_nbytes = self.store.size(key)
@@ -124,10 +146,23 @@ class GrpcS3Backend(CommBackend):
         arrives = []
         transfers = []
         metas = []
+        fm = self.fabric.fault_model
         for msg in msgs:
             meta = self._meta_msg(msg, key)
             region = self._link_region(msg.receiver)
             meta_arrive = up_done + self._meta_duration(region)
+            if fm is not None:
+                # the meta legs ride the same faultable control links as
+                # every direct backend's broadcast: blackout-shifted
+                # departure + forced (reliable-stream) retransmits
+                dep = fm.delay((self.host_id, msg.receiver), up_done)
+                n = fm.attempts(self.host_id, msg.receiver,
+                                self.fabric.next_transfer_id(), 0,
+                                forced=True)
+                meta_arrive = dep - up_done + meta_arrive + (n - 1) * (
+                    256 / region.bw_single + fm.detect_delay(region))
+                if n > 1:
+                    self.fabric.stats["retransmits"] += n - 1
             dst = self.env.host(msg.receiver)
             tr = self.store.get_transfer(key, dst, meta_arrive, self.parts)
             transfers.append(tr)

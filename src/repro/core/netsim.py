@@ -14,8 +14,10 @@ All bandwidths stored in bytes/s, latencies in seconds.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 import math
+import zlib
 from typing import Optional, Sequence
 
 MB = 1024 ** 2
@@ -222,3 +224,88 @@ def simulate_transfers(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
 def transfer_time(nbytes: float, region: Region, conns: int = 1) -> float:
     """Uncontended single-transfer time (latency + bytes / capped bw)."""
     return region.latency + nbytes / region.conn_cap(max(conns, 1))
+
+
+# ---------------------------------------------------------------------------
+# deterministic link fault injection
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    z = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return (z ^ (z >> 31)) & _M64
+
+
+@functools.lru_cache(maxsize=4096)
+def _link_hash(src: str, dst: str) -> int:
+    return zlib.crc32(f"{src}>{dst}".encode())
+
+
+@dataclasses.dataclass
+class LinkFaultModel:
+    """Deterministic per-link fault injector for the transport fabric.
+
+    Two fault classes, both replayable from ``seed`` alone (draws are
+    counter-based hashes of (seed, link, transfer id, chunk index,
+    attempt) — no mutable RNG state, so concurrent transfers and re-runs
+    see identical faults regardless of call order):
+
+    * ``chunk_loss_rate`` — each transmitted chunk (a whole wire counts
+      as one chunk when unchunked) is independently lost with this
+      probability. The *sender* recovers: it notices the loss after a
+      detection timeout (~``detect_rtts`` RTTs) and retransmits, up to
+      ``max_retries`` times; past that the transfer fails rather than
+      retrying forever (backends surface a failed SendHandle; the FL
+      scheduler re-issues the send at a higher level).
+    * ``blackouts`` — per-host outage windows ``{host_id: [(t0, t1)]}``:
+      nothing departs on a link while either end is dark; departures are
+      shifted to the window's end (models transient WAN partitions).
+    """
+
+    chunk_loss_rate: float = 0.0
+    max_retries: int = 4
+    detect_rtts: float = 2.0  # loss-detection timeout, in link RTTs
+    blackouts: dict = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+    def _uniform(self, src: str, dst: str, transfer_id: int,
+                 chunk_index: int, attempt: int) -> float:
+        x = (self.seed * 0x9E3779B97F4A7C15) & _M64
+        for v in (_link_hash(src, dst), transfer_id, chunk_index, attempt):
+            x = _splitmix64(x ^ (int(v) & _M64))
+        return x / 2.0 ** 64
+
+    def attempts(self, src: str, dst: str, transfer_id: int,
+                 chunk_index: int, *, forced: bool = False) -> Optional[int]:
+        """Transmissions until the chunk lands (>= 1). ``None`` when the
+        bounded retries are exhausted — the transfer *fails* instead of
+        wedging. ``forced=True`` caps at ``max_retries + 1`` but always
+        succeeds (reliable-stream paths: concurrent broadcast)."""
+        p = self.chunk_loss_rate
+        if p <= 0.0:
+            return 1
+        for a in range(self.max_retries + 1):
+            if self._uniform(src, dst, transfer_id, chunk_index, a) >= p:
+                return a + 1
+        return self.max_retries + 1 if forced else None
+
+    def delay(self, host_ids: Sequence[str], t: float) -> float:
+        """Shift a departure time past any blackout window covering it on
+        either end of the link."""
+        moved = True
+        while moved:
+            moved = False
+            for hid in host_ids:
+                for (a, b) in self.blackouts.get(hid, ()):
+                    if a <= t < b:
+                        t = b
+                        moved = True
+        return t
+
+    def detect_delay(self, region: Region) -> float:
+        """Sender-side loss-detection time before a retransmit."""
+        return self.detect_rtts * 2.0 * region.latency

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.message import FLMessage
@@ -77,23 +77,57 @@ class Endpoint:
         self.host_id = host_id
         self.inbox: List[Delivery] = []
         self.memory = MemoryMeter()
+        # transfer ids already released to recv: a duplicate chunk or a
+        # late retransmit of a completed/superseded transfer is dropped on
+        # arrival instead of starting a phantom half-group that would
+        # wedge the inbox forever. Bounded LRU — long runs complete
+        # millions of transfers, and a straggling retransmit can only be
+        # recent (all of a transfer's deliveries are scheduled together)
+        self._done_xids: "OrderedDict[int, None]" = OrderedDict()
+        self._done_cap = 4096
+
+    def _chunk_groups(self) -> Dict[int, Dict[int, Delivery]]:
+        """Live chunk deliveries, deduplicated: transfer id -> {chunk
+        index -> earliest copy}. Duplicates (retransmits that crossed the
+        original on the wire) and chunks of completed transfers are
+        discarded here — they must never double-deliver."""
+        groups: Dict[int, Dict[int, Delivery]] = {}
+        for d in self.inbox:
+            if d.chunk is None:
+                continue
+            idx, _, xid = d.chunk
+            if xid in self._done_xids:
+                continue
+            got = groups.setdefault(xid, {})
+            prev = got.get(idx)
+            # prefer the copy that carries the wire (the reassembled
+            # message needs it), then the earliest arrival
+            if prev is None \
+                    or (d.wire is not None and prev.wire is None) \
+                    or ((d.wire is None) == (prev.wire is None)
+                        and d.arrive_time < prev.arrive_time):
+                got[idx] = d
+        return groups
 
     def pop_ready(self, now: float) -> List[Delivery]:
         ready, keep = [], []
-        partial: dict = {}  # transfer id -> chunk deliveries
+        groups = self._chunk_groups()
         for d in self.inbox:
-            if d.chunk is not None:
-                partial.setdefault(d.chunk[2], []).append(d)
-            elif d.arrive_time <= now + 1e-12:
-                ready.append(d)
-            else:
-                keep.append(d)
-        for ds in partial.values():
+            if d.chunk is None:
+                if d.arrive_time <= now + 1e-12:
+                    ready.append(d)
+                else:
+                    keep.append(d)
+        for xid, got in groups.items():
+            ds = list(got.values())
             n_total = ds[0].chunk[1]
             last = max(d.arrive_time for d in ds)
             if len(ds) == n_total and last <= now + 1e-12:
                 wire = next(d.wire for d in ds if d.wire is not None)
                 ready.append(Delivery(ds[0].msg, wire, last))
+                self._done_xids[xid] = None
+                while len(self._done_xids) > self._done_cap:
+                    self._done_xids.popitem(last=False)
             else:
                 keep.extend(ds)
         self.inbox = keep
@@ -101,27 +135,32 @@ class Endpoint:
 
     def pending_times(self) -> List[float]:
         """Message-complete times of everything still in the inbox (a
-        chunked transfer counts once, at its last chunk's arrival)."""
-        times, last_chunk = [], {}
-        for d in self.inbox:
-            if d.chunk is None:
-                times.append(d.arrive_time)
-            else:
-                xid = d.chunk[2]
-                last_chunk[xid] = max(last_chunk.get(xid, -1e18),
-                                      d.arrive_time)
-        return times + list(last_chunk.values())
+        chunked transfer counts once, at its last chunk's arrival;
+        completed transfers' stray retransmits count never)."""
+        times = [d.arrive_time for d in self.inbox if d.chunk is None]
+        for got in self._chunk_groups().values():
+            times.append(max(d.arrive_time for d in got.values()))
+        return times
 
 
 class Fabric:
     """Shared in-proc fabric; one per FL deployment."""
 
-    def __init__(self, env: Environment):
+    def __init__(self, env: Environment, fault_model=None):
         self.env = env
         self.endpoints: Dict[str, Endpoint] = {}
         self.clock = 0.0
         self.stats = defaultdict(float)
         self._chunk_xfer_ids = itertools.count()
+        # optional netsim.LinkFaultModel; None = the exact fault-free
+        # timing every benchmark/test has always seen (bit-for-bit)
+        self.fault_model = fault_model
+
+    def next_transfer_id(self) -> int:
+        """Transfer-id allocator: backends take an id up front so the
+        fault model's counter-based draws and the endpoint's reassembly
+        groups key on the same identity."""
+        return next(self._chunk_xfer_ids)
 
     def register(self, host_id: str) -> Endpoint:
         ep = Endpoint(host_id)
@@ -143,13 +182,15 @@ class Fabric:
         return arrive
 
     def deliver_chunked(self, msg: FLMessage, wire: WireData,
-                        chunk_arrivals: Sequence[float]):
+                        chunk_arrivals: Sequence[float],
+                        xid: Optional[int] = None):
         """Chunk-granular delivery of one wire (ChunkStage): each chunk
         lands independently; the receiving endpoint reassembles and
         releases the message at the last chunk's arrival. Returns it."""
         inbox = self.endpoints[msg.receiver].inbox
         n = len(chunk_arrivals)
-        xid = next(self._chunk_xfer_ids)
+        if xid is None:
+            xid = self.next_transfer_id()
         for i, t in enumerate(chunk_arrivals):
             inbox.append(Delivery(msg, wire if i == n - 1 else None, t,
                                   chunk=(i, n, xid)))

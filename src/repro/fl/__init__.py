@@ -3,6 +3,7 @@ from repro.fl.async_strategies import (AggregationStrategy, FedBuffStrategy,
                                        HierarchicalStrategy, SemiSyncStrategy,
                                        make_strategy)
 from repro.fl.client import FLClient
+from repro.fl.fault import (AvailabilityTrace, FaultPlan, make_availability)
 from repro.fl.scheduler import (AsyncRunReport, EventLoop, FLScheduler,
                                 UpdateRecord)
 from repro.fl.server import FLServer, RoundReport, quorum_cutoff
@@ -11,4 +12,5 @@ __all__ = ["FLServer", "FLClient", "RoundReport", "fedavg",
            "fedavg_quantized", "staleness_weight", "quorum_cutoff",
            "FLScheduler", "EventLoop", "AsyncRunReport", "UpdateRecord",
            "AggregationStrategy", "FedBuffStrategy", "SemiSyncStrategy",
-           "HierarchicalStrategy", "make_strategy"]
+           "HierarchicalStrategy", "make_strategy", "AvailabilityTrace",
+           "FaultPlan", "make_availability"]

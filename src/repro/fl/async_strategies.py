@@ -33,7 +33,7 @@ from repro.fl.scheduler import FLScheduler, UpdateRecord
 
 
 class AggregationStrategy:
-    """Base: broadcast-once bootstrap + a staleness weight hook."""
+    """Base: broadcast-once bootstrap + staleness weight and churn hooks."""
 
     name = "base"
     staleness_exponent = 0.0
@@ -50,6 +50,19 @@ class AggregationStrategy:
 
     def on_timer(self, sched: FLScheduler, now: float, **data):
         pass
+
+    # -- churn (fl/fault.AvailabilityTrace) -----------------------------
+    def on_leave(self, sched: FLScheduler, client, now: float):
+        """A client departed. In-flight updates from it are discarded by
+        the scheduler's apply guard; strategies with round structure
+        override to re-check quorums."""
+
+    def on_join(self, sched: FLScheduler, client, now: float):
+        """A client (re)joined: hand it the current model. Over grpc+s3
+        this is the S3 late-join re-fetch (cached object, no sender
+        re-upload); round-structured strategies may instead fold the
+        client in at the next round boundary."""
+        sched.rejoin(client, now)
 
 
 class FedBuffStrategy(AggregationStrategy):
@@ -123,9 +136,11 @@ class SemiSyncStrategy(AggregationStrategy):
         self._arm(sched, now)
 
     def _need(self, sched) -> int:
-        # clamp like the sync server: a quorum can never exceed the fleet
-        need = int(np.ceil(self.quorum_fraction * len(sched.clients)))
-        return min(max(1, need), len(sched.clients))
+        # clamp like the sync server — against the *live* fleet: a quorum
+        # over departed clients would stall the round forever
+        n_live = sum(1 for c in sched.clients if sched.is_up(c.client_id))
+        need = int(np.ceil(self.quorum_fraction * max(n_live, 1)))
+        return min(max(1, need), max(n_live, 1))
 
     def _arm(self, sched, now: float):
         if self.round_deadline_s > 0:
@@ -136,6 +151,12 @@ class SemiSyncStrategy(AggregationStrategy):
     def on_update(self, sched, rec: UpdateRecord, now: float):
         self.collected.append(rec)
         if len(self.collected) >= self._need(sched):
+            self._close(sched, now)
+
+    def on_leave(self, sched, client, now: float):
+        # a departure shrinks the quorum: the collected set may already
+        # satisfy it (mid-round departures must not stall the round)
+        if self.collected and len(self.collected) >= self._need(sched):
             self._close(sched, now)
 
     def on_timer(self, sched, now: float, round_id: int):
@@ -169,10 +190,18 @@ class HierarchicalStrategy(AggregationStrategy):
     name = "hier"
 
     def __init__(self, *, relay_link: Region = LAN_TCP, relay_conns: int = 8,
-                 staleness_exponent: float = 0.0, wan_compression=None):
+                 staleness_exponent: float = 0.0, wan_compression=None,
+                 region_quorum: float = 0.5):
         self.relay_link = relay_link
         self.relay_conns = relay_conns
         self.staleness_exponent = staleness_exponent
+        # relay-level quorum: a region with fewer than
+        # ceil(region_quorum * members) live clients is *skipped* for the
+        # round (its relay sends nothing, the hub does not wait) and
+        # folded back in at the first round boundary after a rejoin
+        self.region_quorum = float(region_quorum)
+        self.rounds_with_skips = 0
+        self.idle_since: Optional[float] = None
         # gradient compression on the relay -> hub WAN hop *only*: the
         # LAN-local reduce and the model downlink stay exact, so the hub
         # merges dequantised partials and error feedback keeps each
@@ -204,11 +233,31 @@ class HierarchicalStrategy(AggregationStrategy):
         return ser + transfer_time(nbytes, self.relay_link) + deser
 
     # -- round flow --------------------------------------------------------
+    def _live_groups(self, sched) -> Dict[str, list]:
+        """Regions meeting the relay quorum this round, with their live
+        members (insertion order preserved from ``self.groups``)."""
+        active: Dict[str, list] = {}
+        for g, cs in self.groups.items():
+            live = [c for c in cs if sched.is_up(c.client_id)]
+            need = max(1, int(np.ceil(self.region_quorum * len(cs))))
+            if len(live) >= need:
+                active[g] = live
+        return active
+
     def _begin_round(self, sched, now: float):
+        active = self._live_groups(sched)
+        if not active:
+            # every region below quorum: stall until a rejoin restarts us
+            # (not counted as a skipping round — no round began)
+            self.idle_since = now
+            return
+        if len(active) < len(self.groups):
+            self.rounds_with_skips += 1
+        self.idle_since = None
         self.pending = {g: {c.client_id for c in cs}
-                        for g, cs in self.groups.items()}
-        self.partials: Dict[str, List[UpdateRecord]] = {g: []
-                                                        for g in self.groups}
+                        for g, cs in active.items()}
+        self.partials: Dict[str, List[UpdateRecord]] = {g: [] for g in active}
+        self.expected = set(active)  # groups the hub still waits on
         self.hub_records: List[UpdateRecord] = []
         be, env = self._be, sched.env
         nbytes = sched.global_payload.nbytes
@@ -216,7 +265,7 @@ class HierarchicalStrategy(AggregationStrategy):
         hub = env.host(sched.backend.host_id)
         # hub -> relays: one concurrent multi-connection WAN hop per region
         transfers, order, t_ser = [], [], now
-        for g, cs in self.groups.items():
+        for g, cs in active.items():
             relay_host = env.host(cs[0].client_id)
             region = be._link_region(cs[0].client_id)
             if be.policy.ser_parallel:
@@ -245,8 +294,34 @@ class HierarchicalStrategy(AggregationStrategy):
                 sched.loop.call_at(ready, f"hier-model>{c.client_id}",
                                    self._on_member_model, client=c, group=g)
 
+    # -- churn -----------------------------------------------------------
+    def on_leave(self, sched, client, now: float):
+        g = sched.env.host(client.client_id).region.name
+        self._member_gone(g, client.client_id, now)
+
+    def on_join(self, sched, client, now: float):
+        # folded in at the next round boundary (the relay re-counts its
+        # live members in _begin_round); if every region had churned below
+        # quorum the round loop stalled — the rejoin restarts it
+        if self.idle_since is not None and self._live_groups(sched):
+            self._begin_round(sched, now)
+
+    def _member_gone(self, group: str, client_id: str, now: float):
+        pend = getattr(self, "pending", {}).get(group)
+        if pend is None or client_id not in pend:
+            return
+        pend.discard(client_id)
+        if not pend:
+            self._finish_group(group, now)
+
     def _on_member_model(self, now: float, client, group: str):
         sched = self.sched
+        if not sched.is_up(client.client_id):
+            # departed while the model was in flight: mid-round departure
+            self._member_gone(group, client.client_id, now)
+            return
+        if client.client_id not in self.pending.get(group, set()):
+            return  # superseded round (the region closed without us)
         msg = FLMessage("model_sync", f"relay:{group}", client.client_id,
                         round=sched.version, payload=sched.global_payload,
                         metadata={"version": sched.version})
@@ -263,12 +338,30 @@ class HierarchicalStrategy(AggregationStrategy):
                            self._on_relay_update, group=group, rec=rec)
 
     def _on_relay_update(self, now: float, group: str, rec: UpdateRecord):
-        sched = self.sched
+        cid = rec.client.client_id
+        if cid not in self.pending.get(group, set()):
+            return  # departed mid-round / region already closed: dropped
         self.partials[group].append(rec)
-        self.pending[group].discard(rec.client.client_id)
+        self.pending[group].discard(cid)
         if self.pending[group]:
             return
+        self._finish_group(group, now)
+
+    def _finish_group(self, group: str, now: float):
+        """Every pending member of ``group`` reported or departed: relay
+        reduces and ships its partial over the WAN — or, churned empty,
+        notifies the hub with a bare control record so the round closes."""
+        sched = self.sched
         recs = self.partials[group]
+        be = self._be
+        if not recs:
+            member = self.groups[group][0]
+            region = be._link_region(member.client_id)
+            sched.loop.call_at(
+                now + be._overhead(region) + region.latency,
+                f"hier-skip<{group}", self._on_hub_partial, rec=None,
+                group=group)
+            return
         weight = float(sum(r.weight for r in recs))
         trees = [r.payload.tree for r in recs
                  if isinstance(r.payload, TensorPayload)]
@@ -279,7 +372,6 @@ class HierarchicalStrategy(AggregationStrategy):
             nb = recs[0].payload.nbytes
             agg_s = simulated_agg_time(nb, len(recs))
             payload = VirtualPayload(nb, tag=f"relay:{group}")
-        be = self._be
         region = be._link_region(recs[0].client.client_id)
         wan_payload, codec_s = payload, 0.0
         if self._wan_stage is not None:
@@ -302,15 +394,19 @@ class HierarchicalStrategy(AggregationStrategy):
                                staleness=0, arrive_t=now + agg_s + wan,
                                count=len(recs))
         sched.loop.call_at(hub_rec.arrive_t, f"hier-hub<{group}",
-                           self._on_hub_partial, rec=hub_rec)
+                           self._on_hub_partial, rec=hub_rec, group=group)
 
-    def _on_hub_partial(self, now: float, rec: UpdateRecord):
+    def _on_hub_partial(self, now: float, rec: Optional[UpdateRecord],
+                        group: str):
         sched = self.sched
-        self.hub_records.append(rec)
-        if len(self.hub_records) < len(self.groups):
+        self.expected.discard(group)
+        if rec is not None:
+            self.hub_records.append(rec)
+        if self.expected:
             return
         recs, self.hub_records = self.hub_records, []
-        done = sched.aggregate(recs, now)
+        # every participating region churned empty -> no merge this round
+        done = sched.aggregate(recs, now) if recs else now
         if not sched.loop.stopped:
             self._begin_round(sched, done)
 
@@ -338,6 +434,8 @@ def make_strategy(cfg, num_clients: Optional[int] = None,
         overrides.setdefault(
             "wan_compression",
             None if compression in ("", "none") else compression)
+        overrides.setdefault("region_quorum",
+                             getattr(cfg, "region_quorum", 0.5))
         return HierarchicalStrategy(
             staleness_exponent=cfg.staleness_exponent, **overrides)
     raise KeyError(f"unknown scheduler mode '{mode}' "

@@ -74,6 +74,12 @@ class AsyncRunReport:
     final_loss: Optional[float]
     n_discarded: int
     n_events: int
+    # churn / fault accounting (0 unless an AvailabilityTrace or a
+    # LinkFaultModel is installed)
+    n_departures: int = 0
+    n_rejoins: int = 0
+    n_transfer_failures: int = 0
+    n_late_refetches: int = 0
 
 
 class EventLoop:
@@ -111,7 +117,8 @@ class FLScheduler:
     """Drives an FL deployment through an EventLoop under a strategy."""
 
     def __init__(self, backend, clients: Sequence[FLClient], strategy, *,
-                 local_steps: int = 10, server_lr: float = 1.0):
+                 local_steps: int = 10, server_lr: float = 1.0,
+                 availability=None, redispatch_backoff_s: float = 30.0):
         self.backend = backend  # server-side CommBackend (or AUTO)
         self.clients = list(clients)
         self.strategy = strategy
@@ -132,15 +139,43 @@ class FLScheduler:
         self._agg_busy_until = 0.0  # server merges are serialized
         self._max_agg: Optional[int] = None
         self._target_eff: Optional[float] = None
+        # churn (fl/fault.AvailabilityTrace): clients start up; leave/join
+        # events toggle membership as first-class loop events
+        self.availability = availability
+        self.redispatch_backoff_s = redispatch_backoff_s
+        self.available = {c.client_id for c in self.clients}
+        # dispatch generation per client: bumped on leave, so a model
+        # that was in flight across a leave/rejoin blip is dropped on
+        # arrival instead of spawning a second permanent train->upload
+        # pipeline next to the rejoin dispatch
+        self._gen = {c.client_id: 0 for c in self.clients}
+        self.departures = 0
+        self.rejoins = 0
+        self.transfer_failures = 0
+        self.late_refetches = 0
 
     # -- plumbing ----------------------------------------------------------
     def _resolved(self, msg: FLMessage):
         be = self.backend
         return be.resolve(msg) if hasattr(be, "resolve") else be
 
+    def is_up(self, client_id: str) -> bool:
+        return client_id in self.available
+
     def timer(self, t: float, name: str, fn: Callable, **kw):
         """Schedule a strategy callback ``fn(scheduler, now, **kw)``."""
         self.loop.call_at(t, name, lambda now, **k: fn(self, now, **k), **kw)
+
+    def _track(self, h, name: str, fn: Callable, **kw) -> bool:
+        """Schedule the completion callback of one send handle. Returns
+        False when the fault model failed the transfer (bounded chunk
+        retransmits exhausted) — nothing was delivered, the caller picks
+        the recovery (re-dispatch / re-upload / give up)."""
+        if getattr(h, "failed", False) or math.isinf(h.inbox_t):
+            self.transfer_failures += 1
+            return False
+        self.loop.call_at(h.inbox_t, name, fn, **kw)
+        return True
 
     # -- client pipeline ---------------------------------------------------
     def _model_msg(self, client: FLClient) -> FLMessage:
@@ -149,18 +184,32 @@ class FLScheduler:
                          payload=self.global_payload,
                          metadata={"version": self.version})
 
-    def dispatch(self, client: FLClient, now: float):
+    def dispatch(self, client: FLClient, now: float, _attempt: int = 0):
         """Send the current global model to one client (non-blocking isend;
-        concurrent dispatches interleave on the shared completion path)."""
+        concurrent dispatches interleave on the shared completion path).
+        Departed clients are skipped; a fault-failed transfer is re-issued
+        after a backoff (the model distribution must survive chunk loss),
+        bounded so a fully dead link cannot spin the loop forever."""
+        if not self.is_up(client.client_id):
+            return
         h = self.backend.isend(self._model_msg(client), now)
-        self.loop.call_at(h.inbox_t, f"model>{client.client_id}",
-                          self._on_client_recv, client=client)
+        if not self._track(h, f"model>{client.client_id}",
+                           self._on_client_recv, client=client,
+                           gen=self._gen[client.client_id]):
+            if _attempt >= 25:
+                return  # link is dead: treat the client as unreachable
+            # re-issue once the sender has causally *detected* the
+            # failure (h.start = give-up time) plus a backoff
+            self.loop.call_at(max(now, h.start) + self.redispatch_backoff_s,
+                              f"redispatch>{client.client_id}",
+                              lambda t, c=client, a=_attempt:
+                              self.dispatch(c, t, a + 1))
 
     def dispatch_many(self, clients: Sequence[FLClient], now: float):
         """Burst dispatch (round start / round close): rides the backend's
         contention-aware concurrent broadcast — the same fluid model the
         sync server charges — instead of independent analytic isends."""
-        clients = list(clients)
+        clients = [c for c in clients if self.is_up(c.client_id)]
         if len(clients) <= 1:
             for c in clients:
                 self.dispatch(c, now)
@@ -169,17 +218,81 @@ class FLScheduler:
         _, arrives = self.backend.broadcast(msgs, now)
         for c, arrive in zip(clients, arrives):
             self.loop.call_at(arrive, f"model>{c.client_id}",
-                              self._on_client_recv, client=c)
+                              self._on_client_recv, client=c,
+                              gen=self._gen[c.client_id])
 
-    def _on_client_recv(self, now: float, client: FLClient):
+    def rejoin(self, client: FLClient, now: float):
+        """Late-join re-fetch: over grpc+s3 the dispatch rides the
+        content-addressed cache — the rejoining client pulls the current
+        model straight from the durable store with *no sender re-upload*
+        (the paper's single-upload/multi-download story); direct backends
+        pay a full re-send. Counted only when the current model really is
+        still stored (a cache miss is an ordinary re-upload)."""
+        msg = self._model_msg(client)
+        be = self._resolved(msg)
+        if getattr(be, "has_cached_upload", None) is not None and \
+                be.has_cached_upload(msg):
+            self.late_refetches += 1
+        self.dispatch(client, now)
+
+    def _on_availability(self, now: float, ev):
+        client = next((c for c in self.clients
+                       if c.client_id == ev.client_id), None)
+        if client is None:
+            return
+        if ev.kind == "leave" and self.is_up(ev.client_id):
+            self.available.discard(ev.client_id)
+            self._gen[ev.client_id] += 1  # invalidate in-flight dispatches
+            self.departures += 1
+            self.strategy.on_leave(self, client, now)
+        elif ev.kind == "join" and not self.is_up(ev.client_id):
+            self.available.add(ev.client_id)
+            self.rejoins += 1
+            self.strategy.on_join(self, client, now)
+
+    def _on_client_recv(self, now: float, client: FLClient,
+                        gen: Optional[int] = None):
+        stale = gen is not None and gen != self._gen[client.client_id]
         for msg, ready in client.backend.recv(now):
             if msg.msg_type != "model_sync":
                 continue
+            if stale or not self.is_up(client.client_id):
+                # the model landed at a departed client, or at one that
+                # left and rejoined while it was in flight (the rejoin
+                # dispatch owns the client's pipeline now)
+                continue
             update, _timing, send_start = client.run_round(
                 msg, ready, self.local_steps)
-            uh = client.backend.isend(update, send_start)
-            self.loop.call_at(uh.inbox_t, f"update>{client.client_id}",
-                              self._on_server_recv)
+            # stamp the pipeline generation: if the client leaves while
+            # this update is (logically) training/in flight, the stamp
+            # goes stale and the apply guard drops it even if the client
+            # has already rejoined with a fresh pipeline
+            update.metadata["_gen"] = self._gen[client.client_id]
+            self._isend_update(client, update, send_start, attempt=0)
+
+    def _isend_update(self, client: FLClient, update: FLMessage, t: float,
+                      attempt: int):
+        """Client-side upload with bounded top-level retries: a transfer
+        the fault model failed outright is re-issued, 3 attempts total,
+        before the update is abandoned (counted discarded)."""
+        uh = client.backend.isend(update, t)
+        if self._track(uh, f"update>{client.client_id}",
+                       self._on_server_recv):
+            return
+        if attempt < 2:
+            self.loop.call_at(
+                max(t, uh.start) + self.redispatch_backoff_s,
+                f"reupload>{client.client_id}", self._retry_update,
+                client=client, update=update, attempt=attempt + 1)
+        else:
+            self.discarded += 1
+
+    def _retry_update(self, now: float, client: FLClient,
+                      update: FLMessage, attempt: int):
+        if not self.is_up(client.client_id):
+            self.discarded += 1  # departed before the retry could fire
+            return
+        self._isend_update(client, update, now, attempt)
 
     def _on_server_recv(self, now: float):
         for msg, ready in self.backend.recv(now):
@@ -189,6 +302,14 @@ class FLScheduler:
                               msg=msg)
 
     def _on_apply(self, now: float, msg: FLMessage):
+        gen = msg.metadata.get("_gen")
+        if not self.is_up(msg.sender) or (
+                gen is not None and gen != self._gen.get(msg.sender)):
+            # mid-round departure: the sender left while this update was
+            # training/in flight (stale generation), or is still down —
+            # dynamic-participation semantics say it is not counted
+            self.discarded += 1
+            return
         client = next((c for c in self.clients
                        if c.client_id == msg.sender), None)
         version = int(msg.metadata.get("version", msg.round))
@@ -264,6 +385,11 @@ class FLScheduler:
             self.global_params = global_payload.tree
         self._max_agg = max_aggregations
         self._target_eff = target_effective_updates
+        if self.availability is not None:
+            for ev in self.availability.events:
+                self.loop.call_at(ev.time,
+                                  f"avail-{ev.kind}:{ev.client_id}",
+                                  self._on_availability, ev=ev)
         self.strategy.start(self, self.loop.now)
         self.loop.run(until=until)
         return self.report()
@@ -291,4 +417,8 @@ class FLScheduler:
             time_to_target=self.time_to_target,
             final_loss=losses[-1] if losses else None,
             n_discarded=self.discarded,
-            n_events=len(self.loop.trace))
+            n_events=len(self.loop.trace),
+            n_departures=self.departures,
+            n_rejoins=self.rejoins,
+            n_transfer_failures=self.transfer_failures,
+            n_late_refetches=self.late_refetches)

@@ -65,9 +65,13 @@ class FLServer:
         out = {}
         backend = self.backend
         name = getattr(backend, "name", "grpc")
-        if name == "grpc+s3" or (name == "auto" and backend.store is not None
-                                 and sends and sends[0][1].payload_nbytes
-                                 >= 10 << 20):
+        # AUTO plans the upload leg with whatever backend it would route
+        # the first update onto — resolve() sees the post-compression
+        # wire size, so a compressed large update correctly plans gRPC
+        use_s3 = name == "grpc+s3" or (
+            name == "auto" and sends
+            and backend.resolve(sends[0][1]) is backend.s3)
+        if use_s3:
             s3 = backend if name == "grpc+s3" else backend.s3
             transfers, meta = [], []
             for client, msg, start in sends:
@@ -221,14 +225,17 @@ class FLServer:
 
 
     # ------------------------------------------------------------------
-    def run_async(self, global_payload, strategy, **limits):
+    def run_async(self, global_payload, strategy, *, availability=None,
+                  **limits):
         """Event-driven execution of this deployment (fl/scheduler.py):
         same backend + clients, but the strategy decides when to merge.
-        Returns (AsyncRunReport, FLScheduler)."""
+        ``availability``: optional fl/fault.AvailabilityTrace replayed as
+        join/leave loop events. Returns (AsyncRunReport, FLScheduler)."""
         from repro.fl.scheduler import FLScheduler
         sched = FLScheduler(self.backend, self.clients, strategy,
                             local_steps=self.local_steps,
-                            server_lr=self.server_lr)
+                            server_lr=self.server_lr,
+                            availability=availability)
         report = sched.run(global_payload, **limits)
         if sched.global_params is not None:
             self.global_params = sched.global_params

@@ -27,7 +27,7 @@ from repro.core.backends import BACKEND_NAMES
 from repro.core.netsim import NCAL
 from repro.data import make_silo_datasets
 from repro.fl import FLClient, FLServer, make_strategy
-from repro.fl.fault import FaultPlan, apply_stragglers
+from repro.fl.fault import FaultPlan, apply_stragglers, make_availability
 
 
 def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
@@ -35,6 +35,10 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
                      fail_rate: float = 0.0):
     env = make_env(fl_cfg.environment, fl_cfg.num_clients)
     fabric = Fabric(env)
+    if getattr(fl_cfg, "link_loss_rate", 0.0) > 0:
+        from repro.core.netsim import LinkFaultModel
+        fabric.fault_model = LinkFaultModel(
+            chunk_loss_rate=fl_cfg.link_loss_rate, seed=fl_cfg.seed)
     store = ObjectStore(NCAL, fail_rate=fail_rate)
     for h in [env.server] + list(env.clients):
         fabric.register(h.host_id)
@@ -99,7 +103,12 @@ def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
                      args) -> int:
     """Async / semi-sync / hierarchical execution over the same deployment."""
     strategy = make_strategy(fl_cfg, fl_cfg.num_clients)
+    availability = make_availability(
+        fl_cfg.availability_trace,
+        [c.client_id for c in server.clients],
+        horizon_s=args.trace_horizon, seed=fl_cfg.seed)
     report, sched = server.run_async(TensorPayload(params), strategy,
+                                     availability=availability,
                                      max_aggregations=args.rounds)
     print(f"[fl:{report.mode}] backend={report.backend} "
           f"sim_time={report.sim_time:.2f}s "
@@ -108,6 +117,13 @@ def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
           f"(effective {report.effective_updates:.2f}, "
           f"mean staleness {report.mean_staleness:.2f}, "
           f"{report.n_discarded} discarded)")
+    if availability is not None or fl_cfg.link_loss_rate > 0:
+        fabric = server.backend.fabric
+        print(f"[fl:{report.mode}] churn: {report.n_departures} departures, "
+              f"{report.n_rejoins} rejoins "
+              f"({report.n_late_refetches} S3 late re-fetches); faults: "
+              f"{report.n_transfer_failures} failed transfers, "
+              f"{fabric.stats['retransmits']:.0f} chunk retransmits")
     for ev in sched.agg_log:
         print(f"    v{ev.version}: t={ev.time:8.2f}s n={ev.n_updates} "
               f"staleness={ev.mean_staleness:.2f} "
@@ -149,8 +165,26 @@ def main(argv=None):
     ap.add_argument("--chunk-mb", type=float, default=0.0,
                     help="split wires into pipelined chunks of this size "
                          "(0 = whole-wire sends)")
+    ap.add_argument("--availability-trace", default="",
+                    help="client churn for event-driven modes: "
+                         "'auto:MEAN_UP/MEAN_DOWN' (generated exponential "
+                         "up/down periods) or explicit "
+                         "'client0:leave@120,join@400;client3:leave@50'")
+    ap.add_argument("--trace-horizon", type=float, default=3600.0,
+                    help="horizon (sim s) for generated availability traces")
+    ap.add_argument("--link-loss", type=float, default=0.0,
+                    help="per-chunk loss probability on every direct link "
+                         "(deterministic LinkFaultModel; senders retransmit "
+                         "with bounded retries)")
+    ap.add_argument("--region-quorum", type=float, default=0.5,
+                    help="hier mode: min live fraction for a region to "
+                         "participate in a round (below it the region is "
+                         "skipped, folded back in on rejoin)")
     args = ap.parse_args(argv)
 
+    if not 0.0 <= args.link_loss < 1.0:
+        ap.error("--link-loss must be in [0, 1): a rate of 1 means no "
+                 "transmission ever succeeds")
     if args.backend == "grpc+s3" and args.environment == "lan":
         print("[fl] note: paper omits grpc+s3 on LAN; switching to auto")
         args.backend = "auto"
@@ -168,7 +202,10 @@ def main(argv=None):
                       max_staleness=args.max_staleness,
                       staleness_adaptive=args.staleness_adaptive,
                       compression=args.compression,
-                      chunk_mb=args.chunk_mb)
+                      chunk_mb=args.chunk_mb,
+                      availability_trace=args.availability_trace,
+                      link_loss_rate=args.link_loss,
+                      region_quorum=args.region_quorum)
     server, params, env, store = build_deployment(
         fl_cfg, tier=args.tier, local_steps=args.local_steps)
     if args.mode != "sync":

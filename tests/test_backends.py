@@ -193,6 +193,77 @@ def test_auto_backend_routes_by_size(deployment):
     assert auto.decisions[1][2] == "grpc+s3"
 
 
+def test_auto_routing_sees_post_compression_wire_size(deployment):
+    """§VII's 10 MB threshold is wire bytes: a qsgd-compressed 32 MB
+    update (~8.1 MB on the wire) rides plain gRPC, while the same
+    payload uncompressed rides gRPC+S3."""
+    env, fabric, store = deployment
+    nbytes = 32 * MB
+    plain = make_backend("auto", env, fabric, "server", store=store)
+    plain.send(FLMessage("m", "server", "client0",
+                         payload=VirtualPayload(nbytes, tag="u")), 0.0)
+    assert plain.decisions[-1][2] == "grpc+s3"
+
+    comp = make_backend("auto", env, fabric, "server", store=store,
+                        compression="qsgd")
+    comp.send(FLMessage("m", "server", "client0",
+                        payload=VirtualPayload(nbytes, tag="c")), 0.0)
+    kind, wire_est, backend = comp.decisions[-1]
+    assert backend == "grpc"
+    assert wire_est < 10 * MB  # the logged size is the wire estimate
+    # resolve() (the planner hook) agrees with the routed send
+    assert comp.resolve(FLMessage("m", "server", "client0",
+                                  payload=VirtualPayload(nbytes))) is comp.grpc
+    # p2p_time routes on the same estimate (charges the gRPC path)
+    assert comp.p2p_time(nbytes, "client0") == \
+        comp.grpc.p2p_time(nbytes, "client0")
+    # far above the threshold even compressed: still grpc+s3
+    comp.send(FLMessage("m", "server", "client0",
+                        payload=VirtualPayload(LARGE, tag="big")), 0.0)
+    assert comp.decisions[-1][2] == "grpc+s3"
+
+
+def test_auto_broadcast_routes_per_message(deployment):
+    """One small control record in a batch of large models must not drag
+    the models onto gRPC (and vice versa): mixed-size broadcasts split,
+    each subset keeping its backend's timing semantics."""
+    env, fabric, store = deployment
+    auto = make_backend("auto", env, fabric, "server", store=store)
+    msgs = [FLMessage("ctl", "server", "client0",
+                      payload=VirtualPayload(SMALL)),
+            FLMessage("model_sync", "server", "client1",
+                      payload=VirtualPayload(LARGE)),
+            FLMessage("ctl", "server", "client2",
+                      payload=VirtualPayload(SMALL)),
+            FLMessage("model_sync", "server", "client3",
+                      payload=VirtualPayload(LARGE))]
+    done, arrives = auto.broadcast(msgs, 0.0)
+    assert [d[2] for d in auto.decisions] == ["grpc", "grpc+s3", "grpc",
+                                              "grpc+s3"]
+    assert len(arrives) == 4 and all(a > 0 for a in arrives)
+    # arrivals stay in input order: the small control messages land well
+    # before the 1.2 GB models despite being interleaved in the batch
+    assert max(arrives[0], arrives[2]) < min(arrives[1], arrives[3])
+    # the s3 subset kept single-upload semantics (one PUT for two models)
+    assert store.stats["puts"] == 1
+    for c in env.clients:
+        fabric.endpoints[c.host_id].inbox.clear()
+
+
+def test_auto_sequential_broadcast_routes_per_message(deployment):
+    env, fabric, store = deployment
+    auto = make_backend("auto", env, fabric, "server", store=store)
+    msgs = [FLMessage("m", "server", "client0",
+                      payload=VirtualPayload(SMALL)),
+            FLMessage("m", "server", "client1",
+                      payload=VirtualPayload(LARGE))]
+    t, arrives = auto.sequential_broadcast(msgs, 0.0)
+    assert [d[2] for d in auto.decisions] == ["grpc", "grpc+s3"]
+    # blocking chain: the second send is issued only after the first lands
+    assert arrives[1] > arrives[0]
+    assert t == arrives[-1]
+
+
 def test_presigned_url_scoping():
     store = ObjectStore(NCAL)
     store.put("models/x", None, 100, 0.0)

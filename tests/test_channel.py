@@ -189,6 +189,68 @@ def test_chunked_retransmit_of_same_message_does_not_wedge(deployment):
     assert cl.next_arrival() is None  # nothing left half-assembled
 
 
+def test_duplicate_chunks_never_double_deliver(deployment):
+    """An adversarial duplicate of in-flight chunks (a retransmit that
+    crossed the original on the wire) must not complete the transfer
+    twice or early, and must not linger half-assembled."""
+    import dataclasses as dc
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store, chunk_mb=8)
+    cl = make_backend("grpc", env, fabric, "client2", store=store)
+    h = be.isend(FLMessage("m", "server", "client2",
+                           payload=VirtualPayload(32 * MB)), 0.0)
+    inbox = fabric.endpoints["client2"].inbox
+    dups = [dc.replace(d, arrive_time=d.arrive_time + 0.5)
+            for d in inbox if d.chunk is not None][:2]
+    inbox.extend(dups)
+    got = cl.recv(h.arrive + 10.0)
+    assert len(got) == 1
+    # dedupe keeps the earliest copy: the duplicate (+0.5s) neither
+    # delays completion nor re-triggers it
+    assert got[0][1] < h.arrive + 0.5
+    assert cl.next_arrival() is None  # duplicates fully drained
+
+
+def test_late_retransmit_of_completed_transfer_is_dropped(deployment):
+    """A chunk replayed after its transfer already delivered (superseded
+    transfer id) must be discarded, not start a phantom group."""
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store, chunk_mb=8)
+    cl = make_backend("grpc", env, fabric, "client2", store=store)
+    msg = FLMessage("m", "server", "client2",
+                    payload=VirtualPayload(32 * MB))
+    h = be.isend(msg, 0.0)
+    inbox = fabric.endpoints["client2"].inbox
+    first = next(d for d in inbox if d.chunk is not None)
+    n_total, xid = first.chunk[1], first.chunk[2]
+    assert len(cl.recv(h.arrive + 1.0)) == 1  # transfer completes
+    # adversary replays one chunk of the completed transfer, much later
+    from repro.core.transport import Delivery
+    inbox.append(Delivery(msg, None, h.arrive + 5.0, chunk=(0, n_total, xid)))
+    assert cl.next_arrival() is None  # not a pending message
+    assert cl.recv(h.arrive + 100.0) == []  # and never delivered
+
+
+def test_interleaved_transfers_from_two_senders_reassemble_independently(
+        deployment):
+    env, fabric, store = deployment
+    s1 = make_backend("grpc", env, fabric, "server", store=store, chunk_mb=8)
+    s2 = make_backend("grpc", env, fabric, "client1", store=store, chunk_mb=8)
+    cl = make_backend("grpc", env, fabric, "client2", store=store)
+    h1 = s1.isend(FLMessage("m", "server", "client2",
+                            payload=VirtualPayload(32 * MB)), 0.0)
+    h2 = s2.isend(FLMessage("m", "client1", "client2",
+                            payload=VirtualPayload(24 * MB)), 0.0)
+    # chunks of both transfers interleave in one inbox; nothing pops
+    # until a transfer is *fully* delivered
+    first_done = min(h1.arrive, h2.arrive)
+    early = cl.recv(first_done - 1e-6)
+    assert early == []
+    got = cl.recv(max(h1.arrive, h2.arrive) + 1.0)
+    assert sorted(g[0].payload.nbytes for g in got) == [24 * MB, 32 * MB]
+    assert cl.next_arrival() is None
+
+
 def test_unchunked_backend_has_no_chunk_deliveries(deployment):
     env, fabric, store = deployment
     be = make_backend("grpc", env, fabric, "server", store=store)

@@ -1,0 +1,359 @@
+"""Fault & churn subsystem: independent FaultPlan draws, availability
+traces, the deterministic LinkFaultModel, chunk retransmit recovery, and
+the event-driven scheduler under churn (mid-round departures, semisync
+live quorum, hier relay quorum + fold-in on rejoin)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (Fabric, FLMessage, ObjectStore, VirtualPayload,
+                        make_backend, make_env)
+from repro.core.netsim import MB, NCAL, LinkFaultModel
+from repro.fl import FedBuffStrategy, HierarchicalStrategy, SemiSyncStrategy
+from repro.fl.fault import (AvailabilityTrace, FaultPlan, make_availability)
+from repro.fl.scheduler import FLScheduler
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: independent split-stream draws (regression for the elif bug)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_marginal_rates_match_knobs():
+    """The straggler rate must be its knob, not (1-drop)*straggler: the
+    old coupled elif draw gave 0.28 effective for (0.3, 0.4)."""
+    plan = FaultPlan(drop_rate=0.3, straggler_rate=0.4, seed=7)
+    ids = [f"c{i}" for i in range(40)]
+    n = drops = strags = both = 0
+    for r in range(400):
+        d, s = plan.for_round(r, ids)
+        drops += len(d)
+        strags += len(s)
+        both += len(d & s)
+        n += len(ids)
+    assert abs(drops / n - 0.3) < 0.02
+    assert abs(strags / n - 0.4) < 0.02  # coupled draw would give ~0.28
+    # independence: joint rate is the product of the marginals
+    assert abs(both / n - 0.3 * 0.4) < 0.02
+
+
+def test_fault_plan_deterministic_and_seed_sensitive():
+    ids = [f"c{i}" for i in range(10)]
+    a = FaultPlan(drop_rate=0.5, straggler_rate=0.5, seed=3)
+    b = FaultPlan(drop_rate=0.5, straggler_rate=0.5, seed=3)
+    assert a.for_round(5, ids) == b.for_round(5, ids)
+    c = FaultPlan(drop_rate=0.5, straggler_rate=0.5, seed=4)
+    assert any(a.for_round(r, ids) != c.for_round(r, ids) for r in range(5))
+
+
+def test_fault_plan_client_can_be_both_dropped_and_straggler():
+    plan = FaultPlan(drop_rate=0.9, straggler_rate=0.9, seed=0)
+    ids = [f"c{i}" for i in range(30)]
+    d, s = plan.for_round(0, ids)
+    assert d & s  # independent draws overlap at these rates
+
+
+# ---------------------------------------------------------------------------
+# AvailabilityTrace
+# ---------------------------------------------------------------------------
+
+def test_availability_trace_parse_and_is_up():
+    tr = AvailabilityTrace.parse(
+        "client0:leave@120,join@400; client3:leave@50")
+    assert len(tr) == 3
+    assert tr.is_up("client0", 0.0)
+    assert not tr.is_up("client0", 200.0)
+    assert tr.is_up("client0", 401.0)
+    assert not tr.is_up("client3", 1e9)
+    assert tr.is_up("client1", 50.0)  # untouched clients stay up
+
+
+def test_availability_trace_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        AvailabilityTrace.parse("client0")
+    with pytest.raises(ValueError):
+        AvailabilityTrace.parse("client0:crash@5")
+
+
+def test_availability_trace_generate_is_deterministic_and_split_stream():
+    ids = [f"client{i}" for i in range(5)]
+    a = AvailabilityTrace.generate(ids, 3600, mean_up_s=600, mean_down_s=200,
+                                   seed=1)
+    b = AvailabilityTrace.generate(ids, 3600, mean_up_s=600, mean_down_s=200,
+                                   seed=1)
+    assert a.events == b.events
+    assert a.events  # something happens over a 6x-mean-up horizon
+    # alternation per client: leave, join, leave, ...
+    for cid in ids:
+        kinds = [e.kind for e in a.for_client(cid)]
+        assert kinds == (["leave", "join"] * len(kinds))[:len(kinds)]
+    # id-keyed streams: adding a client does not reshuffle existing
+    # traces, even one that sorts into the middle of the fleet
+    # ("client12" sorts between client1 and client2)
+    c = AvailabilityTrace.generate(ids + ["client12"], 3600, mean_up_s=600,
+                                   mean_down_s=200, seed=1)
+    for cid in ids:
+        assert c.for_client(cid) == a.for_client(cid)
+
+
+def test_make_availability_adapter():
+    assert make_availability("", ["a"], 100.0) is None
+    tr = make_availability("auto:50/20", ["a", "b"], 500.0, seed=2)
+    assert isinstance(tr, AvailabilityTrace) and len(tr) > 0
+    tr2 = make_availability("a:leave@5", ["a"], 100.0)
+    assert not tr2.is_up("a", 6.0)
+
+
+# ---------------------------------------------------------------------------
+# LinkFaultModel
+# ---------------------------------------------------------------------------
+
+def test_link_fault_model_deterministic_counter_based():
+    fm = LinkFaultModel(chunk_loss_rate=0.3, seed=5)
+    draws = [fm.attempts("a", "b", xid, c) for xid in range(20)
+             for c in range(4)]
+    fm2 = LinkFaultModel(chunk_loss_rate=0.3, seed=5)
+    assert draws == [fm2.attempts("a", "b", xid, c) for xid in range(20)
+                     for c in range(4)]
+    assert any(d > 1 for d in draws) and any(d == 1 for d in draws)
+    assert LinkFaultModel(chunk_loss_rate=0.0).attempts("a", "b", 0, 0) == 1
+
+
+def test_link_fault_model_bounded_retries_and_forced_mode():
+    fm = LinkFaultModel(chunk_loss_rate=0.999, max_retries=3, seed=1)
+    draws = [fm.attempts("a", "b", x, 0) for x in range(50)]
+    assert None in draws  # cap exhausted -> transfer failed
+    forced = [fm.attempts("a", "b", x, 0, forced=True) for x in range(50)]
+    assert all(f is not None and f <= fm.max_retries + 1 for f in forced)
+
+
+def test_link_fault_model_blackout_delays_departures():
+    fm = LinkFaultModel(blackouts={"hk": [(10.0, 20.0)], "sv": [(19.0, 25.0)]})
+    assert fm.delay(("sv", "hk"), 5.0) == 5.0
+    # cascading windows on both ends: 12 -> 20 (hk) -> 25 (sv)
+    assert fm.delay(("sv", "hk"), 12.0) == 25.0
+    assert fm.delay(("sv", "hk"), 30.0) == 30.0
+
+
+# ---------------------------------------------------------------------------
+# chunk retransmit over a real backend
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def deployment():
+    env = make_env("geo_distributed")
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    return env, fabric, store
+
+
+def test_chunk_loss_recovers_via_retransmit_exactly_once(deployment):
+    env, fabric, store = deployment
+    fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.25, seed=3)
+    be = make_backend("grpc", env, fabric, "server", store=store, chunk_mb=4)
+    cl = make_backend("grpc", env, fabric, "client3", store=store)
+    h = be.isend(FLMessage("m", "server", "client3",
+                           payload=VirtualPayload(64 * MB)), 0.0)
+    assert not h.failed and math.isfinite(h.arrive)
+    assert fabric.stats["retransmits"] > 0  # faults actually fired
+    got = cl.recv(h.arrive + 1.0)
+    assert len(got) == 1 and got[0][0].payload.nbytes == 64 * MB
+    assert cl.next_arrival() is None  # fully reassembled, nothing wedged
+
+
+def test_chunk_loss_makes_transfer_slower_not_wedged(deployment):
+    env, fabric, store = deployment
+    clean = make_backend("grpc", env, fabric, "server", store=store,
+                         chunk_mb=4)
+    h0 = clean.isend(FLMessage("m", "server", "client3",
+                               payload=VirtualPayload(64 * MB)), 0.0)
+    fabric.endpoints["client3"].inbox.clear()
+    fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.25, seed=3)
+    lossy = make_backend("grpc", env, fabric, "server", store=store,
+                         chunk_mb=4)
+    h1 = lossy.isend(FLMessage("m", "server", "client3",
+                               payload=VirtualPayload(64 * MB)), 0.0)
+    assert h1.arrive > h0.arrive  # retransmits cost time...
+    assert h1.arrive < 3 * h0.arrive  # ...but bounded
+
+
+def test_exhausted_retries_fail_the_send_handle(deployment):
+    env, fabric, store = deployment
+    fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.9999, max_retries=2,
+                                        seed=0)
+    be = make_backend("grpc", env, fabric, "server", store=store)
+    h = be.isend(FLMessage("m", "server", "client1",
+                           payload=VirtualPayload(8 * MB)), 0.0)
+    assert h.failed and math.isinf(h.arrive)
+    assert fabric.stats["transfers_failed"] >= 1
+    cl = make_backend("grpc", env, fabric, "client1", store=store)
+    assert cl.recv(1e9) == []  # nothing was delivered
+    assert cl.next_arrival() is None
+
+
+def test_zero_rate_fault_model_is_bit_for_bit_noop(deployment):
+    env, fabric, store = deployment
+    be = make_backend("grpc", env, fabric, "server", store=store, chunk_mb=8)
+    msg = lambda: FLMessage("m", "server", "client2",
+                            payload=VirtualPayload(64 * MB))
+    h0 = be.isend(msg(), 0.0)
+    fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.0, seed=9)
+    be2 = make_backend("grpc", env, fabric, "server", store=store, chunk_mb=8)
+    h1 = be2.isend(msg(), 0.0)
+    assert h1.arrive == h0.arrive and h1.start == h0.start
+
+
+# ---------------------------------------------------------------------------
+# scheduler under churn
+# ---------------------------------------------------------------------------
+
+def _deployment(backend="grpc", n=4, env_name="geo_distributed"):
+    env = make_env(env_name, n)
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    from repro.fl import FLClient
+    clients = [FLClient(h.host_id,
+                        make_backend(backend, env, fabric, h.host_id,
+                                     store=store), sim_train_s=5.0)
+               for h in env.clients]
+    sb = make_backend(backend, env, fabric, "server", store=store)
+    return sb, clients, store
+
+
+def test_fedbuff_discards_midround_departure_and_rejoins():
+    sb, clients, _ = _deployment(n=4)
+    # client1 leaves while its first update is in flight (train ends ~5s
+    # after model arrival), rejoins later, leaves again at the horizon
+    trace = AvailabilityTrace.parse("client1:leave@5.5,join@15")
+    sched = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=2, staleness_exponent=0.5),
+                        availability=trace)
+    rep = sched.run(VirtualPayload(4 * MB, tag="churn"), max_aggregations=8)
+    assert rep.n_departures == 1 and rep.n_rejoins == 1
+    assert rep.n_discarded >= 1  # the in-flight update was not counted
+    assert rep.n_aggregations == 8  # the fleet kept making progress
+    # while down, client1 contributed nothing
+    down = [cid for (t, cid, _) in sched.update_log if 6 < t < 15]
+    assert "client1" not in down
+
+
+def test_quick_leave_rejoin_blip_does_not_duplicate_pipeline():
+    """A leave/rejoin blip while the model is still in flight must not
+    leave the client with two permanent dispatch->train->upload loops:
+    the pre-leave model is dropped on arrival (stale generation), the
+    rejoin dispatch owns the pipeline."""
+    def run(trace):
+        sb, clients, _ = _deployment(n=2)
+        sched = FLScheduler(
+            sb, clients, FedBuffStrategy(buffer_k=1, staleness_exponent=0.0),
+            availability=trace)
+        # 200 MB over the WAN: the model is in flight well past the blip
+        sched.run(VirtualPayload(200 * MB, tag="blip"), max_aggregations=12)
+        counts = {}
+        for (_, cid, _) in sched.update_log:
+            counts[cid] = counts.get(cid, 0) + 1
+        return counts
+    base = run(None)
+    blip = run(AvailabilityTrace.parse("client0:leave@0.5,join@0.9"))
+    # one pipeline only: the blip must not let client0 out-report its own
+    # churn-free baseline (a duplicated loop roughly doubles its count)
+    assert blip.get("client0", 0) <= base.get("client0", 0)
+    assert blip.get("client1", 0) >= base.get("client1", 0) - 1
+
+
+def test_rejoin_over_s3_is_a_late_refetch_not_a_reupload():
+    sb, clients, store = _deployment(backend="grpc+s3", n=3)
+    trace = AvailabilityTrace.parse("client1:leave@2,join@10")
+    sched = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=2, staleness_exponent=0.0),
+                        availability=trace)
+    rep = sched.run(VirtualPayload(16 * MB, tag="s3churn"),
+                    max_aggregations=4)
+    assert rep.n_late_refetches >= 1
+    assert rep.n_rejoins == 1
+
+
+def test_semisync_quorum_shrinks_when_clients_leave():
+    sb, clients, _ = _deployment(n=4)
+    # two clients leave before anyone reports: quorum 1.0 over 4 would
+    # stall forever; over the live fleet the round closes with 2
+    trace = AvailabilityTrace.parse("client2:leave@1;client3:leave@1")
+    sched = FLScheduler(sb, clients,
+                        SemiSyncStrategy(quorum_fraction=1.0),
+                        availability=trace)
+    rep = sched.run(VirtualPayload(4 * MB, tag="semi"), max_aggregations=3)
+    assert rep.n_aggregations == 3
+    assert all(e.n_updates <= 2 for e in sched.agg_log)
+
+
+def test_hier_skips_below_quorum_region_and_folds_in_on_rejoin():
+    # 8 clients over 7 regions: region ncal holds client0 AND client7
+    sb, clients, _ = _deployment(n=8)
+    strat = HierarchicalStrategy(region_quorum=0.5)
+    # both ncal members leave mid-round-2 (region churns to 0/2 live,
+    # below any quorum); client0 rejoins a couple of rounds later
+    trace = AvailabilityTrace.parse(
+        "client0:leave@7,join@13;client7:leave@7")
+    sched = FLScheduler(sb, clients, strat, availability=trace,
+                        local_steps=1)
+    rep = sched.run(VirtualPayload(4 * MB, tag="hier"), max_aggregations=5)
+    assert rep.n_aggregations == 5
+    assert strat.rounds_with_skips >= 1  # ncal skipped while below quorum
+    # per-round relay partials: 7 regions full, 6 while ncal is churned
+    # out (mid-round departure then begin-of-round skip), back to 7 once
+    # client0 rejoins (folded in with 1 of 2 members live)
+    regions_per_round = [e.n_updates for e in sched.agg_log]
+    assert regions_per_round[0] == 7
+    assert 6 in regions_per_round
+    assert regions_per_round[-1] == 7
+    # client updates: 8 (full) + 6 + 6 + 7 + 7 (one ncal member back)
+    assert rep.n_client_updates == 34
+
+
+def test_hier_full_quorum_no_churn_unchanged():
+    """The quorum machinery must be a pure no-op without churn: same
+    aggregation count and per-round participation as the fleet size."""
+    sb, clients, _ = _deployment(n=8)
+    strat = HierarchicalStrategy(region_quorum=1.0)
+    sched = FLScheduler(sb, clients, strat, local_steps=1)
+    rep = sched.run(VirtualPayload(4 * MB, tag="noc"), max_aggregations=2)
+    assert rep.n_aggregations == 2
+    assert rep.n_client_updates == 16  # 8 clients x 2 rounds
+    assert strat.rounds_with_skips == 0
+
+
+def test_scheduler_survives_failed_transfers_via_redispatch():
+    sb, clients, _ = _deployment(n=3)
+    fabric = sb.fabric
+    # high loss + tiny retry budget: some sends fail outright; the
+    # scheduler's backoff redispatch must still finish the run
+    fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.45, max_retries=1,
+                                        seed=11)
+    sched = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=2, staleness_exponent=0.0),
+                        redispatch_backoff_s=5.0)
+    rep = sched.run(VirtualPayload(8 * MB, tag="lossy"), max_aggregations=4)
+    assert rep.n_aggregations == 4
+    assert rep.n_transfer_failures > 0  # failures happened AND were healed
+
+
+def test_availability_trace_runs_are_deterministic():
+    def once():
+        sb, clients, _ = _deployment(n=4)
+        trace = AvailabilityTrace.generate(
+            [c.client_id for c in clients], 200.0, mean_up_s=30,
+            mean_down_s=10, seed=4)
+        sched = FLScheduler(sb, clients,
+                            FedBuffStrategy(buffer_k=2,
+                                            staleness_exponent=0.5),
+                            availability=trace)
+        sched.run(VirtualPayload(4 * MB, tag="det"), max_aggregations=6)
+        return sched
+    a, b = once(), once()
+    assert a.loop.trace == b.loop.trace
+    assert a.update_log == b.update_log
+    assert (a.departures, a.rejoins) == (b.departures, b.rejoins)
