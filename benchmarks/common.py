@@ -1,23 +1,44 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark deployment is described by a ``repro.scenario.Scenario``
+and built through its runtime — the same single path ``fl_train
+--scenario`` takes — so a figure cell is literally an enumeration of
+scenario specs."""
 from __future__ import annotations
 
 import time
 
 from repro.configs.paper_tiers import TIER_ORDER, TIERS
-from repro.core import Fabric, ObjectStore, make_backend, make_env
-from repro.core.netsim import NCAL
+from repro.scenario import (ChannelSpec, FaultSpec, Scenario, StrategySpec,
+                            TopologySpec, build_runtime)
 
 ENVS = ["lan", "geo_proximal", "geo_distributed"]
 BACKENDS = ["mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc", "grpc+s3"]
 
 
-def deployment(env_name: str, fail_rate: float = 0.0):
-    env = make_env(env_name)
-    fabric = Fabric(env)
-    store = ObjectStore(NCAL, fail_rate=fail_rate)
-    for h in [env.server] + list(env.clients):
-        fabric.register(h.host_id)
-    return env, fabric, store
+def scenario_for(env_name: str, *, backend: str = "grpc",
+                 num_clients: int = 7, compression: str = "none",
+                 wire_codec: str = "none", chunk_mb: float = 0.0,
+                 link_loss: float = 0.0, fail_rate: float = 0.0,
+                 mode: str = "sync", seed: int = 0,
+                 name: str = "") -> Scenario:
+    """One benchmark cell as a declarative scenario."""
+    return Scenario(
+        name=name or f"bench:{env_name}:{backend}", seed=seed,
+        topology=TopologySpec.preset(env_name, num_clients=num_clients),
+        channel=ChannelSpec(backend=backend, compression=compression,
+                            wire_codec=wire_codec, chunk_mb=chunk_mb),
+        faults=FaultSpec(link_loss=link_loss, store_fail_rate=fail_rate),
+        strategy=StrategySpec(mode=mode))
+
+
+def deployment(env_name: str, fail_rate: float = 0.0,
+               num_clients: int = 7):
+    """Build the named preset scenario's runtime; returns the classic
+    (env, fabric, store) triple the figure modules consume."""
+    rt = build_runtime(scenario_for(env_name, fail_rate=fail_rate,
+                                    num_clients=num_clients))
+    return rt.env, rt.fabric, rt.store
 
 
 def backends_for(env_name: str):

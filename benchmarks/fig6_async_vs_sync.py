@@ -28,15 +28,15 @@ import json
 import math
 import os
 
+from benchmarks.common import scenario_for
 from repro.configs.paper_tiers import TIERS
-from repro.core import (Fabric, ObjectStore, VirtualPayload, make_backend,
-                        make_env)
-from repro.core.netsim import NCAL
+from repro.core import VirtualPayload
 from repro.fl.async_strategies import (FedBuffStrategy, HierarchicalStrategy,
                                        SemiSyncStrategy)
 from repro.fl.client import FLClient
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
+from repro.scenario import build_runtime
 
 N_CLIENTS = 14
 OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
@@ -44,20 +44,13 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
 
 
 def _make_deployment(backend_name, env_name, tier):
-    env = make_env(env_name, N_CLIENTS)
-    fabric = Fabric(env)
-    store = ObjectStore(NCAL)
-    for h in [env.server] + list(env.clients):
-        fabric.register(h.host_id)
-    clients = [
-        FLClient(h.host_id,
-                 make_backend(backend_name, env, fabric, h.host_id,
-                              store=store),
-                 sim_train_s=tier.train_s(env_name))
-        for h in env.clients]
-    server_backend = make_backend(backend_name, env, fabric, "server",
-                                  store=store)
-    return server_backend, clients
+    rt = build_runtime(scenario_for(env_name, backend=backend_name,
+                                    num_clients=N_CLIENTS,
+                                    name=f"fig6:{env_name}:{backend_name}"))
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s(env_name))
+               for h in rt.env.clients]
+    return rt.make_backend("server"), clients
 
 
 def _metrics(n_agg, n_updates, eff, span, target, time_to_target):

@@ -28,14 +28,14 @@ import os
 
 import numpy as np
 
+from benchmarks.common import scenario_for
 from repro.configs.paper_tiers import TIERS
-from repro.core import (Fabric, ObjectStore, TensorPayload, VirtualPayload,
-                        make_backend, make_env)
-from repro.core.netsim import NCAL
+from repro.core import TensorPayload, VirtualPayload
 from repro.fl.async_strategies import FedBuffStrategy, HierarchicalStrategy
 from repro.fl.client import FLClient
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
+from repro.scenario import build_runtime
 
 N_CLIENTS = 14
 OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
@@ -43,20 +43,14 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
 
 
 def _make_deployment(backend_name, tier, compression=None):
-    env = make_env("geo_distributed", N_CLIENTS)
-    fabric = Fabric(env)
-    store = ObjectStore(NCAL)
-    for h in [env.server] + list(env.clients):
-        fabric.register(h.host_id)
-    clients = [
-        FLClient(h.host_id,
-                 make_backend(backend_name, env, fabric, h.host_id,
-                              store=store, compression=compression),
-                 sim_train_s=tier.train_s("geo_distributed"))
-        for h in env.clients]
-    server_backend = make_backend(backend_name, env, fabric, "server",
-                                  store=store)
-    return server_backend, clients
+    rt = build_runtime(scenario_for(
+        "geo_distributed", backend=backend_name, num_clients=N_CLIENTS,
+        compression=compression or "none",
+        name=f"fig7:{backend_name}:{compression or 'none'}"))
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s("geo_distributed"))
+               for h in rt.env.clients]
+    return rt.make_backend("server", compression="none"), clients
 
 
 def _run_cell(mode, backend_name, tier, compression, max_agg):
@@ -105,21 +99,15 @@ def _linear_train_fn():
 
 def _live_deployment(n):
     from repro.data import make_silo_datasets
-    env = make_env("geo_distributed", n)
-    fabric = Fabric(env)
-    store = ObjectStore(NCAL)
-    for h in [env.server] + list(env.clients):
-        fabric.register(h.host_id)
+    rt = build_runtime(scenario_for("geo_distributed", backend="grpc",
+                                    num_clients=n, name="fig7:fidelity"))
     silos = make_silo_datasets(n, kind="image", examples_per_silo=24,
                                num_classes=N_CLASSES, image_size=8, seed=0)
-    clients = [FLClient(h.host_id,
-                        make_backend("grpc", env, fabric, h.host_id,
-                                     store=store),
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
                         dataset=silos[i], train_fn=_linear_train_fn(),
                         batch_size=8, sim_train_s=5.0, seed=i)
-               for i, h in enumerate(env.clients)]
-    sb = make_backend("grpc", env, fabric, "server", store=store)
-    return sb, clients
+               for i, h in enumerate(rt.env.clients)]
+    return rt.make_backend("server"), clients
 
 
 def _init_params():
@@ -159,7 +147,7 @@ def _fidelity(rounds):
               for k in flat_params)
     tol = max(8.0 * upd / 127.0, 1e-4)
     residuals = [float(np.max(np.abs(np.asarray(s.error))))
-                 for s in strat._wan_stage._state.values()]
+                 for s in strat.wan_ef_states()]
     return err, tol, upd, residuals
 
 

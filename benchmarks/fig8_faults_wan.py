@@ -42,50 +42,50 @@ import os
 
 import numpy as np
 
+from benchmarks.common import scenario_for
 from repro.configs.paper_tiers import TIERS
-from repro.core import (Fabric, ObjectStore, TensorPayload, VirtualPayload,
-                        make_backend, make_env)
-from repro.core.netsim import NCAL, LinkFaultModel
+from repro.core import TensorPayload, VirtualPayload
 from repro.fl.async_strategies import FedBuffStrategy, HierarchicalStrategy
 from repro.fl.client import FLClient
 from repro.fl.fault import AvailabilityTrace, mpi_abort_recovery_time
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
+from repro.scenario import build_runtime
 
 N_CLIENTS = 14
 CHUNK_MB = 8.0  # direct backends ride pipelined chunks (loss granularity)
 OVERHEAD_BOUND = 2.0  # lossy run must stay within this factor of clean
 CKPT_RESTORE_BW = 1024 ** 3  # bytes/s checkpoint restore (local disk)
+FAULT_SEED = 8
 OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
                         "fig8_faults_wan.json")
 
 
-def _make_deployment(backend_name, tier, *, fault_model=None,
+def _make_deployment(backend_name, tier, *, link_loss=0.0,
                      store_fail_rate=0.0, chunk_mb=0.0):
-    env = make_env("geo_distributed", N_CLIENTS)
-    fabric = Fabric(env, fault_model=fault_model)
-    store = ObjectStore(NCAL, fail_rate=store_fail_rate)
-    for h in [env.server] + list(env.clients):
-        fabric.register(h.host_id)
-    clients = [
-        FLClient(h.host_id,
-                 make_backend(backend_name, env, fabric, h.host_id,
-                              store=store, chunk_mb=chunk_mb),
-                 sim_train_s=tier.train_s("geo_distributed"))
-        for h in env.clients]
-    server_backend = make_backend(backend_name, env, fabric, "server",
-                                  store=store, chunk_mb=chunk_mb)
-    return server_backend, clients, fabric, store
+    rt = build_runtime(scenario_for(
+        "geo_distributed", backend=backend_name, num_clients=N_CLIENTS,
+        link_loss=link_loss, fail_rate=store_fail_rate, chunk_mb=chunk_mb,
+        seed=FAULT_SEED, name=f"fig8:{backend_name}:loss={link_loss:g}"))
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s("geo_distributed"))
+               for h in rt.env.clients]
+    return (rt.make_backend("server"), clients, rt.fabric, rt.store)
 
 
 def _run_fedbuff(backend_name, tier, max_agg, *, loss=None,
                  availability=None):
-    fm = (LinkFaultModel(chunk_loss_rate=loss, seed=8)
-          if loss is not None else None)
     sb, clients, fabric, store = _make_deployment(
-        backend_name, tier, fault_model=fm,
+        backend_name, tier, link_loss=loss or 0.0,
         store_fail_rate=(loss or 0.0) if backend_name == "grpc+s3" else 0.0,
         chunk_mb=CHUNK_MB if backend_name != "grpc+s3" else 0.0)
+    if loss == 0.0:
+        # a zero-rate fault model must be bit-for-bit the fault-free
+        # path; build_runtime installs None for loss=0, so force an
+        # explicit zero-rate model for the equivalence probe
+        from repro.core.netsim import LinkFaultModel
+        fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.0,
+                                            seed=FAULT_SEED)
     strategy = FedBuffStrategy(buffer_k=max(2, N_CLIENTS // 2),
                                staleness_exponent=0.5)
     sched = FLScheduler(sb, clients, strategy, local_steps=1,
@@ -124,6 +124,30 @@ def _mpi_abort_model(tier):
             "faulted_round_total_s": faulted.round_time + recovery_s,
             "abort_factor": (faulted.round_time + recovery_s)
             / clean.round_time}
+
+
+# ---------------------------------------------------------------------------
+# hier: chunk loss on the relay WAN edge (a real backend channel now —
+# before the scenario redesign this hop was analytic and LinkFaultModel
+# could not touch it)
+# ---------------------------------------------------------------------------
+
+def _run_hier(tier, max_agg, *, loss=None):
+    sb, clients, fabric, store = _make_deployment(
+        "grpc", tier, link_loss=loss or 0.0, chunk_mb=CHUNK_MB)
+    if loss == 0.0:
+        from repro.core.netsim import LinkFaultModel
+        fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.0,
+                                            seed=FAULT_SEED)
+    strategy = HierarchicalStrategy(region_quorum=1.0, chunk_mb=CHUNK_MB)
+    sched = FLScheduler(sb, clients, strategy, local_steps=1)
+    rep = sched.run(VirtualPayload(tier.payload_bytes, tag="fig8hl"),
+                    max_aggregations=max_agg)
+    return {"sim_time_s": rep.sim_time,
+            "n_aggregations": rep.n_aggregations,
+            "retransmits": fabric.stats["retransmits"],
+            "transfers_failed": fabric.stats["transfers_failed"],
+            "trace": tuple(sched.loop.trace)}
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +241,35 @@ def run(verbose=True, quick=False):
                       f"failed={m['transfers_failed']:.0f}")
         report["cells"][backend_name] = cell
 
+    # 1b) chunk loss on the hier relay WAN edge: the relay -> hub hop is
+    # a real (faultable) backend channel over the topology graph edge
+    hier_base = _run_hier(tier, max_agg, loss=None)
+    hier_zero = _run_hier(tier, max_agg, loss=0.0)
+    hier_loss = _run_hier(tier, max_agg, loss=losses[0])
+    report["hier_relay_loss"] = {
+        "clean_sim_time_s": hier_base["sim_time_s"],
+        "zero_loss_identical": hier_base["trace"] == hier_zero["trace"]
+        and hier_base["sim_time_s"] == hier_zero["sim_time_s"],
+        "loss": losses[0],
+        "sim_time_s": hier_loss["sim_time_s"],
+        "n_aggregations": hier_loss["n_aggregations"],
+        "retransmits": hier_loss["retransmits"],
+        "transfers_failed": hier_loss["transfers_failed"],
+        "overhead_factor": hier_loss["sim_time_s"]
+        / hier_base["sim_time_s"]}
+    rows.append({"name": f"fig8/hier/grpc/relay_loss={losses[0]}",
+                 "round_s": hier_loss["sim_time_s"] / max(
+                     hier_loss["n_aggregations"], 1),
+                 "overhead_factor": report["hier_relay_loss"][
+                     "overhead_factor"],
+                 "retransmits": hier_loss["retransmits"]})
+    if verbose:
+        h = report["hier_relay_loss"]
+        print(f"[fig8] hier    grpc      loss={h['loss']:<5g} "
+              f"sim={h['sim_time_s']:8.1f}s "
+              f"(x{h['overhead_factor']:.2f} of clean) relay-edge "
+              f"retransmits={h['retransmits']:.0f}")
+
     # 2) MPI abort-recovery model
     mpi = _mpi_abort_model(tier)
     report["mpi_abort"] = mpi
@@ -288,6 +341,16 @@ def _validate(report, verbose):
             assert recovered > 0, (
                 f"fig8: {backend_name} loss={loss} injected faults never "
                 f"fired (retransmits+s3_retries == 0)")
+    hier_loss = report["hier_relay_loss"]
+    assert hier_loss["zero_loss_identical"], (
+        "fig8: hier zero-rate fault model diverged from fault-free run")
+    assert hier_loss["retransmits"] > 0, (
+        "fig8: chunk loss on the hier relay WAN edge never fired — the "
+        "relay hop must ride the faultable backend channel")
+    assert hier_loss["n_aggregations"] >= 1 and \
+        hier_loss["overhead_factor"] <= OVERHEAD_BOUND, (
+        f"fig8: hier under relay-edge loss wedged or overran "
+        f"(x{hier_loss['overhead_factor']:.2f})")
     mpi = report["mpi_abort"]
     assert mpi["abort_factor"] > 2.0, (
         f"fig8: MPI abort-recovery must cost more than 2x a clean round "

@@ -1,0 +1,188 @@
+"""Fig 9 (beyond the paper): topology as a tuning knob under WAN.
+
+Marfoq & Neglia's *Throughput-Optimal Topology Design for Cross-Silo FL*
+argues the aggregation topology is a first-class knob next to backend
+choice. The scenario layer makes that claim runnable: each cell of this
+study is literally one ``Scenario`` whose ``TopologySpec`` names a graph
+preset, enumerated over backends:
+
+* ``star``      — the paper's default hub-and-spoke: synchronous FedAvg
+  rounds, every silo's update crosses its own WAN link to the hub.
+* ``multi_hub`` — hierarchical per-region relays (HierarchicalStrategy):
+  LAN-class intra-region reduce from the graph's DC edges, then one
+  multi-connection WAN hop per region over the relay's real backend
+  channel.
+* ``ring``      — a token ring over the graph's client-client edges
+  (bottleneck-of-both-hub-links capacity, summed latency): the partial
+  aggregate hops silo to silo and the last one closes to the hub. Every
+  hop is a real backend send over the ring edge.
+
+14 clients (2 per Table-I region), tier Big, gRPC and gRPC+S3.
+
+Validations (CI gate):
+1. hierarchical (multi_hub) beats star round time for gRPC at the big
+   tier on the WAN — aggregating inside the region before crossing the
+   WAN pays;
+2. the ring is never the fastest topology at 14 clients for any backend —
+   serialising 14 WAN hops loses to both alternatives (its O(n) critical
+   path is the Marfoq et al. argument against plain rings at silo count).
+
+Emits ``benchmarks/out/fig9_topology_wan.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import scenario_for
+from repro.configs.paper_tiers import TIERS
+from repro.core import FLMessage, VirtualPayload
+from repro.fl.async_strategies import HierarchicalStrategy
+from repro.fl.client import FLClient
+from repro.fl.scheduler import FLScheduler
+from repro.fl.server import FLServer
+from repro.scenario import build_runtime
+
+N_CLIENTS = 14
+BACKENDS = ["grpc", "grpc+s3"]
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "fig9_topology_wan.json")
+
+
+def _scenario(topology, backend, mode):
+    return scenario_for(topology, backend=backend, num_clients=N_CLIENTS,
+                        mode=mode, name=f"fig9:{topology}:{backend}")
+
+
+def _run_star(backend, tier, rounds):
+    """Synchronous FedAvg over the pure hub-and-spoke graph."""
+    sc = _scenario("star", backend, "sync")
+    rt = build_runtime(sc)
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s("star"))
+               for h in rt.env.clients]
+    server = FLServer(rt.make_backend("server"), clients, local_steps=1,
+                      live=False)
+    for r in range(rounds):
+        server.run_round(VirtualPayload(tier.payload_bytes,
+                                        tag=f"fig9-star-r{r}"))
+    return {"scenario": sc.to_dict(), "round_s": server.now / rounds,
+            "sim_time_s": server.now, "rounds": rounds}
+
+
+def _run_hier(backend, tier, rounds):
+    """Hierarchical relays over the multi_hub graph (real relay WAN
+    channel, intra-region reduce over the graph's DC edges)."""
+    sc = _scenario("multi_hub", backend, "hier")
+    rt = build_runtime(sc)
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s("multi_hub"))
+               for h in rt.env.clients]
+    strategy = HierarchicalStrategy(staleness_exponent=0.0)
+    sched = FLScheduler(rt.make_backend("server"), clients, strategy,
+                        local_steps=1)
+    rep = sched.run(VirtualPayload(tier.payload_bytes, tag="fig9-hier"),
+                    max_aggregations=rounds)
+    return {"scenario": sc.to_dict(),
+            "round_s": rep.sim_time / max(rep.n_aggregations, 1),
+            "sim_time_s": rep.sim_time, "rounds": rep.n_aggregations}
+
+
+def _run_ring(backend, tier, rounds):
+    """Token-ring aggregation over the ring graph's client-client edges:
+    broadcast the model, train, then the partial aggregate circles
+    silo -> silo (each hop a real backend send over the ring edge) and
+    the last silo closes to the hub."""
+    sc = _scenario("ring", backend, "sync")
+    rt = build_runtime(sc)
+    ids = [h.host_id for h in rt.env.clients]
+    bes = {cid: rt.make_backend(cid) for cid in ids}
+    server_be = rt.make_backend("server")
+    train_s = tier.train_s("ring")
+    t0, n = 0.0, len(ids)
+    for r in range(rounds):
+        payload = VirtualPayload(tier.payload_bytes, tag=f"fig9-ring-r{r}")
+        msgs = [FLMessage("model_sync", "server", cid, payload=payload)
+                for cid in ids]
+        _, arrives = server_be.broadcast(msgs, t0)
+        ready = []
+        for cid, arrive in zip(ids, arrives):
+            got = bes[cid].recv(arrive + 1e9)
+            ready.append(max(rt_ for _, rt_ in got) + train_s)
+        # the token: client i folds its update into the partial and
+        # forwards it to client i+1; the last closes to the hub
+        t = ready[0]
+        for i, cid in enumerate(ids):
+            nxt = ids[i + 1] if i + 1 < n else "server"
+            partial = VirtualPayload(tier.payload_bytes,
+                                     tag=f"fig9-ring-r{r}-hop{i}")
+            h = bes[cid].isend(FLMessage("client_update", cid, nxt,
+                                         payload=partial), t)
+            rcv = bes[nxt].recv(h.arrive + 1e9) if nxt != "server" \
+                else server_be.recv(h.arrive + 1e9)
+            landed = max(rt_ for _, rt_ in rcv)
+            # the next silo forwards once it holds the token AND its own
+            # update is trained
+            t = max(landed, ready[i + 1]) if i + 1 < n else landed
+        t0 = t
+    return {"scenario": sc.to_dict(), "round_s": t0 / rounds,
+            "sim_time_s": t0, "rounds": rounds}
+
+
+RUNNERS = {"star": _run_star, "multi_hub": _run_hier, "ring": _run_ring}
+
+
+def run(verbose=True, quick=False):
+    tier = TIERS["big"]
+    rounds = 2 if quick else 4
+    rows, report = [], {"n_clients": N_CLIENTS, "tier": tier.name,
+                        "cells": {}}
+    for backend in BACKENDS:
+        cell = {}
+        for topo, runner in RUNNERS.items():
+            m = runner(backend, tier, rounds)
+            cell[topo] = m
+            rows.append({"name": f"fig9/{topo}/{backend}",
+                         "round_s": m["round_s"]})
+        report["cells"][backend] = cell
+        if verbose:
+            parts = "  ".join(f"{t}={cell[t]['round_s']:8.1f}s"
+                              for t in RUNNERS)
+            print(f"[fig9] {backend:9s}  {parts}")
+
+    report["validation"] = _validate(report, verbose)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    if verbose:
+        print(f"[fig9] JSON report -> {OUT_PATH}")
+    return rows
+
+
+def _validate(report, verbose):
+    grpc = report["cells"]["grpc"]
+    assert grpc["multi_hub"]["round_s"] < grpc["star"]["round_s"], (
+        f"fig9: hierarchical (multi_hub) must beat star for the big tier "
+        f"on gRPC over WAN; got hier={grpc['multi_hub']['round_s']:.1f}s "
+        f"vs star={grpc['star']['round_s']:.1f}s")
+    ring_never_fastest = True
+    for backend, cell in report["cells"].items():
+        best_alt = min(cell["star"]["round_s"], cell["multi_hub"]["round_s"])
+        assert cell["ring"]["round_s"] > best_alt, (
+            f"fig9: ring came out fastest for {backend} at {N_CLIENTS} "
+            f"clients ({cell['ring']['round_s']:.1f}s vs {best_alt:.1f}s) "
+            f"— the O(n) token path should lose")
+    if verbose:
+        speedup = grpc["star"]["round_s"] / grpc["multi_hub"]["round_s"]
+        print(f"[fig9] validation: multi_hub beats star on gRPC "
+              f"({speedup:.2f}x); ring never fastest at {N_CLIENTS} "
+              f"clients")
+    return {"hier_beats_star_grpc": True,
+            "ring_never_fastest": ring_never_fastest,
+            "grpc_star_over_hier":
+            grpc["star"]["round_s"] / grpc["multi_hub"]["round_s"]}
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

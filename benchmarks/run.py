@@ -27,7 +27,7 @@ def main(argv=None) -> None:
                             fig4b_concurrency_speedup, fig4c_broadcast_memory,
                             fig5_end_to_end, fig6_async_vs_sync,
                             fig7_compression_wan, fig8_faults_wan,
-                            table1_links)
+                            fig9_topology_wan, table1_links)
 
     modules = [
         ("table1", table1_links),
@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         ("fig6", fig6_async_vs_sync),
         ("fig7", fig7_compression_wan),
         ("fig8", fig8_faults_wan),
+        ("fig9", fig9_topology_wan),
         ("kernels", bench_kernels),
         ("crosspod", crosspod_sync),
     ]

@@ -189,7 +189,9 @@ class FLConfig:
     local_steps: int = 10
     rounds: int = 5
     backend: str = "grpc+s3"
-    environment: str = "geo_distributed"  # lan | geo_proximal | geo_distributed
+    # topology preset (scenario.TOPOLOGY_PRESETS): the legacy trio plus
+    # the graph-native star | ring | multi_hub
+    environment: str = "geo_distributed"
     quorum_fraction: float = 1.0  # server aggregates once this fraction reported
     round_deadline_s: float = 0.0  # 0 = no deadline (wait for quorum only)
     server_lr: float = 1.0
@@ -209,6 +211,9 @@ class FLConfig:
     # update path — and, in hier mode, on the relay WAN hop only (the LAN
     # reduce stays exact) — plus chunked send pipelining
     compression: str = "none"  # none | qsgd[:block] | topk[:frac]
+    # byte-domain wire codec on every backend channel (lossless, so it
+    # rides all modes and both directions): none | zlib[:level]
+    wire_codec: str = "none"
     chunk_mb: float = 0.0  # 0 = unchunked wires
 
     # fault & churn injection (fl/fault.py, core/netsim.LinkFaultModel)
@@ -217,3 +222,4 @@ class FLConfig:
     availability_trace: str = ""
     link_loss_rate: float = 0.0  # per-chunk wire loss on every direct link
     region_quorum: float = 0.5  # hier: min live fraction per region
+    relay_conns: int = 8  # hier: WAN-hop connection multiplexing per relay

@@ -47,23 +47,30 @@ BACKEND_NAMES = ["mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc",
 
 
 def make_backend(name: str, env: Environment, fabric: Fabric, host_id: str,
-                 store=None, *, compression=None, chunk_mb: float = 0.0,
-                 **kw):
-    """``compression``/``chunk_mb`` configure the backend's wire stack
-    (core/channel.py): 'qsgd[:block]' / 'topk[:frac]' insert a
-    CompressStage, chunk_mb > 0 a ChunkStage. Defaults reproduce the
-    plain [SerializeStage] stack bit-for-bit."""
+                 store=None, *, compression=None, wire_codec=None,
+                 chunk_mb: float = 0.0, **kw):
+    """``compression``/``wire_codec``/``chunk_mb`` configure the
+    backend's wire stack (core/channel.py): 'qsgd[:block]' /
+    'topk[:frac]' insert a payload CompressStage, 'zlib[:level]' a
+    byte-domain WireCompressStage, chunk_mb > 0 a ChunkStage. Defaults
+    reproduce the plain [SerializeStage] stack bit-for-bit."""
+    from repro.compression.stages import split_codecs
+    # one shared rule: a byte codec named via `compression` moves to the
+    # wire-domain slot; naming two different wire codecs is an error
+    compression, wire_codec = split_codecs(compression, wire_codec)
     if name == "grpc+s3":
         return GrpcS3Backend(env, fabric, host_id, store,
-                             compression=compression, chunk_mb=chunk_mb,
-                             **kw)
+                             compression=compression, wire_codec=wire_codec,
+                             chunk_mb=chunk_mb, **kw)
     if name == "auto":
         from repro.core.backends.auto import AutoBackend
         return AutoBackend(env, fabric, host_id, store,
-                           compression=compression, chunk_mb=chunk_mb, **kw)
+                           compression=compression, wire_codec=wire_codec,
+                           chunk_mb=chunk_mb, **kw)
     if name in POLICIES:
         return CommBackend(POLICIES[name], env, fabric, host_id, store,
-                           compression=compression, chunk_mb=chunk_mb)
+                           compression=compression, wire_codec=wire_codec,
+                           chunk_mb=chunk_mb)
     raise KeyError(f"unknown backend '{name}'; options: {BACKEND_NAMES}")
 
 

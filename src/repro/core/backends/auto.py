@@ -26,7 +26,8 @@ class AutoBackend:
     name = "auto"
 
     def __init__(self, env, fabric, host_id, store=None, *,
-                 compression=None, chunk_mb: float = 0.0, **kw):
+                 compression=None, wire_codec=None, chunk_mb: float = 0.0,
+                 **kw):
         from repro.core.backends import POLICIES
         self.env = env
         self.fabric = fabric
@@ -36,26 +37,31 @@ class AutoBackend:
         # decode follows the wire's recorded stages, so mixed routes stay
         # coherent
         self.grpc = CommBackend(POLICIES["grpc"], env, fabric, host_id,
-                                compression=compression, chunk_mb=chunk_mb)
+                                compression=compression,
+                                wire_codec=wire_codec, chunk_mb=chunk_mb)
         self.membuff = CommBackend(POLICIES["mpi_mem_buff"], env, fabric,
                                    host_id, compression=compression,
-                                   chunk_mb=chunk_mb)
+                                   wire_codec=wire_codec, chunk_mb=chunk_mb)
         self.s3 = (GrpcS3Backend(env, fabric, host_id, store,
-                                 compression=compression, **kw)
+                                 compression=compression,
+                                 wire_codec=wire_codec, **kw)
                    if store is not None and env.name != "lan" else None)
-        from repro.compression.stages import make_codec
-        self._codec = make_codec(compression)
+        from repro.compression.stages import split_codecs
+        self._codec, self._wire_codec = split_codecs(compression, wire_codec)
         self.endpoint = self.grpc.endpoint
         self.decisions: list = []  # (msg_type, wire nbytes estimate, backend)
 
     # ------------------------------------------------------------------
     def _wire_nbytes(self, nbytes: int, payload=None) -> int:
-        """Post-stack wire size estimate: the codec's wire ratio applied
-        to the payload (already-packed payloads pass the CompressStage
-        untouched, so they route on their own size)."""
-        if self._codec is None or isinstance(payload, PackedPayload):
-            return nbytes
-        return int(round(nbytes * self._codec.ratio()))
+        """Post-stack wire size estimate: the payload codec's wire ratio
+        (already-packed payloads pass the CompressStage untouched, so
+        they route on their own size) times the wire codec's byte ratio."""
+        est = float(nbytes)
+        if self._codec is not None and not isinstance(payload, PackedPayload):
+            est *= self._codec.ratio()
+        if self._wire_codec is not None:
+            est *= self._wire_codec.ratio()
+        return int(round(est))
 
     def _pick(self, wire_nbytes: int):
         if wire_nbytes < SMALL_PAYLOAD or self.s3 is None:

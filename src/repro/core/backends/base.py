@@ -30,8 +30,8 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.core.channel import Encoded, make_channel
 from repro.core.message import FLMessage
-from repro.core.netsim import LAN_IB, LAN_TCP, Environment, Region, Transfer, \
-    simulate_transfers
+from repro.core.netsim import LAN_IB, LAN_TCP, Environment, Link, Region, \
+    Transfer, simulate_transfers
 from repro.core.serialization import SERIALIZERS, WireData
 from repro.core.transport import Fabric
 
@@ -81,7 +81,7 @@ class SendHandle:
 class CommBackend:
     def __init__(self, policy: BackendPolicy, env: Environment,
                  fabric: Fabric, host_id: str, store=None, *,
-                 compression=None, chunk_mb: float = 0.0,
+                 compression=None, wire_codec=None, chunk_mb: float = 0.0,
                  error_feedback: bool = True):
         self.policy = policy
         self.env = env
@@ -94,6 +94,7 @@ class CommBackend:
         # default stack = [SerializeStage] -> pre-stack behaviour, exactly
         self.channel = make_channel(policy.serializer,
                                     compression=compression,
+                                    wire_codec=wire_codec,
                                     chunk_bytes=int(chunk_mb * MB),
                                     error_feedback=error_feedback)
         self._ser_busy_until = 0.0  # sender serializer busy-line (isend)
@@ -111,13 +112,20 @@ class CommBackend:
     def name(self) -> str:
         return self.policy.name
 
+    def _edge(self, dst_id: str) -> Link:
+        """The topology-graph edge this host's transmissions to ``dst_id``
+        ride (netsim.Environment.link), with LAN-class edges resolved per
+        backend policy: buffer backends ride InfiniBand verbs, serializing
+        ones fall back to TCP."""
+        link = self.env.link(self.host_id, dst_id)
+        if link.lan_class:
+            return dataclasses.replace(
+                link, region=LAN_IB if self.policy.lan_uses_ib else LAN_TCP)
+        return link
+
     def _link_region(self, dst_id: str) -> Region:
-        if self.env.name == "lan":
-            return LAN_IB if self.policy.lan_uses_ib else LAN_TCP
-        src = self.env.host(self.host_id).region
-        dst = self.env.host(dst_id).region
-        # star topology: the non-hub end dominates
-        return dst if dst.name != "ncal" else src
+        """Capacity triple of the graph edge to ``dst_id``."""
+        return self._edge(dst_id).region
 
     def _overhead(self, region: Region) -> float:
         return self.policy.overhead_rtts * 2 * region.latency
@@ -133,15 +141,16 @@ class CommBackend:
         return start
 
     def _link_schedule(self, dst_id: str, depart: float, nbytes: float,
-                       rate: float, region: Region, xid: Optional[int],
+                       rate: float, edge: Link, xid: Optional[int],
                        chunk_index: int):
         """Completion of one link transmission under the fabric's fault
         model: the departure is shifted past blackout windows, each lost
-        transmission costs the chunk's wire time plus a detection timeout
-        before the retransmit. Returns ``(finish, give_up_t)`` —
-        ``finish`` is None when the bounded retries are exhausted, with
-        ``give_up_t`` the moment the sender abandons the transfer. With
-        no fault model installed this is exactly ``depart + nbytes/rate``."""
+        transmission costs the chunk's wire time plus the receiver-driven
+        NACK turnaround on ``edge`` before the retransmit. Returns
+        ``(finish, give_up_t)`` — ``finish`` is None when the bounded
+        retries are exhausted, with ``give_up_t`` the moment the sender
+        abandons the transfer. With no fault model installed this is
+        exactly ``depart + nbytes/rate``."""
         fm = self.fabric.fault_model
         tx = nbytes / rate
         if fm is None:
@@ -151,11 +160,11 @@ class CommBackend:
         hosts = (self.host_id, dst_id)
         t = fm.delay(hosts, depart)
         n = fm.attempts(self.host_id, dst_id, xid, chunk_index)
-        # lost transmissions each pay their wire time + a detection
-        # timeout; retransmits are the transmissions beyond the original
+        # lost transmissions each pay their wire time + the NACK
+        # turnaround; retransmits are the transmissions beyond the original
         lost_tx = (fm.max_retries + 1) if n is None else (n - 1)
         for _ in range(lost_tx):
-            t = fm.delay(hosts, t + tx + fm.detect_delay(region))
+            t = fm.delay(hosts, t + tx + fm.detect_delay(edge))
         if n is None:
             self.fabric.stats["retransmits"] += fm.max_retries
             self.fabric.stats["transfers_failed"] += 1
@@ -176,7 +185,8 @@ class CommBackend:
             + self.policy.staging_bytes + enc.extra_alloc
         ser_start = self._ser_slot(now, ser_t)
         mem.alloc(alloc, ser_start)
-        region = self._link_region(msg.receiver)
+        edge = self._edge(msg.receiver)
+        region = edge.region
         start = ser_start + ser_t
         rate = region.conn_cap(self.policy.conns_per_transfer)
         base = self._overhead(region) + region.latency
@@ -189,7 +199,7 @@ class CommBackend:
             for i, (nb, ready_off) in enumerate(enc.chunks):
                 dep = max(ser_start + ready_off, link_free)
                 fin, give_up = self._link_schedule(msg.receiver, dep, nb,
-                                                   rate, region, xid, i)
+                                                   rate, edge, xid, i)
                 if fin is None:
                     failed_at = give_up
                     break
@@ -200,7 +210,7 @@ class CommBackend:
                                                      xid=xid)
         else:
             fin, give_up = self._link_schedule(msg.receiver, start,
-                                               enc.wire.nbytes, rate, region,
+                                               enc.wire.nbytes, rate, edge,
                                                None, 0)
             if fin is None:
                 failed_at = give_up
@@ -303,10 +313,10 @@ class CommBackend:
                 n = fm.attempts(self.host_id, msg.receiver, xid, 0,
                                 forced=True)
                 if n > 1:
-                    region = self._link_region(msg.receiver)
-                    rate = region.conn_cap(self.policy.conns_per_transfer)
+                    edge = self._edge(msg.receiver)
+                    rate = edge.conn_cap(self.policy.conns_per_transfer)
                     finish += (n - 1) * (enc.wire.nbytes / rate
-                                         + fm.detect_delay(region))
+                                         + fm.detect_delay(edge))
                     self.fabric.stats["retransmits"] += n - 1
             self.fabric.endpoints[msg.receiver].inbox.append(
                 _delivery(msg, enc.wire, finish))

@@ -38,7 +38,7 @@ GRPC_S3_POLICY = BackendPolicy(
 class GrpcS3Backend(CommBackend):
     def __init__(self, env, fabric, host_id, store: ObjectStore,
                  parts: int = S3_MAX_PARTS, presign: bool = True,
-                 compression=None, chunk_mb: float = 0.0):
+                 compression=None, wire_codec=None, chunk_mb: float = 0.0):
         # chunk_mb accepted for interface parity but not stacked:
         # multipart PUT/GET *is* this backend's chunk pipelining.
         # Error feedback is off: the content-addressed cache re-serves a
@@ -46,7 +46,8 @@ class GrpcS3Backend(CommBackend):
         # a stateful feedback loop (the residual would silently freeze on
         # cache hits while other backends kept refining)
         super().__init__(GRPC_S3_POLICY, env, fabric, host_id, store,
-                         compression=compression, error_feedback=False)
+                         compression=compression, wire_codec=wire_codec,
+                         error_feedback=False)
         assert store is not None, "grpc+s3 requires an object store"
         self.parts = parts
         self.presign = presign
@@ -115,13 +116,14 @@ class GrpcS3Backend(CommBackend):
             return super().isend(msg, now)
         key, up_done = self._upload(msg, now)
         meta = self._meta_msg(msg, key)
-        region = self._link_region(msg.receiver)
+        edge = self._edge(msg.receiver)
+        region = edge.region
         # the gRPC control leg rides the same faultable link as every
         # direct backend; the payload leg's resilience is the store's
         # (durable object + GET retries), so a failed *meta* record is
         # the only way this send can fail
         fin, give_up = self._link_schedule(msg.receiver, up_done, 256,
-                                           region.bw_single, region, None, 0)
+                                           region.bw_single, edge, None, 0)
         if fin is None:
             # start = the give-up time (when the sender learns of the loss)
             return SendHandle(msg=msg, issued=now, start=give_up,
@@ -149,7 +151,8 @@ class GrpcS3Backend(CommBackend):
         fm = self.fabric.fault_model
         for msg in msgs:
             meta = self._meta_msg(msg, key)
-            region = self._link_region(msg.receiver)
+            edge = self._edge(msg.receiver)
+            region = edge.region
             meta_arrive = up_done + self._meta_duration(region)
             if fm is not None:
                 # the meta legs ride the same faultable control links as
@@ -160,7 +163,7 @@ class GrpcS3Backend(CommBackend):
                                 self.fabric.next_transfer_id(), 0,
                                 forced=True)
                 meta_arrive = dep - up_done + meta_arrive + (n - 1) * (
-                    256 / region.bw_single + fm.detect_delay(region))
+                    256 / region.bw_single + fm.detect_delay(edge))
                 if n > 1:
                     self.fabric.stats["retransmits"] += n - 1
             dst = self.env.host(msg.receiver)

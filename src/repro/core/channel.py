@@ -15,12 +15,15 @@ Stages and the domains they act on:
 * ``CompressStage``   (payload domain) — wraps a ``compression.stages``
   codec (qsgd / topk) with per-peer error-feedback state. Quantisation
   needs tensor semantics (and the EF residual), so it transforms the
-  *payload* before serialization; byte-level codecs (zlib-family) would
-  instead layer in the wire domain. Charges simulated codec time plus the
+  *payload* before serialization. Charges simulated codec time plus the
   materialised compressed buffer's exact bytes.
 * ``SerializeStage``  (payload -> wire) — the per-backend serializer
   (copy vs zero-copy view); charges the serializer's calibrated
   throughput on the bytes it actually writes (post-compression).
+* ``WireCompressStage`` (wire domain) — a byte codec (zlib-family) over
+  the serialized wire itself: lossless, stateless, composable with the
+  payload codecs; deflates real buffers for real and scales virtual
+  wires by the codec's modelled ratio.
 * ``ChunkStage``      (wire domain) — splits large wires into fixed-size
   chunks so encode overlaps the network transfer; the transport delivers
   chunk-granularly (transport.Fabric.deliver_chunked) and backends
@@ -115,11 +118,33 @@ class CompressStage(WireStage):
         return out, info
 
 
+class WireCompressStage(CompressStage):
+    """Byte-domain sibling of CompressStage: transforms the *serialized
+    wire* (phase 2) instead of the payload. Carries a wire-domain codec
+    (zlib-family); lossless, so no error-feedback state. Decode follows
+    the wire's recorded ``wirecodec`` provenance — receivers inflate by
+    what the wire says, never their own configuration."""
+
+    name = "wirecodec"
+    phase = 2
+
+    def __init__(self, codec):
+        super().__init__(codec, error_feedback=False)
+        if getattr(self.codec, "domain", "payload") != "wire":
+            raise ValueError(
+                f"wire_codec must be a wire-domain codec, got "
+                f"'{self.codec.name}' (payload-domain codecs like "
+                f"qsgd/topk go in `compression`)")
+
+    def compress(self, wire):
+        return self.codec.compress_wire(wire)
+
+
 class ChunkStage(WireStage):
     """Split wires larger than ``chunk_bytes`` into pipelined chunks."""
 
     name = "chunk"
-    phase = 2
+    phase = 3
 
     def __init__(self, chunk_bytes: int):
         self.chunk_bytes = int(chunk_bytes)
@@ -163,7 +188,15 @@ class Channel:
         wire: Optional[WireData] = None
         chunks = None
         for stage in self._order:
-            if isinstance(stage, CompressStage):
+            if isinstance(stage, WireCompressStage):
+                out, info = stage.compress(wire)
+                if info is not None:
+                    charges.append((stage.name,
+                                    stage.codec.enc_time(info["orig_nbytes"]),
+                                    out.nbytes))
+                    infos.append(info)
+                    wire = out
+            elif isinstance(stage, CompressStage):
                 orig_nbytes = payload.nbytes
                 payload, info = stage.compress(payload, peer)
                 if info is not None:
@@ -197,50 +230,73 @@ class Channel:
         return enc
 
     # ------------------------------------------------------------------
-    def _decode_steps(self, wire: WireData):
-        """(callable, seconds) per inverse stage, provenance right-to-left.
-        Legacy bare wires (no provenance) decode exactly as before the
-        stack existed: codec-aware deserialize at the receiver's
-        calibrated throughput."""
-        steps = []
-        infos = wire.stages or [{"stage": "serialize", "codec": wire.codec}]
-        for info in reversed(infos):
+    @staticmethod
+    def _stage_infos(wire: WireData):
+        """Recorded provenance; legacy bare wires (none) decode exactly
+        as before the stack existed: codec-aware deserialize at the
+        receiver's calibrated throughput."""
+        return wire.stages or [{"stage": "serialize", "codec": wire.codec}]
+
+    def decode(self, wire: WireData):
+        """Invert the wire's recorded stages right-to-left. Wire-domain
+        steps (wirecodec) transform the wire before the serialize step
+        deserializes it; payload-domain steps invert after. Returns
+        (payload, cost_s)."""
+        from repro.compression.stages import codec_for
+        payload, cur, cost = None, wire, 0.0
+        for info in reversed(self._stage_infos(wire)):
             kind = info.get("stage", "compress")
             if kind == "chunk":
                 continue  # reassembly is the transport's job (free here)
-            if kind == "serialize":
-                steps.append((lambda p, w=wire: decode_wire(w, self.serializer),
-                              self.serializer.deser_time(wire.nbytes)))
-            else:  # compress
-                from repro.compression.stages import codec_for
+            if kind == "wirecodec":
                 codec = codec_for(info["codec"])
-                steps.append((lambda p, c=codec, i=info: c.decompress(p, i),
-                              codec.dec_time(info["orig_nbytes"])))
-        return steps
-
-    def decode(self, wire: WireData):
-        """Invert the wire's recorded stages. Returns (payload, cost_s)."""
-        payload = None
-        cost = 0.0
-        for fn, seconds in self._decode_steps(wire):
-            payload = fn(payload)
-            cost += seconds
+                cur = codec.decompress_wire(cur, info)
+                cost += codec.dec_time(info["orig_nbytes"])
+            elif kind == "serialize":
+                payload = decode_wire(cur, self.serializer)
+                cost += self.serializer.deser_time(cur.nbytes)
+            else:  # payload-domain compress
+                codec = codec_for(info["codec"])
+                payload = codec.decompress(payload, info)
+                cost += codec.dec_time(info["orig_nbytes"])
         return payload, cost
 
     def decode_time(self, wire: WireData) -> float:
         """Decode cost without materialising (planners/broadcast)."""
-        return sum(seconds for _, seconds in self._decode_steps(wire))
+        from repro.compression.stages import codec_for
+        cost, nbytes = 0.0, wire.nbytes
+        for info in reversed(self._stage_infos(wire)):
+            kind = info.get("stage", "compress")
+            if kind == "chunk":
+                continue
+            if kind == "wirecodec":
+                cost += codec_for(info["codec"]).dec_time(info["orig_nbytes"])
+                nbytes = info["orig_nbytes"]  # deserialize sees inflated bytes
+            elif kind == "serialize":
+                cost += self.serializer.deser_time(nbytes)
+            else:
+                cost += codec_for(info["codec"]).dec_time(info["orig_nbytes"])
+        return cost
 
 
-def make_channel(serializer_name: str, *, compression=None,
+def make_channel(serializer_name: str, *, compression=None, wire_codec=None,
                  chunk_bytes: int = 0,
                  error_feedback: bool = True) -> Channel:
-    """Standard stack builder: [Compress?] -> Serialize -> [Chunk?]."""
-    from repro.compression.stages import make_codec
+    """Standard stack builder:
+    [Compress?] -> Serialize -> [WireCompress?] -> [Chunk?].
+
+    A wire-domain codec named via ``compression`` (e.g. the CLI's
+    ``--compression zlib:6``) is routed to its rightful slot after the
+    serializer; ``wire_codec`` names it explicitly (ChannelSpec), and the
+    two compose: qsgd payload quantisation + zlib on the resulting
+    wire bytes is a legal stack."""
+    from repro.compression.stages import split_codecs
     stages: List[WireStage] = [SerializeStage(SERIALIZERS[serializer_name])]
-    codec = make_codec(compression)
+    codec, wcodec = split_codecs(compression, wire_codec)
     if codec is not None:
         stages.append(CompressStage(codec, error_feedback=error_feedback))
+    if wcodec is not None:
+        stages.append(WireCompressStage(wcodec))
     if chunk_bytes and chunk_bytes > 0:
         stages.append(ChunkStage(chunk_bytes))
     return Channel(stages)

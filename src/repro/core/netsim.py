@@ -64,13 +64,43 @@ class Host:
 
 
 @dataclasses.dataclass(frozen=True)
+class Link:
+    """One directed edge of a deployment's topology graph.
+
+    ``region`` carries the edge's capacity triple (single-connection BW,
+    multi-connection saturation BW, latency); per-edge connection caps
+    fold into ``bw_multi`` at build time. ``lan_class`` edges resolve to
+    IB verbs or the TCP fallback per backend policy (buffer backends ride
+    InfiniBand, serializing ones ride TCP) — the same split the implicit
+    ``env.name == "lan"`` rule used to encode."""
+    src: str
+    dst: str
+    region: Region
+    lan_class: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.region.latency
+
+    def conn_cap(self, conns: int) -> float:
+        return self.region.conn_cap(conns)
+
+
+@dataclasses.dataclass(frozen=True)
 class Environment:
-    """One of the paper's three deployment regimes."""
+    """One deployment regime: hosts + an explicit link graph.
+
+    ``links`` maps ordered host-id pairs to graph edges
+    (scenario.TopologySpec builds it). ``link()`` falls back to the
+    historical implicit star rule for pairs the graph does not name —
+    legacy hand-built Environments (links=None) behave exactly as before
+    the graph existed."""
     name: str
     server: Host
     clients: tuple  # Host tuple
     has_object_store: bool = True
     trusted: bool = False  # LAN/within-org: MPI/RPC deployable
+    links: Optional[dict] = None  # (src_id, dst_id) -> Link
 
     def host(self, host_id: str) -> Host:
         if host_id == self.server.host_id:
@@ -79,6 +109,20 @@ class Environment:
             if c.host_id == host_id:
                 return c
         raise KeyError(host_id)
+
+    def link(self, src_id: str, dst_id: str) -> Link:
+        """The graph edge a (src -> dst) transmission rides."""
+        if self.links is not None:
+            edge = self.links.get((src_id, dst_id))
+            if edge is not None:
+                return edge
+        # implicit legacy rule: LAN links are LAN-class; WAN is a star
+        # where the non-hub end dominates
+        if self.name == "lan":
+            return Link(src_id, dst_id, LAN_TCP, lan_class=True)
+        src = self.host(src_id).region
+        dst = self.host(dst_id).region
+        return Link(src_id, dst_id, dst if dst.name != "ncal" else src)
 
 
 def lan_env(num_clients: int = 7) -> Environment:
@@ -106,6 +150,8 @@ def geo_distributed_env(num_clients: int = 7) -> Environment:
                        clients)
 
 
+# legacy constructors kept as the bit-for-bit reference the scenario
+# presets are regression-tested against (tests/test_scenario.py)
 ENVIRONMENTS = {
     "lan": lan_env,
     "geo_proximal": geo_proximal_env,
@@ -114,7 +160,12 @@ ENVIRONMENTS = {
 
 
 def make_env(name: str, num_clients: int = 7) -> Environment:
-    return ENVIRONMENTS[name](num_clients)
+    """Deprecated shim: environments are described by scenario specs now.
+    Equivalent to ``TopologySpec.preset(name, num_clients).build()`` —
+    which also accepts the graph presets (star/ring/multi_hub) the legacy
+    constructors never had."""
+    from repro.scenario import TopologySpec
+    return TopologySpec.preset(name, num_clients=num_clients).build()
 
 
 # ---------------------------------------------------------------------------
@@ -256,8 +307,9 @@ class LinkFaultModel:
 
     * ``chunk_loss_rate`` — each transmitted chunk (a whole wire counts
       as one chunk when unchunked) is independently lost with this
-      probability. The *sender* recovers: it notices the loss after a
-      detection timeout (~``detect_rtts`` RTTs) and retransmits, up to
+      probability. Recovery is receiver-driven: the receiver notices the
+      sequence gap and NACKs the sender (``detect_delay`` — one RTT of
+      the graph edge the transfer rides), which retransmits, up to
       ``max_retries`` times; past that the transfer fails rather than
       retrying forever (backends surface a failed SendHandle; the FL
       scheduler re-issues the send at a higher level).
@@ -268,7 +320,7 @@ class LinkFaultModel:
 
     chunk_loss_rate: float = 0.0
     max_retries: int = 4
-    detect_rtts: float = 2.0  # loss-detection timeout, in link RTTs
+    nack_rtts: float = 1.0  # receiver-driven NACK turnaround, in edge RTTs
     blackouts: dict = dataclasses.field(default_factory=dict)
     seed: int = 0
 
@@ -306,6 +358,11 @@ class LinkFaultModel:
                         moved = True
         return t
 
-    def detect_delay(self, region: Region) -> float:
-        """Sender-side loss-detection time before a retransmit."""
-        return self.detect_rtts * 2.0 * region.latency
+    def detect_delay(self, edge: Link) -> float:
+        """Loss-detection time before a retransmit, derived from the
+        graph edge the transfer rides: the receiver notices the sequence
+        gap about one edge-latency after the lost chunk should have
+        landed and its NACK takes another one-way trip back — one RTT of
+        *that edge*, not a fixed multi-RTT constant (receiver-driven
+        NACK, vs the old sender-timeout model's ~2 RTTs)."""
+        return self.nack_rtts * 2.0 * edge.latency

@@ -203,14 +203,19 @@ class Fabric:
     def deliver_concurrent(self, sends):
         """sends: list of (msg, wire, start, conns). Contention-aware finish
         times via the fluid solver; delivers each on completion. Returns the
-        list of finish times."""
+        list of finish times. Transfers ride the topology graph's edge for
+        each (sender, receiver) pair (LAN-class edges at their declared
+        capacity — policy-level IB-vs-TCP resolution lives in the
+        backends, which pass explicit ``link_region``s instead)."""
         transfers = []
         for msg, wire, start, conns in sends:
             src = self.env.host(msg.sender)
             dst = self.env.host(msg.receiver)
+            edge = self.env.link(msg.sender, msg.receiver)
             transfers.append(Transfer(start=start, src=src, dst=dst,
                                       nbytes=wire.nbytes if wire else 256,
-                                      conns=conns, tag=f"msg{msg.msg_id}"))
+                                      conns=conns, link_region=edge.region,
+                                      tag=f"msg{msg.msg_id}"))
         simulate_transfers(transfers)
         finishes = []
         for (msg, wire, start, conns), tr in zip(sends, transfers):

@@ -185,12 +185,21 @@ class HierarchicalStrategy(AggregationStrategy):
     the region's first client and multiplexes ``relay_conns`` connections
     on its WAN hop — the paper's own Fig 2 concurrency lesson applied to
     topology. The hub merge of weighted relay partials equals flat FedAvg.
+
+    The relay -> hub hop is a *real backend channel over the topology's
+    graph edge* (relay host -> hub), not an analytic formula: each region
+    gets its own backend instance — same family as the deployment's —
+    whose wire stack carries the WAN compression / wire codec / chunking,
+    so the hop is faultable by the fabric's LinkFaultModel (chunk loss,
+    NACK retransmits, blackouts), cacheable by the object store, and
+    decodes at the hub by recorded provenance like any other wire.
     """
 
     name = "hier"
 
     def __init__(self, *, relay_link: Region = LAN_TCP, relay_conns: int = 8,
                  staleness_exponent: float = 0.0, wan_compression=None,
+                 wan_wire_codec=None, chunk_mb: float = 0.0,
                  region_quorum: float = 0.5):
         self.relay_link = relay_link
         self.relay_conns = relay_conns
@@ -205,11 +214,13 @@ class HierarchicalStrategy(AggregationStrategy):
         # gradient compression on the relay -> hub WAN hop *only*: the
         # LAN-local reduce and the model downlink stay exact, so the hub
         # merges dequantised partials and error feedback keeps each
-        # region's residual bounded across rounds. The same CompressStage
-        # the backend channels use, keyed per region instead of per peer.
-        from repro.core.channel import CompressStage
-        self._wan_stage = (CompressStage(wan_compression)
-                           if wan_compression is not None else None)
+        # region's residual bounded across rounds. The codecs ride the
+        # relay backends' own channels — one backend per region, so the
+        # EF stream is naturally per-region.
+        self.wan_compression = wan_compression
+        self.wan_wire_codec = wan_wire_codec
+        self.chunk_mb = float(chunk_mb)
+        self._relay_be: Dict[str, object] = {}  # region -> relay backend
 
     # -- setup -------------------------------------------------------------
     def start(self, sched: FLScheduler, now: float):
@@ -222,15 +233,90 @@ class HierarchicalStrategy(AggregationStrategy):
         probe = FLMessage("model_sync", sched.backend.host_id, "server",
                           payload=sched.global_payload)
         self._be = sched._resolved(probe)
+        self._group_meta: Dict[str, tuple] = {}  # region -> (client, count)
+        # per-round relay election: the region's first *live* member
+        # (set in _begin_round; fan-out, member uploads and the WAN
+        # partial must all agree on the relay host, also under churn)
+        self._relay_host: Dict[str, str] = {}
         self._begin_round(sched, now)
 
     def _wan_conns(self) -> int:
         return max(self._be.policy.conns_per_transfer, self.relay_conns)
 
-    def _lan_hop(self, nbytes: int) -> float:
+    def _relay_id(self, group: str) -> str:
+        """The host currently acting as ``group``'s relay: elected at
+        round begin among live members; static first member as the
+        fallback for paths that run with no round open (skip records)."""
+        return self._relay_host.get(group, self.groups[group][0].client_id)
+
+    def _relay_backend(self, group: str):
+        """The relay's channel: same backend family as the deployment,
+        colocated with the elected relay host, WAN hop multiplexed over
+        ``relay_conns`` connections. Cached per host — if churn migrates
+        a region's relay, the new host starts a fresh channel (and a
+        fresh error-feedback stream, as a real relay would)."""
+        host_id = self._relay_id(group)
+        be = self._relay_be.get(host_id)
+        if be is None:
+            import dataclasses as _dc
+
+            from repro.core.backends import make_backend
+            from repro.core.backends.grpc_s3 import GrpcS3Backend
+            sched = self.sched
+            be = make_backend(
+                getattr(sched.backend, "name", "grpc"), sched.env,
+                sched.backend.fabric, host_id,
+                store=getattr(sched.backend, "store", None),
+                compression=self.wan_compression,
+                wire_codec=self.wan_wire_codec, chunk_mb=self.chunk_mb)
+            for sub in (be, getattr(be, "grpc", None),
+                        getattr(be, "membuff", None)):
+                if sub is None or isinstance(sub, GrpcS3Backend) \
+                        or not hasattr(sub, "policy"):
+                    continue  # multipart GET *is* grpc+s3's concurrency
+                sub.policy = _dc.replace(
+                    sub.policy, conns_per_transfer=max(
+                        sub.policy.conns_per_transfer, self.relay_conns))
+            self._relay_be[host_id] = be
+        return be
+
+    def wan_ef_states(self):
+        """Per-region error-feedback residuals living on the relay
+        channels' CompressStages (fidelity probes: tests, fig7)."""
+        from repro.core.channel import CompressStage, WireCompressStage
+        states = []
+        for be in self._relay_be.values():
+            channels = [getattr(sub, "channel", None)
+                        for sub in (be, getattr(be, "grpc", None),
+                                    getattr(be, "membuff", None),
+                                    getattr(be, "s3", None))]
+            for ch in channels:
+                if ch is None:
+                    continue
+                for st in ch.stages:
+                    if isinstance(st, CompressStage) and \
+                            not isinstance(st, WireCompressStage):
+                        states.extend(st._state.values())
+        return states
+
+    def _lan_link(self, src_id: str, dst_id: str) -> Region:
+        """The intra-region leg: the topology's explicit DC-class edge
+        when the graph declares one (multi_hub / custom EdgeSpecs), else
+        the configured ``relay_link`` class. WAN-rule fallback edges are
+        deliberately ignored — colocated silos reduce over the local
+        fabric, not through the hub link."""
+        links = getattr(self.sched.env, "links", None) or {}
+        edge = links.get((src_id, dst_id))
+        if edge is not None and (edge.lan_class
+                                 or edge.region.name.startswith("lan")):
+            return edge.region
+        return self.relay_link
+
+    def _lan_hop(self, nbytes: int, src_id: str = "", dst_id: str = "") -> float:
+        link = self._lan_link(src_id, dst_id)
         ser = self._be.serializer.ser_time(nbytes)
         deser = self._be.serializer.deser_time(nbytes)
-        return ser + transfer_time(nbytes, self.relay_link) + deser
+        return ser + transfer_time(nbytes, link) + deser
 
     # -- round flow --------------------------------------------------------
     def _live_groups(self, sched) -> Dict[str, list]:
@@ -266,6 +352,8 @@ class HierarchicalStrategy(AggregationStrategy):
         # hub -> relays: one concurrent multi-connection WAN hop per region
         transfers, order, t_ser = [], [], now
         for g, cs in active.items():
+            # elect this round's relay: the region's first live member
+            self._relay_host[g] = cs[0].client_id
             relay_host = env.host(cs[0].client_id)
             region = be._link_region(cs[0].client_id)
             if be.policy.ser_parallel:
@@ -282,15 +370,18 @@ class HierarchicalStrategy(AggregationStrategy):
         deser = be.serializer.deser_time(nbytes)
         for (g, cs), tr in zip(order, transfers):
             relay_t = tr.finish + deser
-            # relay fans out to its members over the LAN-class link
+            relay_id = self._relay_host[g]
+            # relay fans out to its members over the intra-region leg
             t = relay_t
             for c in cs:
                 if be.policy.ser_parallel:
-                    ready = relay_t + self._lan_hop(nbytes)
+                    ready = relay_t + self._lan_hop(nbytes, relay_id,
+                                                    c.client_id)
                 else:
                     t += be.serializer.ser_time(nbytes)
-                    ready = (t + transfer_time(nbytes, self.relay_link)
-                             + deser)
+                    ready = (t + transfer_time(
+                        nbytes, self._lan_link(relay_id, c.client_id))
+                        + deser)
                 sched.loop.call_at(ready, f"hier-model>{c.client_id}",
                                    self._on_member_model, client=c, group=g)
 
@@ -328,7 +419,8 @@ class HierarchicalStrategy(AggregationStrategy):
         update, _timing, send_start = client.run_round(
             msg, now, sched.local_steps)
         nb = update.payload.nbytes
-        relay_recv = send_start + self._lan_hop(nb)
+        relay_recv = send_start + self._lan_hop(
+            nb, client.client_id, self._relay_id(group))
         rec = UpdateRecord(
             client=client, payload=update.payload,
             weight=float(update.metadata.get("num_examples", 1)),
@@ -371,30 +463,65 @@ class HierarchicalStrategy(AggregationStrategy):
         else:
             nb = recs[0].payload.nbytes
             agg_s = simulated_agg_time(nb, len(recs))
-            payload = VirtualPayload(nb, tag=f"relay:{group}")
-        region = be._link_region(recs[0].client.client_id)
-        wan_payload, codec_s = payload, 0.0
-        if self._wan_stage is not None:
-            orig_nbytes = payload.nbytes
-            wan_payload, info = self._wan_stage.compress(payload, group)
-            if info is not None:
-                codec = self._wan_stage.codec
-                codec_s = (codec.enc_time(orig_nbytes)
-                           + codec.dec_time(info["orig_nbytes"]))
-                # the hub sees the *decompressed* partial — exactly what
-                # the wire can carry, so hier+qsgd aggregates differ from
-                # flat FedAvg only by the (error-fed) quantisation noise
-                payload = codec.decompress(wan_payload, info)
-        nb = wan_payload.nbytes
-        wan = (be.serializer.ser_time(nb) + be._overhead(region)
-               + transfer_time(nb, region, self._wan_conns())
-               + be.serializer.deser_time(nb) + codec_s)
-        hub_rec = UpdateRecord(client=recs[0].client, payload=payload,
-                               weight=weight, version=recs[0].version,
-                               staleness=0, arrive_t=now + agg_s + wan,
-                               count=len(recs))
-        sched.loop.call_at(hub_rec.arrive_t, f"hier-hub<{group}",
-                           self._on_hub_partial, rec=hub_rec, group=group)
+            # the tag carries the version: each round's partial is a new
+            # object (the relay channel's store cache must not re-serve
+            # last round's bytes for this round's merge)
+            payload = VirtualPayload(
+                nb, tag=f"relay:{group}:v{recs[0].version}")
+        self._group_meta[group] = (recs[0].client, len(recs))
+        self._send_partial(group, payload, weight, recs[0].version,
+                           len(recs), now + agg_s, 0)
+
+    def _send_partial(self, group: str, payload, weight: float,
+                      version: int, count: int, t: float, attempt: int):
+        """Ship one region's reduced partial to the hub over the relay's
+        real backend channel (graph edge relay-host -> hub): compression /
+        wire codec / chunking ride the channel, the fabric's fault model
+        can lose chunks, and a transfer the model fails outright is
+        re-issued with bounded retries before the region resolves as a
+        skip — the hub never wedges on a dead WAN edge."""
+        sched = self.sched
+        relay = self._relay_backend(group)
+        msg = FLMessage("relay_partial", relay.host_id,
+                        sched.backend.host_id, round=version,
+                        payload=payload,
+                        metadata={"group": group, "weight": weight,
+                                  "count": count, "version": version})
+        h = relay.isend(msg, t)
+        if getattr(h, "failed", False):
+            sched.transfer_failures += 1
+            if attempt < 2:
+                sched.loop.call_at(
+                    max(t, h.start) + sched.redispatch_backoff_s,
+                    f"hier-wan-retry<{group}",
+                    lambda now, g=group, p=payload, w=weight, v=version,
+                    c=count, a=attempt:
+                    self._send_partial(g, p, w, v, c, now, a + 1))
+            else:
+                sched.loop.call_at(h.start, f"hier-skip<{group}",
+                                   self._on_hub_partial, rec=None,
+                                   group=group)
+            return
+        sched.loop.call_at(h.inbox_t, f"hier-hub<{group}",
+                           self._on_hub_arrival)
+
+    def _on_hub_arrival(self, now: float):
+        """Drain the hub's endpoint: the relay partial decodes by its
+        recorded wire stages (dequantised / inflated / reassembled), then
+        joins the merge at its decode-complete time."""
+        sched = self.sched
+        for msg, ready in sched.backend.recv(now):
+            if msg.msg_type != "relay_partial":
+                continue
+            g = msg.metadata["group"]
+            client, _ = self._group_meta.get(g, (None, 0))
+            rec = UpdateRecord(client=client, payload=msg.payload,
+                               weight=float(msg.metadata["weight"]),
+                               version=int(msg.metadata["version"]),
+                               staleness=0, arrive_t=ready,
+                               count=int(msg.metadata["count"]))
+            sched.loop.call_at(ready, f"hier-merge<{g}",
+                               self._on_hub_partial, rec=rec, group=g)
 
     def _on_hub_partial(self, now: float, rec: Optional[UpdateRecord],
                         group: str):
@@ -434,8 +561,13 @@ def make_strategy(cfg, num_clients: Optional[int] = None,
         overrides.setdefault(
             "wan_compression",
             None if compression in ("", "none") else compression)
+        wire = getattr(cfg, "wire_codec", "none")
+        overrides.setdefault("wan_wire_codec",
+                             None if wire in ("", "none") else wire)
+        overrides.setdefault("chunk_mb", getattr(cfg, "chunk_mb", 0.0))
         overrides.setdefault("region_quorum",
                              getattr(cfg, "region_quorum", 0.5))
+        overrides.setdefault("relay_conns", getattr(cfg, "relay_conns", 8))
         return HierarchicalStrategy(
             staleness_exponent=cfg.staleness_exponent, **overrides)
     raise KeyError(f"unknown scheduler mode '{mode}' "

@@ -1,15 +1,26 @@
 """Cross-silo FL driver — the paper's end-to-end system, live.
 
 Server + N silo clients training a real model (default: the paper's Small
-tier, ResNet56) over a chosen backend and network environment; payloads
-really move through the backend; time is simulated-clock seconds.
+tier, ResNet56) over a chosen backend and topology; payloads really move
+through the backend; time is simulated-clock seconds.
+
+The whole experiment is one declarative ``Scenario`` (repro/scenario/):
+load a spec file and run it, with any individual flag acting as an
+override on the resolved spec —
+
+    PYTHONPATH=src python -m repro.launch.fl_train \
+        --scenario examples/scenarios/geo_wan_qsgd.json --rounds 5
+
+or describe everything by flags (the classic CLI; flags are simply
+overrides layered onto the default scenario):
 
     PYTHONPATH=src python -m repro.launch.fl_train --backend grpc+s3 \
         --environment geo_distributed --rounds 3 --tier small
 
-``--mode fedbuff|semisync|hier`` switches to the event-driven runtime
-(fl/scheduler.py): clients run independently and ``--rounds`` counts
-server aggregations instead of lockstep rounds.
+``--environment`` accepts the graph presets (star / ring / multi_hub) as
+well as the legacy trio. ``--mode fedbuff|semisync|hier`` switches to the
+event-driven runtime (fl/scheduler.py): clients run independently and
+``--rounds`` counts server aggregations instead of lockstep rounds.
 """
 from __future__ import annotations
 
@@ -21,27 +32,25 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.configs.paper_tiers import TIERS, build_tier_model
-from repro.core import (Fabric, FLMessage, ObjectStore, TensorPayload,
-                        make_backend, make_env)
+from repro.core import FLMessage, TensorPayload
 from repro.core.backends import BACKEND_NAMES
-from repro.core.netsim import NCAL
 from repro.data import make_silo_datasets
 from repro.fl import FLClient, FLServer, make_strategy
 from repro.fl.fault import FaultPlan, apply_stragglers, make_availability
+from repro.scenario import (TOPOLOGY_PRESETS, Scenario, ScenarioError,
+                            build_runtime, with_overrides)
 
 
 def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
                      reduced: bool = True, local_steps: int = 4,
-                     fail_rate: float = 0.0):
-    env = make_env(fl_cfg.environment, fl_cfg.num_clients)
-    fabric = Fabric(env)
-    if getattr(fl_cfg, "link_loss_rate", 0.0) > 0:
-        from repro.core.netsim import LinkFaultModel
-        fabric.fault_model = LinkFaultModel(
-            chunk_loss_rate=fl_cfg.link_loss_rate, seed=fl_cfg.seed)
-    store = ObjectStore(NCAL, fail_rate=fail_rate)
-    for h in [env.server] + list(env.clients):
-        fabric.register(h.host_id)
+                     fail_rate: float = 0.0, scenario: Scenario = None):
+    """FLConfig/Scenario -> live deployment, through the scenario runtime
+    (the same path ``--scenario`` files take)."""
+    sc = scenario or Scenario.from_fl_config(
+        fl_cfg, tier=tier, local_steps=local_steps,
+        store_fail_rate=fail_rate)
+    rt = build_runtime(sc)
+    env, store = rt.env, rt.store
 
     if reduced:
         # reduced same-family model so CPU rounds take seconds
@@ -73,25 +82,23 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
     # compile jitter must not reorder event arrivals between runs
     sim_train = (0.0 if fl_cfg.mode == "sync"
                  else TIERS[tier].train_s(fl_cfg.environment))
-    # the wire stack: clients compress their *update* path (fedbuff /
+    # the payload codec rides the clients' *update* path (fedbuff /
     # semisync; hier compresses the relay WAN hop inside the strategy
     # instead, and sync rounds aggregate the exact in-proc trees so
-    # compression there would charge time it doesn't pay for); chunked
-    # pipelining applies to every backend incl. the server's broadcast
+    # compression there would charge time it doesn't pay for). The wire
+    # codec and chunked pipelining are lossless and ride every backend,
+    # incl. the server's broadcast — Runtime.make_backend applies them.
     client_compression = (fl_cfg.compression
                           if fl_cfg.mode in ("fedbuff", "semisync")
-                          else None)
+                          else "none")
     clients = []
     for i, host in enumerate(env.clients):
-        cb = make_backend(fl_cfg.backend, env, fabric, host.host_id,
-                          store=store, compression=client_compression,
-                          chunk_mb=fl_cfg.chunk_mb)
+        cb = rt.make_backend(host.host_id, compression=client_compression)
         clients.append(FLClient(host.host_id, cb, dataset=silos[i],
                                 train_fn=make_train_fn(), batch_size=16,
                                 sim_train_s=sim_train,
                                 seed=fl_cfg.seed + i))
-    server_backend = make_backend(fl_cfg.backend, env, fabric, "server",
-                                  store=store, chunk_mb=fl_cfg.chunk_mb)
+    server_backend = rt.make_backend("server", compression="none")
     server = FLServer(server_backend, clients,
                       quorum_fraction=fl_cfg.quorum_fraction,
                       round_deadline_s=fl_cfg.round_deadline_s,
@@ -100,16 +107,16 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
 
 
 def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
-                     args) -> int:
+                     scenario: Scenario) -> int:
     """Async / semi-sync / hierarchical execution over the same deployment."""
     strategy = make_strategy(fl_cfg, fl_cfg.num_clients)
     availability = make_availability(
         fl_cfg.availability_trace,
         [c.client_id for c in server.clients],
-        horizon_s=args.trace_horizon, seed=fl_cfg.seed)
+        horizon_s=scenario.faults.trace_horizon_s, seed=fl_cfg.seed)
     report, sched = server.run_async(TensorPayload(params), strategy,
                                      availability=availability,
-                                     max_aggregations=args.rounds)
+                                     max_aggregations=fl_cfg.rounds)
     print(f"[fl:{report.mode}] backend={report.backend} "
           f"sim_time={report.sim_time:.2f}s "
           f"aggregations={report.n_aggregations} "
@@ -136,84 +143,134 @@ def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
     return 0
 
 
-def main(argv=None):
+def _parser() -> argparse.ArgumentParser:
+    """Every flag defaults to None: unset flags leave the loaded scenario
+    untouched, set ones override it (tests assert this precedence)."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="grpc+s3", choices=BACKEND_NAMES)
-    ap.add_argument("--environment", default="geo_distributed",
-                    choices=["lan", "geo_proximal", "geo_distributed"])
-    ap.add_argument("--rounds", type=int, default=3)
-    ap.add_argument("--clients", type=int, default=7)
-    ap.add_argument("--local-steps", type=int, default=4)
-    ap.add_argument("--quorum", type=float, default=1.0)
-    ap.add_argument("--drop-rate", type=float, default=0.0)
-    ap.add_argument("--tier", default="small")
-    ap.add_argument("--mode", default="sync",
+    ap.add_argument("--scenario", default=None,
+                    help="scenario JSON (see examples/scenarios/); other "
+                         "flags become overrides on the loaded spec")
+    ap.add_argument("--backend", default=None, choices=BACKEND_NAMES)
+    ap.add_argument("--environment", default=None,
+                    choices=list(TOPOLOGY_PRESETS),
+                    help="topology preset: the legacy trio or the graph "
+                         "presets star | ring | multi_hub")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--local-steps", type=int, default=None)
+    ap.add_argument("--quorum", type=float, default=None)
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="sync-mode per-round client drop rate (FaultPlan)")
+    ap.add_argument("--tier", default=None)
+    ap.add_argument("--mode", default=None,
                     choices=["sync", "fedbuff", "semisync", "hier"])
-    ap.add_argument("--buffer-k", type=int, default=0,
+    ap.add_argument("--buffer-k", type=int, default=None,
                     help="fedbuff merge buffer (0 = num_clients // 2)")
-    ap.add_argument("--staleness-exponent", type=float, default=0.5)
-    ap.add_argument("--max-staleness", type=int, default=0)
+    ap.add_argument("--staleness-exponent", type=float, default=None)
+    ap.add_argument("--max-staleness", type=int, default=None)
     ap.add_argument("--staleness-adaptive", action="store_true",
+                    default=None,
                     help="FedAsync-style: scale the staleness exponent by "
                          "each update's observed-staleness percentile")
-    ap.add_argument("--deadline", type=float, default=0.0,
+    ap.add_argument("--deadline", type=float, default=None,
                     help="semisync round deadline, simulated seconds")
-    ap.add_argument("--compression", default="none",
-                    help="wire-stack gradient compression: none | "
-                         "qsgd[:block] | topk[:frac] (client updates in "
-                         "fedbuff/semisync; relay WAN hop in hier)")
-    ap.add_argument("--chunk-mb", type=float, default=0.0,
+    ap.add_argument("--compression", default=None,
+                    help="wire-stack compression: none | qsgd[:block] | "
+                         "topk[:frac] (payload domain: client updates in "
+                         "fedbuff/semisync, relay WAN hop in hier) | "
+                         "zlib[:level] (byte domain: every backend "
+                         "channel, all modes)")
+    ap.add_argument("--chunk-mb", type=float, default=None,
                     help="split wires into pipelined chunks of this size "
                          "(0 = whole-wire sends)")
-    ap.add_argument("--availability-trace", default="",
+    ap.add_argument("--availability-trace", default=None,
                     help="client churn for event-driven modes: "
                          "'auto:MEAN_UP/MEAN_DOWN' (generated exponential "
                          "up/down periods) or explicit "
                          "'client0:leave@120,join@400;client3:leave@50'")
-    ap.add_argument("--trace-horizon", type=float, default=3600.0,
+    ap.add_argument("--trace-horizon", type=float, default=None,
                     help="horizon (sim s) for generated availability traces")
-    ap.add_argument("--link-loss", type=float, default=0.0,
-                    help="per-chunk loss probability on every direct link "
-                         "(deterministic LinkFaultModel; senders retransmit "
-                         "with bounded retries)")
-    ap.add_argument("--region-quorum", type=float, default=0.5,
+    ap.add_argument("--link-loss", type=float, default=None,
+                    help="per-chunk loss probability on every graph edge "
+                         "(deterministic LinkFaultModel; receivers NACK, "
+                         "senders retransmit with bounded retries)")
+    ap.add_argument("--region-quorum", type=float, default=None,
                     help="hier mode: min live fraction for a region to "
                          "participate in a round (below it the region is "
                          "skipped, folded back in on rejoin)")
+    return ap
+
+
+def resolve_scenario(args, ap: argparse.ArgumentParser) -> Scenario:
+    """--scenario file (or the default spec) + flag overrides -> one
+    validated Scenario. Precedence: explicit flag > loaded spec > default."""
+    try:
+        base = (Scenario.load(args.scenario) if args.scenario
+                else Scenario(name="fl_train"))
+        sc = with_overrides(base, {
+            "channel.backend": args.backend,
+            "channel.compression": args.compression,
+            "channel.chunk_mb": args.chunk_mb,
+            "topology.kind": args.environment,
+            "topology.num_clients": args.clients,
+            "fleet.tier": args.tier,
+            "fleet.local_steps": args.local_steps,
+            "strategy.mode": args.mode,
+            "strategy.rounds": args.rounds,
+            "strategy.buffer_k": args.buffer_k,
+            "strategy.staleness_exponent": args.staleness_exponent,
+            "strategy.max_staleness": args.max_staleness,
+            "strategy.staleness_adaptive": args.staleness_adaptive,
+            "strategy.quorum_fraction": args.quorum,
+            "strategy.round_deadline_s": args.deadline,
+            "faults.link_loss": args.link_loss,
+            "faults.availability_trace": args.availability_trace,
+            "faults.trace_horizon_s": args.trace_horizon,
+            "strategy.region_quorum": args.region_quorum,
+        })
+        # a byte-domain --compression spec is really the wire codec;
+        # split_codecs owns the rule (and rejects two different wire
+        # codecs instead of silently clobbering the spec's)
+        from repro.compression.stages import split_codecs
+        payload_codec, wire = split_codecs(sc.channel.compression,
+                                           sc.channel.wire_codec)
+        if payload_codec is None and wire is not None \
+                and sc.channel.compression not in ("", "none"):
+            sc = with_overrides(sc, {
+                "channel.wire_codec": sc.channel.compression,
+                "channel.compression": "none"})
+        return sc.validate()
+    except (ScenarioError, KeyError, OSError, ValueError) as e:
+        ap.error(str(e))
+
+
+def main(argv=None):
+    ap = _parser()
     args = ap.parse_args(argv)
+    sc = resolve_scenario(args, ap)
 
-    if not 0.0 <= args.link_loss < 1.0:
-        ap.error("--link-loss must be in [0, 1): a rate of 1 means no "
-                 "transmission ever succeeds")
-    if args.backend == "grpc+s3" and args.environment == "lan":
+    if sc.channel.backend == "grpc+s3" and sc.topology.kind == "lan":
         print("[fl] note: paper omits grpc+s3 on LAN; switching to auto")
-        args.backend = "auto"
-    if args.compression != "none" and args.mode == "sync":
-        print("[fl] note: --compression rides the event-driven update "
-              "path; sync rounds aggregate exact in-proc trees, ignoring")
-        args.compression = "none"
+        sc = with_overrides(sc, {"channel.backend": "auto"})
+    if sc.channel.compression != "none" and sc.strategy.mode == "sync":
+        print("[fl] note: payload compression rides the event-driven "
+              "update path; sync rounds aggregate exact in-proc trees, "
+              "ignoring")
+        sc = with_overrides(sc, {"channel.compression": "none"})
 
-    fl_cfg = FLConfig(num_clients=args.clients, backend=args.backend,
-                      environment=args.environment, rounds=args.rounds,
-                      quorum_fraction=args.quorum,
-                      round_deadline_s=args.deadline, mode=args.mode,
-                      buffer_k=args.buffer_k,
-                      staleness_exponent=args.staleness_exponent,
-                      max_staleness=args.max_staleness,
-                      staleness_adaptive=args.staleness_adaptive,
-                      compression=args.compression,
-                      chunk_mb=args.chunk_mb,
-                      availability_trace=args.availability_trace,
-                      link_loss_rate=args.link_loss,
-                      region_quorum=args.region_quorum)
+    fl_cfg = sc.fl_config()
+    print(f"[fl] scenario '{sc.name}': topology={sc.topology.kind} "
+          f"x{sc.topology.num_clients} backend={sc.channel.backend} "
+          f"mode={sc.strategy.mode} tier={sc.fleet.tier}")
     server, params, env, store = build_deployment(
-        fl_cfg, tier=args.tier, local_steps=args.local_steps)
-    if args.mode != "sync":
-        return run_event_driven(fl_cfg, server, params, store, args)
+        fl_cfg, tier=sc.fleet.tier, local_steps=sc.fleet.local_steps,
+        scenario=sc)
+    if sc.strategy.mode != "sync":
+        return run_event_driven(fl_cfg, server, params, store, sc)
     fault = FaultPlan(drop_rate=args.drop_rate, seed=1)
 
     losses = []
-    for r in range(args.rounds):
+    for r in range(fl_cfg.rounds):
         dropped, stragglers = fault.for_round(r, [c.client_id for c in
                                                   server.clients])
         apply_stragglers(server.clients, stragglers, fault.straggler_factor)

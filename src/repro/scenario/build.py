@@ -1,0 +1,62 @@
+"""Scenario -> runtime: one place that turns the declarative spec into
+the live objects (environment graph, fabric + fault model, object store,
+backends). Every entry point — ``fl_train``, the paper-figure benchmarks,
+tests — goes through here, so the spec really is the single description
+from CLI to fabric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.netsim import NCAL, Environment, LinkFaultModel
+from repro.core.objectstore import ObjectStore
+from repro.core.transport import Fabric
+from repro.scenario.spec import Scenario
+
+
+@dataclasses.dataclass
+class Runtime:
+    """The built deployment a scenario describes."""
+    scenario: Scenario
+    env: Environment
+    fabric: Fabric
+    store: ObjectStore
+
+    def make_backend(self, host_id: str, *, compression=None,
+                     chunk_mb: Optional[float] = None, **kw):
+        """A backend on this runtime's fabric carrying the scenario's
+        channel spec. ``compression`` defaults to the spec's payload
+        codec; pass ``compression=None`` explicitly via
+        ``compression="none"`` when a path must stay uncompressed."""
+        from repro.core.backends import make_backend
+        ch = self.scenario.channel
+        comp = ch.compression if compression is None else compression
+        return make_backend(
+            ch.backend, self.env, self.fabric, host_id, store=self.store,
+            compression=None if comp in ("", "none") else comp,
+            wire_codec=ch.wire_codec,
+            chunk_mb=ch.chunk_mb if chunk_mb is None else chunk_mb, **kw)
+
+
+def fault_model_for(scenario: Scenario) -> Optional[LinkFaultModel]:
+    """The deterministic fault injector the spec asks for (None when the
+    scenario is fault-free — the exact legacy timing path)."""
+    f = scenario.faults
+    if f.link_loss <= 0.0:
+        return None
+    return LinkFaultModel(chunk_loss_rate=f.link_loss,
+                          max_retries=f.max_retries,
+                          nack_rtts=f.nack_rtts, seed=scenario.seed)
+
+
+def build_runtime(scenario: Scenario) -> Runtime:
+    """Validate + build the deployment: topology graph, fabric (with the
+    fault model installed), object store, endpoints registered."""
+    scenario.validate()
+    env = scenario.topology.build()
+    fabric = Fabric(env, fault_model=fault_model_for(scenario))
+    store = ObjectStore(NCAL, fail_rate=scenario.faults.store_fail_rate)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    return Runtime(scenario, env, fabric, store)

@@ -1,0 +1,446 @@
+"""The Scenario layer: one frozen, declarative description of a deployment.
+
+The paper's central claim is that backend choice is a function of the
+*deployment scenario* — model size x network topology x concurrency
+(§IV-§VII). Before this layer, that description was scattered across
+three hardcoded ``*_env`` constructors, a flag soup in ``fl_train`` and
+per-benchmark ad-hoc wiring. A ``Scenario`` gathers the whole experiment
+into five frozen sub-specs:
+
+* ``TopologySpec`` — an explicit host/region **link graph** with
+  per-edge bandwidth/latency/connection caps. Presets ``lan`` /
+  ``geo_proximal`` / ``geo_distributed`` reproduce the legacy
+  environments bit-for-bit (regression-tested); ``star`` / ``ring`` /
+  ``multi_hub`` are graph-native topologies in the Marfoq & Neglia
+  throughput-optimal-topology line (benchmarks/fig9_topology_wan.py).
+* ``FleetSpec``    — who trains: tier, local steps.
+* ``ChannelSpec``  — what the wire stack looks like: backend, payload
+  codec, wire codec, chunking.
+* ``FaultSpec``    — what goes wrong: link loss, NACK timing, store
+  faults, churn traces.
+* ``StrategySpec`` — how aggregation runs: mode + its knobs.
+
+``Scenario.to_dict()`` / ``Scenario.from_dict()`` round-trip exactly
+(``from_dict(to_dict(s)) == s``), including through JSON, and
+``from_dict`` rejects unknown keys / invalid edges with a readable path
+(``topology.edges[2]: unknown key(s) ['bandwith']``). ``fl_train
+--scenario file.json`` loads one; individual CLI flags become overrides
+on the resolved spec (``with_overrides``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Tuple
+
+from repro.core.netsim import (GB, GEO_REGIONS, LAN_TCP, MB, NCAL, REGIONS,
+                               Environment, Host, Link, Region)
+
+TOPOLOGY_PRESETS = ("lan", "geo_proximal", "geo_distributed",
+                    "star", "ring", "multi_hub")
+MODES = ("sync", "fedbuff", "semisync", "hier")
+
+
+class ScenarioError(ValueError):
+    """Invalid scenario spec — the message carries the offending path."""
+
+
+# ---------------------------------------------------------------------------
+# sub-specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSpec:
+    """One declared link-graph edge (layered onto the preset graph).
+
+    Bandwidths in MB/s and latency in ms — Table I's units. ``max_conns``
+    caps the multi-connection saturation at ``max_conns * bw_single``
+    (folded into the built edge's ``bw_multi``); ``symmetric`` installs
+    the reverse edge too; ``lan_class`` edges resolve IB-vs-TCP per
+    backend policy like the LAN testbed links."""
+    src: str
+    dst: str
+    bw_single_mb: float
+    bw_multi_mb: float
+    latency_ms: float
+    max_conns: int = 0
+    symmetric: bool = True
+    lan_class: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Host/region link graph, built from a preset + explicit edges."""
+    kind: str = "geo_distributed"
+    num_clients: int = 7
+    # region names cycled over the clients; () = the preset's default
+    # (Table I's seven regions for the WAN presets)
+    regions: Tuple[str, ...] = ()
+    edges: Tuple[EdgeSpec, ...] = ()
+
+    @classmethod
+    def preset(cls, name: str, num_clients: int = 7) -> "TopologySpec":
+        return cls(kind=name, num_clients=num_clients)
+
+    # -- building ----------------------------------------------------------
+    def client_regions(self) -> Tuple[Region, ...]:
+        if self.kind == "lan":
+            names = self.regions or ("lan_tcp",)
+        elif self.kind == "geo_proximal":
+            names = self.regions or ("ncal",)
+        else:
+            names = self.regions or tuple(r.name for r in GEO_REGIONS)
+        for n in names:
+            if n not in REGIONS:
+                raise ScenarioError(
+                    f"topology.regions: unknown region '{n}'; known: "
+                    f"{sorted(REGIONS)}")
+        cycle = tuple(REGIONS[names[i % len(names)]]
+                      for i in range(self.num_clients))
+        return cycle
+
+    def _hosts(self) -> Tuple[Host, Tuple[Host, ...]]:
+        if self.kind == "lan":
+            server = Host("server", LAN_TCP, 5.0 * GB, 5.0 * GB)
+            clients = tuple(Host(f"client{i}", LAN_TCP, 5.0 * GB, 5.0 * GB)
+                            for i in range(self.num_clients))
+            return server, clients
+        server = Host("server", NCAL, NCAL.bw_multi, NCAL.bw_multi)
+        clients = tuple(Host(f"client{i}", r, r.bw_multi, r.bw_multi)
+                        for i, r in enumerate(self.client_regions()))
+        return server, clients
+
+    def check(self) -> None:
+        """Full spec validation without materialising the dense edge map
+        (Scenario.validate() runs only this; build() runs it and then
+        builds — the graph is constructed once per deployment)."""
+        if self.kind not in TOPOLOGY_PRESETS:
+            raise ScenarioError(
+                f"topology.kind: unknown preset '{self.kind}'; choose "
+                f"from {list(TOPOLOGY_PRESETS)}")
+        if self.num_clients < 1:
+            raise ScenarioError("topology.num_clients must be >= 1")
+        self.client_regions()  # validates region names
+        known = {"server"} | {f"client{i}" for i in range(self.num_clients)}
+        for i, e in enumerate(self.edges):
+            for end in (e.src, e.dst):
+                if end not in known:
+                    raise ScenarioError(
+                        f"topology.edges[{i}]: endpoint '{end}' names no "
+                        f"host in this topology (hosts: server, client0.."
+                        f"client{self.num_clients - 1})")
+            if e.bw_single_mb <= 0 or e.bw_multi_mb <= 0:
+                raise ScenarioError(
+                    f"topology.edges[{i}]: bandwidths must be positive")
+            if e.latency_ms < 0:
+                raise ScenarioError(
+                    f"topology.edges[{i}]: latency_ms must be >= 0")
+
+    def build(self) -> Environment:
+        """Materialise the full directed edge map (the explicit graph the
+        backends consume instead of the old implicit region-pair rule)."""
+        self.check()
+        server, clients = self._hosts()
+        hosts = [server] + list(clients)
+        links: Dict[tuple, Link] = {}
+
+        def put(a: Host, b: Host, region: Region, lan_class=False):
+            links[(a.host_id, b.host_id)] = Link(a.host_id, b.host_id,
+                                                 region, lan_class=lan_class)
+
+        if self.kind == "lan":
+            for a in hosts:
+                for b in hosts:
+                    if a is not b:
+                        put(a, b, LAN_TCP, lan_class=True)
+        elif self.kind in ("geo_proximal", "geo_distributed"):
+            # the legacy implicit rule, made explicit: the non-hub end of
+            # a transfer dominates (hub = NCAL, the paper's Table I frame)
+            for a in hosts:
+                for b in hosts:
+                    if a is not b:
+                        put(a, b, b.region if b.region.name != "ncal"
+                            else a.region)
+        elif self.kind == "star":
+            # pure hub-and-spoke: only hub<->client edges exist
+            for c in clients:
+                put(server, c, c.region)
+                put(c, server, c.region)
+        elif self.kind == "ring":
+            # hub edges (model distribution + the closing hop) plus a
+            # client ring; a client-client WAN edge is the bottleneck of
+            # the two Table-I hub links, with both one-way legs of delay
+            for c in clients:
+                put(server, c, c.region)
+                put(c, server, c.region)
+            n = len(clients)
+            for i, c in enumerate(clients):
+                d = clients[(i + 1) % n]
+                ring = _bottleneck_region(c.region, d.region)
+                put(c, d, ring)
+                put(d, c, ring)
+        elif self.kind == "multi_hub":
+            # hierarchical: per-region relay hubs. WAN edges hub<->client
+            # carry the region link; clients sharing a region get
+            # DC-class intra-region edges (the relay's LAN-side fan-out)
+            for c in clients:
+                put(server, c, c.region)
+                put(c, server, c.region)
+            by_region: Dict[str, list] = {}
+            for c in clients:
+                by_region.setdefault(c.region.name, []).append(c)
+            for group in by_region.values():
+                for a in group:
+                    for b in group:
+                        if a is not b:
+                            put(a, b, LAN_TCP)
+
+        for e in self.edges:
+            bw_multi = e.bw_multi_mb * MB
+            if e.max_conns > 0:
+                bw_multi = min(bw_multi, e.max_conns * e.bw_single_mb * MB)
+            region = Region(f"edge:{e.src}>{e.dst}", e.bw_single_mb * MB,
+                            bw_multi, e.latency_ms * 1e-3)
+            links[(e.src, e.dst)] = Link(e.src, e.dst, region,
+                                         lan_class=e.lan_class)
+            if e.symmetric:
+                links[(e.dst, e.src)] = Link(e.dst, e.src, region,
+                                             lan_class=e.lan_class)
+
+        return Environment(
+            name=self.kind, server=server, clients=clients,
+            has_object_store=self.kind != "lan",
+            trusted=self.kind in ("lan", "geo_proximal"),
+            links=links)
+
+
+def _bottleneck_region(a: Region, b: Region) -> Region:
+    return Region(f"{a.name}~{b.name}", min(a.bw_single, b.bw_single),
+                  min(a.bw_multi, b.bw_multi), a.latency + b.latency)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Who trains: the model tier + local work per dispatch."""
+    tier: str = "small"
+    local_steps: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """The wire stack every backend in the deployment drives."""
+    backend: str = "grpc+s3"
+    compression: str = "none"   # payload codec: qsgd[:block] | topk[:frac]
+    wire_codec: str = "none"    # byte codec on the serialized wire: zlib[:lvl]
+    chunk_mb: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """What goes wrong (all deterministic from the scenario seed)."""
+    link_loss: float = 0.0       # per-chunk loss on every graph edge
+    max_retries: int = 4
+    nack_rtts: float = 1.0       # receiver-driven NACK turnaround (edge RTTs)
+    store_fail_rate: float = 0.0
+    availability_trace: str = ""  # fl/fault.AvailabilityTrace spec
+    trace_horizon_s: float = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    """How aggregation runs (fl/async_strategies.py + the sync loop)."""
+    mode: str = "sync"
+    rounds: int = 3
+    buffer_k: int = 0
+    staleness_exponent: float = 0.5
+    max_staleness: int = 0
+    staleness_adaptive: bool = False
+    quorum_fraction: float = 1.0
+    round_deadline_s: float = 0.0
+    region_quorum: float = 0.5
+    relay_conns: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One complete, declarative experiment description."""
+    name: str = "scenario"
+    seed: int = 0
+    topology: TopologySpec = TopologySpec()
+    fleet: FleetSpec = FleetSpec()
+    channel: ChannelSpec = ChannelSpec()
+    faults: FaultSpec = FaultSpec()
+    strategy: StrategySpec = StrategySpec()
+
+    # -- validation --------------------------------------------------------
+    def validate(self) -> "Scenario":
+        from repro.compression.stages import make_codec, split_codecs
+        from repro.core.backends import BACKEND_NAMES
+        if self.channel.backend not in BACKEND_NAMES:
+            raise ScenarioError(
+                f"channel.backend: unknown backend "
+                f"'{self.channel.backend}'; choose from {BACKEND_NAMES}")
+        for field, spec in (("compression", self.channel.compression),
+                            ("wire_codec", self.channel.wire_codec)):
+            try:
+                make_codec(spec)
+            except KeyError as e:
+                raise ScenarioError(f"channel.{field}: {e.args[0]}") from None
+        try:
+            split_codecs(self.channel.compression, self.channel.wire_codec)
+        except ValueError as e:
+            raise ScenarioError(f"channel: {e}") from None
+        if self.strategy.mode not in MODES:
+            raise ScenarioError(
+                f"strategy.mode: unknown mode '{self.strategy.mode}'; "
+                f"choose from {list(MODES)}")
+        if not 0.0 <= self.faults.link_loss < 1.0:
+            raise ScenarioError("faults.link_loss must be in [0, 1)")
+        if not 0.0 < self.strategy.quorum_fraction <= 1.0:
+            raise ScenarioError("strategy.quorum_fraction must be in (0, 1]")
+        self.topology.check()  # bad preset/regions/edges, without building
+        return self
+
+    # -- (de)serialisation -------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "Scenario":
+        return _from_dict(cls, data, "scenario")
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path: str) -> "Scenario":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    @classmethod
+    def from_fl_config(cls, cfg, *, tier: str = "small",
+                       local_steps: int = 4,
+                       store_fail_rate: float = 0.0) -> "Scenario":
+        """The inverse bridge: lift a flat FLConfig into the declarative
+        spec (legacy entry points — tests, examples — resolve through the
+        same scenario runtime as ``--scenario`` files)."""
+        return cls(
+            name=f"fl:{cfg.mode}", seed=cfg.seed,
+            topology=TopologySpec(kind=cfg.environment,
+                                  num_clients=cfg.num_clients),
+            fleet=FleetSpec(tier=tier, local_steps=local_steps),
+            channel=ChannelSpec(backend=cfg.backend,
+                                compression=cfg.compression,
+                                wire_codec=getattr(cfg, "wire_codec",
+                                                   "none"),
+                                chunk_mb=cfg.chunk_mb),
+            faults=FaultSpec(link_loss=cfg.link_loss_rate,
+                             store_fail_rate=store_fail_rate,
+                             availability_trace=cfg.availability_trace),
+            strategy=StrategySpec(
+                mode=cfg.mode, rounds=cfg.rounds, buffer_k=cfg.buffer_k,
+                staleness_exponent=cfg.staleness_exponent,
+                max_staleness=cfg.max_staleness,
+                staleness_adaptive=cfg.staleness_adaptive,
+                quorum_fraction=cfg.quorum_fraction,
+                round_deadline_s=cfg.round_deadline_s,
+                region_quorum=cfg.region_quorum,
+                relay_conns=getattr(cfg, "relay_conns", 8)))
+
+    # -- the bridge to the runtime config ----------------------------------
+    def fl_config(self):
+        """The equivalent flat FLConfig (what the strategies/driver read)."""
+        from repro.configs.base import FLConfig
+        return FLConfig(
+            num_clients=self.topology.num_clients,
+            backend=self.channel.backend,
+            environment=self.topology.kind,
+            rounds=self.strategy.rounds,
+            quorum_fraction=self.strategy.quorum_fraction,
+            round_deadline_s=self.strategy.round_deadline_s,
+            seed=self.seed,
+            mode=self.strategy.mode,
+            buffer_k=self.strategy.buffer_k,
+            staleness_exponent=self.strategy.staleness_exponent,
+            max_staleness=self.strategy.max_staleness,
+            staleness_adaptive=self.strategy.staleness_adaptive,
+            compression=self.channel.compression,
+            wire_codec=self.channel.wire_codec,
+            chunk_mb=self.channel.chunk_mb,
+            availability_trace=self.faults.availability_trace,
+            link_loss_rate=self.faults.link_loss,
+            region_quorum=self.strategy.region_quorum,
+            relay_conns=self.strategy.relay_conns)
+
+
+# ---------------------------------------------------------------------------
+# strict recursive deserialisation
+# ---------------------------------------------------------------------------
+
+_NESTED = {"topology": TopologySpec, "fleet": FleetSpec,
+           "channel": ChannelSpec, "faults": FaultSpec,
+           "strategy": StrategySpec}
+
+
+def _from_dict(cls, data, path):
+    if not isinstance(data, dict):
+        raise ScenarioError(
+            f"{path}: expected an object, got {type(data).__name__}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = sorted(set(data) - set(fields))
+    if unknown:
+        raise ScenarioError(
+            f"{path}: unknown key(s) {unknown}; valid keys: "
+            f"{sorted(fields)}")
+    kw = {}
+    for k, v in data.items():
+        sub = _NESTED.get(k) if cls is Scenario else None
+        if sub is not None:
+            kw[k] = _from_dict(sub, v, f"{path}.{k}")
+        elif cls is TopologySpec and k == "edges":
+            if not isinstance(v, (list, tuple)):
+                raise ScenarioError(f"{path}.edges: expected a list")
+            kw[k] = tuple(_from_dict(EdgeSpec, e, f"{path}.edges[{i}]")
+                          for i, e in enumerate(v))
+        elif isinstance(v, list):
+            kw[k] = tuple(v)
+        else:
+            kw[k] = v
+    try:
+        return cls(**kw)
+    except TypeError as e:
+        raise ScenarioError(f"{path}: {e}") from None
+
+
+# ---------------------------------------------------------------------------
+# CLI override layering
+# ---------------------------------------------------------------------------
+
+def with_overrides(scenario: Scenario, overrides: dict) -> Scenario:
+    """Layer dotted-path overrides onto a scenario: ``{"channel.backend":
+    "grpc"}``. ``None`` values are skipped — exactly the contract
+    ``fl_train`` needs, where an unset CLI flag must not clobber the
+    loaded spec."""
+    for path, value in overrides.items():
+        if value is None:
+            continue
+        parts = path.split(".")
+        scenario = _replace_path(scenario, parts, value)
+    return scenario
+
+
+def _replace_path(node, parts, value):
+    if len(parts) == 1:
+        if not any(f.name == parts[0] for f in dataclasses.fields(node)):
+            raise ScenarioError(
+                f"override: '{parts[0]}' is not a field of "
+                f"{type(node).__name__}")
+        return dataclasses.replace(node, **{parts[0]: value})
+    child = getattr(node, parts[0])
+    return dataclasses.replace(
+        node, **{parts[0]: _replace_path(child, parts[1:], value)})

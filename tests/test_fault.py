@@ -314,6 +314,23 @@ def test_hier_skips_below_quorum_region_and_folds_in_on_rejoin():
     assert rep.n_client_updates == 34
 
 
+def test_hier_relay_migrates_to_live_member_under_churn():
+    """The relay is elected per round among *live* members: with a
+    region's first member down, the surviving member's host carries the
+    fan-out, the LAN legs and the WAN partial (a departed host must not
+    keep transmitting the region's traffic)."""
+    sb, clients, _ = _deployment(n=8)
+    strat = HierarchicalStrategy(region_quorum=0.5)
+    # ncal = {client0, client7}; client0 leaves at t=0 and never returns
+    trace = AvailabilityTrace.parse("client0:leave@0")
+    sched = FLScheduler(sb, clients, strat, availability=trace,
+                        local_steps=1)
+    rep = sched.run(VirtualPayload(4 * MB, tag="mig"), max_aggregations=3)
+    assert rep.n_aggregations == 3
+    assert strat._relay_host["ncal"] == "client7"
+    assert "client7" in strat._relay_be  # the live member's channel
+
+
 def test_hier_full_quorum_no_churn_unchanged():
     """The quorum machinery must be a pure no-op without churn: same
     aggregation count and per-round participation as the fleet size."""
