@@ -3,6 +3,10 @@ perf — the derived column reports bytes handled per call, the roofline
 relevant quantity)."""
 from __future__ import annotations
 
+BENCH_NAME = "kernels"
+BENCH_ORDER = 200
+BENCH_IN_QUICK = False  # JAX-heavy; skipped by the CI smoke
+
 import time
 
 import jax

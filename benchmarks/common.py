@@ -3,17 +3,29 @@
 Every benchmark deployment is described by a ``repro.scenario.Scenario``
 and built through its runtime — the same single path ``fl_train
 --scenario`` takes — so a figure cell is literally an enumeration of
-scenario specs."""
+scenario specs. Since the sweep refactor those enumerations are
+declarative ``repro.sweep.Sweep``s executed by the shared ``ENGINE``
+below (fingerprinted cells, resumable run store under
+``benchmarks/out/runstore/``); each fig module is a ``Study``
+declaration, discovered by ``benchmarks/registry.py``."""
 from __future__ import annotations
 
+import os
 import time
 
 from repro.configs.paper_tiers import TIER_ORDER, TIERS
 from repro.scenario import (ChannelSpec, FaultSpec, Scenario, StrategySpec,
                             TopologySpec, build_runtime)
+from repro.sweep import Engine
 
 ENVS = ["lan", "geo_proximal", "geo_distributed"]
 BACKENDS = ["mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc", "grpc+s3"]
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+# the one engine every paper study runs through (benchmarks/out is both
+# the report dir and the run-store root)
+ENGINE = Engine(OUT_DIR)
 
 
 def scenario_for(env_name: str, *, backend: str = "grpc",

@@ -11,6 +11,10 @@ Reports sync seconds per optimizer step at K=1 vs K=8 local steps.
 """
 from __future__ import annotations
 
+BENCH_NAME = "crosspod"
+BENCH_ORDER = 210
+BENCH_IN_QUICK = False  # JAX-heavy; skipped by the CI smoke
+
 from repro.configs import ARCH_ORDER, get_config
 from repro.core import FLMessage, VirtualPayload, make_backend
 from repro.models import param_count

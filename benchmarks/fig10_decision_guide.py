@@ -1,0 +1,229 @@
+"""Fig 10: the §VII decision-guideline study — backend selection as data.
+
+The paper's headline deliverable is not a figure but §VII's practical
+guidance: which communication backend to pick for a given FL task
+(model tier) and network (environment). This study turns that guidance
+into a measured decision table: one sweep over
+``backend x environment x tier x wire compression``, every cell a full
+synchronous FL round through ``build_runtime`` (the fig5 measurement),
+reduced to a printed + JSON table of the fastest backend per
+(model-tier, network) — with the §VII guideline itself encoded as a
+rule and validated against the measured optimum.
+
+Guideline-as-code (``_recommend``): trusted networks (LAN / proximal
+region) ride the zero-copy MPI buffer backend; untrusted WANs ride gRPC
+below the 10 MB wire threshold and gRPC+S3 above it — the same policy
+the AUTO backend routes by per message.
+
+Validations (CI gate; uncompressed slice):
+1. gRPC+S3 is the measured-fastest backend for the big tier
+   geo-distributed (paper §VI/§VII: up to ~3.8x over gRPC for Large —
+   asserted at >= 2x for Big in the quick grid, and in the 3.2-4.2x
+   band for Large in the full grid);
+2. an MPI variant is (co-)fastest on LAN for the big tier — within the
+   1% measurement tie band — and gRPC pays >= 2x over it;
+3. AUTO is never slower than the *worst* fixed backend in any cell
+   (including the compressed slices): the §VII router can be adopted
+   blindly without risking the pathological choice;
+4. the guideline recommendation lands within 5% of the measured optimum
+   in every uncompressed cell — the decision table agrees with §VII.
+
+The engine writes ``benchmarks/out/fig10_decision_guide.json``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import ENGINE, backends_for, scenario_for
+from repro.configs.paper_tiers import TIER_ORDER, TIERS
+from repro.core import VirtualPayload
+from repro.fl.client import FLClient
+from repro.fl.server import FLServer
+from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep, wire_stats
+
+BENCH_ORDER = 90
+ENVS = ("lan", "geo_proximal", "geo_distributed")
+TIE_BAND = 1.01       # backends within 1% of the minimum are co-fastest
+GUIDELINE_BAND = 1.05  # the §VII recommendation must be within 5% of best
+SMALL_WIRE = 10 * 1024 * 1024  # paper: < 10 MB -> pure gRPC
+
+
+def _tiers(quick):
+    return ("small", "big") if quick else tuple(TIER_ORDER)
+
+
+def _codecs(quick):
+    return ("none", "zlib")
+
+
+def _sweeps(quick):
+    return tuple(
+        Sweep(name=f"fig10:{env}",
+              base=scenario_for(env, name=f"fig10:{env}"),
+              axes=(Axis("fleet.tier", values=_tiers(quick)),
+                    Axis("channel.wire_codec", values=_codecs(quick)),
+                    Axis("channel.backend",
+                         values=tuple(backends_for(env)) + ("auto",))))
+        for env in ENVS)
+
+
+def _cell(cell):
+    env = cell.scenario.topology.kind
+    tier = TIERS[cell.scenario.fleet.tier]
+    rt = build_runtime(cell.scenario)
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s(env))
+               for h in rt.env.clients]
+    server = FLServer(rt.make_backend("server"), clients, local_steps=1,
+                      live=False)
+    rep = server.run_round(VirtualPayload(tier.payload_bytes, tag="r1"))
+    return {"round_s": rep.round_time, "sim_time_s": rep.round_time,
+            "n_rounds": 1,
+            "stage_charges": {
+                **{f"server.{k}": v for k, v in rep.server.items()},
+                **{f"client.{k}": v for k, v in rep.clients.items()}},
+            **wire_stats(rt.fabric, rt.store)}
+
+
+def _name(cell):
+    return (f"fig10/{cell.scenario.topology.kind}/"
+            f"{cell.scenario.fleet.tier}/"
+            f"{cell.scenario.channel.wire_codec}/"
+            f"{cell.scenario.channel.backend}")
+
+
+def _recommend(env: str, tier_name: str) -> str:
+    """§VII's deployment guideline as a rule (what the table is checked
+    against): trusted networks -> the zero-copy MPI buffer backend;
+    untrusted WAN -> gRPC under the 10 MB wire threshold, gRPC+S3 over
+    it."""
+    if env in ("lan", "geo_proximal"):
+        return "mpi_mem_buff"
+    if TIERS[tier_name].payload_bytes < SMALL_WIRE:
+        return "grpc"
+    return "grpc+s3"
+
+
+def _decide(times: dict, env: str, tier_name: str) -> dict:
+    """One decision-table entry from a cell's per-backend round times."""
+    fixed = {b: t for b, t in times.items() if b != "auto"}
+    fastest = min(fixed, key=fixed.get)
+    best = fixed[fastest]
+    winners = sorted(b for b, t in fixed.items() if t <= best * TIE_BAND)
+    rec = _recommend(env, tier_name)
+    return {"environment": env, "tier": tier_name,
+            "round_s": dict(sorted(times.items(), key=lambda kv: kv[1])),
+            "fastest": fastest, "co_fastest": winners,
+            "recommended": rec,
+            "recommended_over_best": times[rec] / best,
+            "auto_over_best": times["auto"] / best,
+            "worst_fixed": max(fixed, key=fixed.get),
+            "speedup_best_over_worst": max(fixed.values()) / best}
+
+
+def _finalize(results, quick, verbose):
+    cells: dict = {}
+    for r in results:
+        _, env, tier_name, codec, backend = r.cell.split("/")
+        cells.setdefault((env, tier_name, codec), {})[backend] = \
+            r.metrics["round_s"]
+    report = {"tie_band": TIE_BAND, "guideline_band": GUIDELINE_BAND,
+              "decision": [], "compressed": []}
+    for (env, tier_name, codec), times in cells.items():
+        entry = _decide(times, env, tier_name)
+        entry["wire_codec"] = codec
+        (report["decision"] if codec == "none"
+         else report["compressed"]).append(entry)
+    if verbose:
+        print("\n== Fig 10: §VII decision guide — fastest backend per "
+              "(tier, network) ==")
+        print(f"{'network':16s} {'tier':7s} {'fastest':13s} "
+              f"{'recommended':13s} {'rec/best':>8s} {'auto/best':>9s} "
+              f"{'best/worst':>10s}")
+        for e in report["decision"]:
+            print(f"{e['environment']:16s} {e['tier']:7s} "
+                  f"{e['fastest']:13s} {e['recommended']:13s} "
+                  f"{e['recommended_over_best']:8.3f} "
+                  f"{e['auto_over_best']:9.3f} "
+                  f"{e['speedup_best_over_worst']:10.2f}")
+    report["validation"] = _validate(report, quick, verbose)
+    rows = [r.row() for r in results]
+    return report, rows
+
+
+def _entry(report, env, tier_name):
+    for e in report["decision"]:
+        if e["environment"] == env and e["tier"] == tier_name:
+            return e
+    raise KeyError((env, tier_name))
+
+
+def _validate(report, quick, verbose):
+    # 1) big tier geo-distributed: gRPC+S3 measured fastest, >= 2x gRPC
+    geo_big = _entry(report, "geo_distributed", "big")
+    assert geo_big["fastest"] == "grpc+s3", (
+        f"fig10: expected gRPC+S3 fastest for big/geo_distributed, got "
+        f"{geo_big['fastest']}")
+    s3_speedup = geo_big["round_s"]["grpc"] / geo_big["round_s"]["grpc+s3"]
+    assert s3_speedup >= 2.0, (
+        f"fig10: gRPC+S3 only {s3_speedup:.2f}x over gRPC for "
+        f"big/geo_distributed (expected >= 2x)")
+    large_speedup = None
+    if not quick:
+        geo_large = _entry(report, "geo_distributed", "large")
+        assert geo_large["fastest"] == "grpc+s3"
+        large_speedup = (geo_large["round_s"]["grpc"]
+                         / geo_large["round_s"]["grpc+s3"])
+        assert 3.2 <= large_speedup <= 4.2, (
+            f"fig10: large-tier S3 speedup {large_speedup:.2f}x outside "
+            f"the paper's 3.5-3.8x band (tolerance 3.2-4.2)")
+    # 2) LAN big: an MPI variant co-fastest (1% tie band); gRPC >= 2x it
+    lan_big = _entry(report, "lan", "big")
+    mpi_winners = [b for b in lan_big["co_fastest"]
+                   if b.startswith("mpi_")]
+    assert mpi_winners, (
+        f"fig10: no MPI variant co-fastest on LAN/big "
+        f"(co-fastest: {lan_big['co_fastest']})")
+    lan_penalty = (lan_big["round_s"]["grpc"]
+                   / lan_big["round_s"]["mpi_mem_buff"])
+    assert lan_penalty >= 2.0, (
+        f"fig10: LAN gRPC penalty only {lan_penalty:.2f}x over "
+        f"mpi_mem_buff (expected >= 2x)")
+    # 3) AUTO never slower than the worst fixed backend, in *every* cell
+    for e in report["decision"] + report["compressed"]:
+        worst = e["round_s"][e["worst_fixed"]]
+        auto = e["round_s"]["auto"]
+        assert auto <= worst * (1 + 1e-6), (
+            f"fig10: AUTO ({auto:.2f}s) slower than the worst fixed "
+            f"backend {e['worst_fixed']} ({worst:.2f}s) for "
+            f"{e['tier']}/{e['environment']}/{e['wire_codec']}")
+    # 4) the §VII guideline lands within 5% of the measured optimum
+    for e in report["decision"]:
+        assert e["recommended_over_best"] <= GUIDELINE_BAND, (
+            f"fig10: guideline pick {e['recommended']} is "
+            f"{e['recommended_over_best']:.3f}x the optimum for "
+            f"{e['tier']}/{e['environment']} (band {GUIDELINE_BAND})")
+    if verbose:
+        extra = (f", large {large_speedup:.2f}x (paper 3.5-3.8x)"
+                 if large_speedup else "")
+        print(f"[fig10] validation: grpc+s3 fastest big/geo "
+              f"({s3_speedup:.2f}x over grpc{extra}); MPI co-fastest on "
+              f"LAN (grpc pays {lan_penalty:.2f}x); AUTO never worse "
+              f"than the worst fixed backend; guideline within "
+              f"{GUIDELINE_BAND}x of optimum everywhere")
+    return {"s3_speedup_big_geo": s3_speedup,
+            "s3_speedup_large_geo": large_speedup,
+            "lan_grpc_penalty": lan_penalty,
+            "mpi_co_fastest_lan": mpi_winners,
+            "auto_never_worst": True,
+            "guideline_within_band": True}
+
+
+STUDY = Study(
+    name="fig10", title="Fig 10: §VII decision-guideline study",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    out="fig10_decision_guide.json", order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
+if __name__ == "__main__":
+    ENGINE.main(STUDY)

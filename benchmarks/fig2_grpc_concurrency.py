@@ -2,41 +2,62 @@
 and sender memory (bottom) for N.California -> Bahrain."""
 from __future__ import annotations
 
+from benchmarks.common import ENGINE, scenario_for
 from repro.configs.paper_tiers import TIERS
-from repro.core import FLMessage, VirtualPayload, make_backend
+from repro.core import FLMessage, VirtualPayload
 from repro.core.netsim import MB
-from benchmarks.common import deployment
+from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep, wire_stats
+
+BENCH_ORDER = 20
+BAHRAIN = "client6"
 
 
-def run(verbose=True):
-    env, fabric, store = deployment("geo_distributed")
-    bahrain = "client6"
+def _sweeps(quick):
+    return (Sweep(name="fig2",
+                  base=scenario_for("geo_distributed", backend="grpc",
+                                    name="fig2"),
+                  axes=(Axis("params.channels", values=(1, 2, 4, 8, 16)),)),)
+
+
+def _cell(cell):
+    rt = build_runtime(cell.scenario)
+    n = cell.params["channels"]
     nbytes = TIERS["big"].payload_bytes  # 253 MB payloads
-    rows = []
+    be = rt.make_backend("server")
+    msgs = [FLMessage("m", "server", BAHRAIN,
+                      payload=VirtualPayload(nbytes, tag=f"c{i}"))
+            for i in range(n)]
+    done, arrives = be.broadcast(msgs, 0.0)
+    span = max(arrives)
+    return {"bw_MBps": n * nbytes / span / MB,
+            "peak_mem_MB": be.endpoint.memory.peak / MB,
+            "sim_time_s": span, **wire_stats(rt.fabric)}
+
+
+def _finalize(results, quick, verbose):
+    rows = [r.row() for r in results]
     if verbose:
         print("\n== Fig 2: gRPC concurrent dispatch, CA -> Bahrain "
               "(253MB payloads) ==")
         print(f"{'channels':>9s} {'agg BW MB/s':>12s} {'peak mem MB':>12s}")
-    for n in (1, 2, 4, 8, 16):
-        be = make_backend("grpc", env, fabric, "server", store=store)
-        msgs = [FLMessage("m", "server", bahrain,
-                          payload=VirtualPayload(nbytes, tag=f"c{i}"))
-                for i in range(n)]
-        done, arrives = be.broadcast(msgs, 0.0)
-        span = max(arrives)
-        bw = n * nbytes / span / MB
-        peak = be.endpoint.memory.peak / MB
-        rows.append({"name": f"fig2/channels{n}", "bw_MBps": bw,
-                     "peak_mem_MB": peak})
-        if verbose:
-            print(f"{n:9d} {bw:12.1f} {peak:12.1f}")
-        fabric.endpoints[bahrain].inbox.clear()
-        be.endpoint.memory.reset()
+        for r in results:
+            print(f"{r.params['channels']:9d} "
+                  f"{r.metrics['bw_MBps']:12.1f} "
+                  f"{r.metrics['peak_mem_MB']:12.1f}")
     # paper claims: bw grows with channels; memory grows ~linearly
     assert rows[-1]["bw_MBps"] > 3 * rows[0]["bw_MBps"]
     assert rows[-1]["peak_mem_MB"] > 8 * rows[0]["peak_mem_MB"]
-    return rows
+    return None, rows
 
+
+STUDY = Study(
+    name="fig2", title="Fig 2: gRPC concurrent dispatch (CA -> Bahrain)",
+    sweeps=_sweeps, cell=_cell,
+    cell_name=lambda c: f"fig2/channels{c.params['channels']}",
+    finalize=_finalize, order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
 
 if __name__ == "__main__":
-    run()
+    ENGINE.main(STUDY)

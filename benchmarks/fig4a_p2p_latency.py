@@ -3,9 +3,12 @@ Geo-distributed is split into CA-VA (intra-continent) and CA-HK
 (inter-continent), as in the paper."""
 from __future__ import annotations
 
+from benchmarks.common import ENGINE, backends_for, fmt_s, scenario_for
 from repro.configs.paper_tiers import TIER_ORDER, TIERS
-from repro.core import make_backend
-from benchmarks.common import backends_for, deployment, fmt_s
+from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep
+
+BENCH_ORDER = 30
 
 # (env label, env name, destination host)
 SCENARIOS = [("LAN", "lan", "client0"),
@@ -14,30 +17,46 @@ SCENARIOS = [("LAN", "lan", "client0"),
              ("CA-HK", "geo_distributed", "client3")]
 
 
-def run(verbose=True):
-    rows = []
+def _sweeps(quick):
+    return tuple(
+        Sweep(name=f"fig4a:{label}",
+              base=scenario_for(env_name, name=f"fig4a:{label}"),
+              axes=(Axis("fleet.tier", values=tuple(TIER_ORDER)),
+                    Axis("channel.backend",
+                         values=tuple(backends_for(env_name)))),
+              params={"label": label, "dst": dst})
+        for label, env_name, dst in SCENARIOS)
+
+
+def _cell(cell):
+    rt = build_runtime(cell.scenario)
+    be = rt.make_backend("server")
+    tier = TIERS[cell.scenario.fleet.tier]
+    return {"latency_s": be.p2p_time(tier.payload_bytes,
+                                     cell.params["dst"])}
+
+
+def _name(cell):
+    return (f"fig4a/{cell.params['label']}/{cell.scenario.fleet.tier}/"
+            f"{cell.scenario.channel.backend}")
+
+
+def _finalize(results, quick, verbose):
+    rows = [r.row() for r in results]
     if verbose:
         print("\n== Fig 4a: p2p latency (one message, server -> client) ==")
-    for label, env_name, dst in SCENARIOS:
-        env, fabric, store = deployment(env_name)
-        names = backends_for(env_name)
-        if verbose:
+        by = {r.cell: r.metrics["latency_s"] for r in results}
+        for label, env_name, _dst in SCENARIOS:
+            names = backends_for(env_name)
             print(f"-- {label}")
-            print("  " + f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names))
-        for tier_name in TIER_ORDER:
-            tier = TIERS[tier_name]
-            vals = []
-            for b in names:
-                be = make_backend(b, env, fabric, "server", store=store)
-                t = be.p2p_time(tier.payload_bytes, dst)
-                vals.append(t)
-                rows.append({"name": f"fig4a/{label}/{tier_name}/{b}",
-                             "latency_s": t})
-            if verbose:
+            print("  " + f"{'tier':8s}" + "".join(f"{b:>14s}"
+                                                  for b in names))
+            for tier_name in TIER_ORDER:
+                vals = [by[f"fig4a/{label}/{tier_name}/{b}"] for b in names]
                 print(f"  {tier_name:8s}" + "".join(f"{fmt_s(v):>14s}"
                                                     for v in vals))
     _validate(rows)
-    return rows
+    return None, rows
 
 
 def _validate(rows):
@@ -52,5 +71,12 @@ def _validate(rows):
     assert (d["fig4a/CA-HK/large/grpc"] / d["fig4a/CA-HK/small/grpc"]) > 50
 
 
+STUDY = Study(
+    name="fig4a", title="Fig 4a: p2p latency across backends/envs/tiers",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    run()
+    ENGINE.main(STUDY)

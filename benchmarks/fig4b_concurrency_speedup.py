@@ -2,45 +2,66 @@
 messages (Large uses 5), per backend and environment."""
 from __future__ import annotations
 
+from benchmarks.common import ENGINE, backends_for, scenario_for
 from repro.configs.paper_tiers import TIER_ORDER, TIERS
-from repro.core import FLMessage, VirtualPayload, make_backend
-from benchmarks.common import backends_for, deployment
+from repro.core import FLMessage, VirtualPayload
+from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep
+
+BENCH_ORDER = 31
+ENVS = ("lan", "geo_proximal", "geo_distributed")
 
 
-def run(verbose=True):
-    rows = []
+def _sweeps(quick):
+    return tuple(
+        Sweep(name=f"fig4b:{env_name}",
+              base=scenario_for(env_name, name=f"fig4b:{env_name}"),
+              axes=(Axis("fleet.tier", values=tuple(TIER_ORDER)),
+                    Axis("channel.backend",
+                         values=tuple(backends_for(env_name)))))
+        for env_name in ENVS)
+
+
+def _cell(cell):
+    env_name = cell.scenario.topology.kind
+    tier = TIERS[cell.scenario.fleet.tier]
+    n = 5 if tier.name == "large" else 10
+    rt = build_runtime(cell.scenario)
+    dst = "client3" if env_name == "geo_distributed" else "client0"
+    be = rt.make_backend("server")
+    mk = lambda i: FLMessage(
+        "m", "server", dst,
+        payload=VirtualPayload(tier.payload_bytes, tag=f"{i}"))
+    _, seq_arr = be.sequential_broadcast([mk(i) for i in range(n)], 0.0)
+    rt.fabric.endpoints[dst].inbox.clear()
+    _, conc_arr = be.broadcast([mk(100 + i) for i in range(n)], 0.0)
+    return {"speedup": max(seq_arr) / max(conc_arr),
+            "sim_time_s": max(conc_arr)}
+
+
+def _name(cell):
+    return (f"fig4b/{cell.scenario.topology.kind}/"
+            f"{cell.scenario.fleet.tier}/{cell.scenario.channel.backend}")
+
+
+def _finalize(results, quick, verbose):
+    rows = [r.row() for r in results]
     if verbose:
         print("\n== Fig 4b: concurrent/sequential speedup "
               "(10 msgs, Large: 5) ==")
-    for env_name in ("lan", "geo_proximal", "geo_distributed"):
-        names = backends_for(env_name)
-        if verbose:
+        by = {r.cell: r.metrics["speedup"] for r in results}
+        for env_name in ENVS:
+            names = backends_for(env_name)
             print(f"-- {env_name}")
-            print("  " + f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names))
-        for tier_name in TIER_ORDER:
-            tier = TIERS[tier_name]
-            n = 5 if tier_name == "large" else 10
-            vals = []
-            for b in names:
-                env, fabric, store = deployment(env_name)
-                dst = "client3" if env_name == "geo_distributed" else "client0"
-                be = make_backend(b, env, fabric, "server", store=store)
-                mk = lambda i: FLMessage(
-                    "m", "server", dst,
-                    payload=VirtualPayload(tier.payload_bytes, tag=f"{i}"))
-                _, seq_arr = be.sequential_broadcast([mk(i) for i in range(n)],
-                                                     0.0)
-                fabric.endpoints[dst].inbox.clear()
-                _, conc_arr = be.broadcast([mk(100 + i) for i in range(n)], 0.0)
-                speedup = max(seq_arr) / max(conc_arr)
-                vals.append(speedup)
-                rows.append({"name": f"fig4b/{env_name}/{tier_name}/{b}",
-                             "speedup": speedup})
-            if verbose:
+            print("  " + f"{'tier':8s}" + "".join(f"{b:>14s}"
+                                                  for b in names))
+            for tier_name in TIER_ORDER:
+                vals = [by[f"fig4b/{env_name}/{tier_name}/{b}"]
+                        for b in names]
                 print(f"  {tier_name:8s}" + "".join(f"{v:>14.2f}"
                                                     for v in vals))
     _validate(rows)
-    return rows
+    return None, rows
 
 
 def _validate(rows):
@@ -53,5 +74,12 @@ def _validate(rows):
     assert d["fig4b/geo_distributed/big/torch_rpc"] >= 0.9
 
 
+STUDY = Study(
+    name="fig4b", title="Fig 4b: concurrent/sequential speedup",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    run()
+    ENGINE.main(STUDY)

@@ -1,37 +1,54 @@
 """Fig 4c: peak sender memory during a concurrent broadcast to 7 clients."""
 from __future__ import annotations
 
+from benchmarks.common import ENGINE, backends_for, scenario_for
 from repro.configs.paper_tiers import TIER_ORDER, TIERS
-from repro.core import FLMessage, VirtualPayload, make_backend
+from repro.core import FLMessage, VirtualPayload
 from repro.core.netsim import MB
-from benchmarks.common import backends_for, deployment
+from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep
+
+BENCH_ORDER = 32
+ENV = "geo_distributed"
 
 
-def run(verbose=True):
-    rows = []
-    env_name = "geo_distributed"
-    names = backends_for(env_name)
+def _sweeps(quick):
+    return (Sweep(name="fig4c",
+                  base=scenario_for(ENV, name="fig4c"),
+                  axes=(Axis("fleet.tier", values=tuple(TIER_ORDER)),
+                        Axis("channel.backend",
+                             values=tuple(backends_for(ENV))))),)
+
+
+def _cell(cell):
+    tier = TIERS[cell.scenario.fleet.tier]
+    rt = build_runtime(cell.scenario)
+    be = rt.make_backend("server")
+    msgs = [FLMessage("m", "server", c.host_id,
+                      payload=VirtualPayload(tier.payload_bytes))
+            for c in rt.env.clients]
+    be.broadcast(msgs, 0.0)
+    return {"peak_MB": be.endpoint.memory.peak / MB}
+
+
+def _name(cell):
+    return (f"fig4c/{cell.scenario.fleet.tier}/"
+            f"{cell.scenario.channel.backend}")
+
+
+def _finalize(results, quick, verbose):
+    rows = [r.row() for r in results]
     if verbose:
+        names = backends_for(ENV)
         print("\n== Fig 4c: peak sender memory, concurrent broadcast to 7 "
               "clients (MB) ==")
         print(f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names))
-    for tier_name in TIER_ORDER:
-        tier = TIERS[tier_name]
-        vals = []
-        for b in names:
-            env, fabric, store = deployment(env_name)
-            be = make_backend(b, env, fabric, "server", store=store)
-            msgs = [FLMessage("m", "server", c.host_id,
-                              payload=VirtualPayload(tier.payload_bytes))
-                    for c in env.clients]
-            be.broadcast(msgs, 0.0)
-            peak = be.endpoint.memory.peak / MB
-            vals.append(peak)
-            rows.append({"name": f"fig4c/{tier_name}/{b}", "peak_MB": peak})
-        if verbose:
+        by = {r.cell: r.metrics["peak_MB"] for r in results}
+        for tier_name in TIER_ORDER:
+            vals = [by[f"fig4c/{tier_name}/{b}"] for b in names]
             print(f"{tier_name:8s}" + "".join(f"{v:>14.1f}" for v in vals))
     _validate(rows)
-    return rows
+    return None, rows
 
 
 def _validate(rows):
@@ -47,5 +64,12 @@ def _validate(rows):
     assert d["fig4c/large/grpc+s3"] < 1.5 * large
 
 
+STUDY = Study(
+    name="fig4c", title="Fig 4c: broadcast peak sender memory",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    run()
+    ENGINE.main(STUDY)

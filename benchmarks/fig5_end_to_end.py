@@ -9,60 +9,82 @@ over the Table-I-calibrated network model.
 """
 from __future__ import annotations
 
+from benchmarks.common import ENGINE, backends_for, scenario_for
 from repro.configs.paper_tiers import TIER_ORDER, TIERS
-from repro.core import VirtualPayload, make_backend
+from repro.core import VirtualPayload
 from repro.fl.client import FLClient
 from repro.fl.server import FLServer
-from benchmarks.common import backends_for, deployment
+from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep, wire_stats
+
+BENCH_ORDER = 40
+ENVS = ("lan", "geo_proximal", "geo_distributed")
 
 
-def _round_time(backend_name, env_name, tier, round_idx=1):
-    env, fabric, store = deployment(env_name)
-    clients = []
-    for host in env.clients:
-        cb = make_backend(backend_name, env, fabric, host.host_id,
-                          store=store)
-        clients.append(FLClient(host.host_id, cb,
-                                sim_train_s=tier.train_s(env_name)))
-    sb = make_backend(backend_name, env, fabric, "server", store=store)
-    server = FLServer(sb, clients, local_steps=1, live=False)
-    payload = VirtualPayload(tier.payload_bytes, tag=f"r{round_idx}")
-    report = server.run_round(payload)
-    return report
+def _sweeps(quick):
+    return tuple(
+        Sweep(name=f"fig5:{env_name}",
+              base=scenario_for(env_name, name=f"fig5:{env_name}"),
+              axes=(Axis("fleet.tier", values=tuple(TIER_ORDER)),
+                    Axis("channel.backend",
+                         values=tuple(backends_for(env_name)))),
+              params={"round_idx": 1})
+        for env_name in ENVS)
 
 
-def run(verbose=True):
-    rows = []
-    for env_name in ("lan", "geo_proximal", "geo_distributed"):
-        names = backends_for(env_name)
-        if verbose:
+def _cell(cell):
+    env_name = cell.scenario.topology.kind
+    tier = TIERS[cell.scenario.fleet.tier]
+    rt = build_runtime(cell.scenario)
+    clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                        sim_train_s=tier.train_s(env_name))
+               for h in rt.env.clients]
+    server = FLServer(rt.make_backend("server"), clients, local_steps=1,
+                      live=False)
+    payload = VirtualPayload(tier.payload_bytes,
+                             tag=f"r{cell.params['round_idx']}")
+    rep = server.run_round(payload)
+    return {"round_s": rep.round_time, "server": rep.server,
+            "clients": rep.clients,
+            "peak_server_mem": rep.peak_server_memory,
+            "sim_time_s": rep.round_time, "n_rounds": 1,
+            "stage_charges": {
+                **{f"server.{k}": v for k, v in rep.server.items()},
+                **{f"client.{k}": v for k, v in rep.clients.items()}},
+            **wire_stats(rt.fabric, rt.store)}
+
+
+def _name(cell):
+    return (f"fig5/{cell.scenario.topology.kind}/"
+            f"{cell.scenario.fleet.tier}/{cell.scenario.channel.backend}")
+
+
+def _finalize(results, quick, verbose):
+    rows = [{"name": r.cell, "round_s": r.metrics["round_s"],
+             "server": r.metrics["server"], "clients": r.metrics["clients"],
+             "peak_server_mem": r.metrics["peak_server_mem"]}
+            for r in results]
+    d = {r["name"]: r["round_s"] for r in rows}
+    if verbose:
+        for env_name in ENVS:
+            names = backends_for(env_name)
             print(f"\n== Fig 5 ({env_name}): end-to-end round time + "
                   "per-state breakdown ==")
             print(f"{'tier':8s}" + "".join(f"{b:>14s}" for b in names)
                   + "   (round seconds)")
-        for tier_name in TIER_ORDER:
-            tier = TIERS[tier_name]
-            vals = []
-            for b in names:
-                rep = _round_time(b, env_name, tier)
-                vals.append(rep.round_time)
-                rows.append({
-                    "name": f"fig5/{env_name}/{tier_name}/{b}",
-                    "round_s": rep.round_time,
-                    "server": rep.server, "clients": rep.clients,
-                    "peak_server_mem": rep.peak_server_memory,
-                })
-            if verbose:
+            for tier_name in TIER_ORDER:
+                vals = [d[f"fig5/{env_name}/{tier_name}/{b}"]
+                        for b in names]
                 print(f"{tier_name:8s}" + "".join(f"{v:>14.1f}"
                                                   for v in vals))
-        if verbose and env_name == "geo_distributed":
-            d = {r["name"]: r["round_s"] for r in rows}
-            for tn in TIER_ORDER:
-                g = d[f"fig5/geo_distributed/{tn}/grpc"]
-                s = d[f"fig5/geo_distributed/{tn}/grpc+s3"]
-                print(f"   gRPC+S3 speedup over gRPC ({tn}): {g / s:.2f}x")
+            if env_name == "geo_distributed":
+                for tn in TIER_ORDER:
+                    g = d[f"fig5/geo_distributed/{tn}/grpc"]
+                    s = d[f"fig5/geo_distributed/{tn}/grpc+s3"]
+                    print(f"   gRPC+S3 speedup over gRPC ({tn}): "
+                          f"{g / s:.2f}x")
     _validate(rows, verbose)
-    return rows
+    return None, rows
 
 
 def _validate(rows, verbose):
@@ -94,5 +116,12 @@ def _validate(rows, verbose):
               f"3.5-3.8x); LAN gRPC penalty={ratio:.1f}x (paper ~9x)")
 
 
+STUDY = Study(
+    name="fig5", title="Fig 5: end-to-end FL round per-state durations",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    run()
+    ENGINE.main(STUDY)

@@ -17,18 +17,15 @@ aggregators: LAN-local reduce + one multi-connection WAN hop per region).
 Deployments use 14 clients (2 per paper region on the WAN — the
 multi-silo regime where topology starts to matter) with tier-calibrated
 simulated local training and tier-sized virtual payloads, so the runs are
-deterministic and CI-fast. Emits a JSON report
-(``benchmarks/out/fig6_async_vs_sync.json``) and validates the headline
-claim: async and hierarchical modes beat sync round throughput on the WAN
-for at least one backend.
+deterministic and CI-fast. The cell grid is one declarative Sweep per
+environment; the engine writes the JSON report
+(``benchmarks/out/fig6_async_vs_sync.json``) and the validation asserts
+the headline claim: async and hierarchical modes beat sync round
+throughput on the WAN for at least one backend.
 """
 from __future__ import annotations
 
-import json
-import math
-import os
-
-from benchmarks.common import scenario_for
+from benchmarks.common import ENGINE, scenario_for
 from repro.configs.paper_tiers import TIERS
 from repro.core import VirtualPayload
 from repro.fl.async_strategies import (FedBuffStrategy, HierarchicalStrategy,
@@ -37,23 +34,48 @@ from repro.fl.client import FLClient
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
 from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep, wire_stats
 
+BENCH_ORDER = 50
 N_CLIENTS = 14
-OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
-                        "fig6_async_vs_sync.json")
+MODES = ("sync", "fedbuff", "semisync", "hier")
 
 
-def _make_deployment(backend_name, env_name, tier):
-    rt = build_runtime(scenario_for(env_name, backend=backend_name,
-                                    num_clients=N_CLIENTS,
-                                    name=f"fig6:{env_name}:{backend_name}"))
+def _sweeps(quick):
+    cells = {
+        "geo_distributed": ("grpc", "grpc+s3") if quick
+        else ("grpc", "torch_rpc", "grpc+s3"),
+        "lan": ("grpc",) if quick else ("grpc", "torch_rpc"),
+    }
+    tiers = ("big",) if quick else ("big", "large")
+    sync_rounds = 3 if quick else 5
+    target = 3 * N_CLIENTS
+    return tuple(
+        Sweep(name=f"fig6:{env_name}",
+              base=scenario_for(env_name, num_clients=N_CLIENTS,
+                                name=f"fig6:{env_name}"),
+              axes=(Axis("fleet.tier", values=tiers),
+                    Axis("channel.backend", values=backends),
+                    Axis("strategy.mode", values=MODES)),
+              # async modes need headroom: enough merges to pass the
+              # target even with staleness discounts (fedbuff merges
+              # K=n/2 updates at a time)
+              params={"sync_rounds": sync_rounds,
+                      "max_agg": 4 * sync_rounds, "target": target})
+        for env_name, backends in cells.items())
+
+
+def _deployment(cell):
+    rt = build_runtime(cell.scenario)
+    tier = TIERS[cell.scenario.fleet.tier]
     clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
-                        sim_train_s=tier.train_s(env_name))
+                        sim_train_s=tier.train_s(
+                            cell.scenario.topology.kind))
                for h in rt.env.clients]
-    return rt.make_backend("server"), clients
+    return rt, rt.make_backend("server"), clients
 
 
-def _metrics(n_agg, n_updates, eff, span, target, time_to_target):
+def _metrics(n_agg, n_updates, eff, span, time_to_target):
     span = max(span, 1e-9)
     return {
         "aggregations_per_hour": 3600.0 * n_agg / span,
@@ -65,24 +87,26 @@ def _metrics(n_agg, n_updates, eff, span, target, time_to_target):
     }
 
 
-def _run_sync(backend_name, env_name, tier, rounds, target):
-    sb, clients = _make_deployment(backend_name, env_name, tier)
-    server = FLServer(sb, clients, local_steps=1, live=False)
-    t_target = None
-    for r in range(rounds):
-        # fresh payload per round: each merged model is a new object
-        rep = server.run_round(VirtualPayload(tier.payload_bytes,
-                                              tag=f"fig6-r{r}"))
-        if t_target is None and (r + 1) * rep.n_participants >= target:
-            t_target = server.now
-    m = _metrics(rounds, rounds * N_CLIENTS, float(rounds * N_CLIENTS),
-                 server.now, target, t_target)
-    m["mean_staleness"] = 0.0
-    return m
-
-
-def _run_mode(mode, backend_name, env_name, tier, max_agg, target):
-    sb, clients = _make_deployment(backend_name, env_name, tier)
+def _cell(cell):
+    tier = TIERS[cell.scenario.fleet.tier]
+    mode = cell.scenario.strategy.mode
+    env_name = cell.scenario.topology.kind
+    target = cell.params["target"]
+    rt, sb, clients = _deployment(cell)
+    if mode == "sync":
+        rounds = cell.params["sync_rounds"]
+        server = FLServer(sb, clients, local_steps=1, live=False)
+        t_target = None
+        for r in range(rounds):
+            # fresh payload per round: each merged model is a new object
+            rep = server.run_round(VirtualPayload(tier.payload_bytes,
+                                                  tag=f"fig6-r{r}"))
+            if t_target is None and (r + 1) * rep.n_participants >= target:
+                t_target = server.now
+        m = _metrics(rounds, rounds * N_CLIENTS,
+                     float(rounds * N_CLIENTS), server.now, t_target)
+        m["mean_staleness"] = 0.0
+        return {**m, "n_rounds": rounds, **wire_stats(rt.fabric, rt.store)}
     knobs = tier.async_knobs(env_name, N_CLIENTS)
     if mode == "fedbuff":
         strategy = FedBuffStrategy(
@@ -98,70 +122,57 @@ def _run_mode(mode, backend_name, env_name, tier, max_agg, target):
         raise KeyError(mode)
     sched = FLScheduler(sb, clients, strategy, local_steps=1)
     rep = sched.run(VirtualPayload(tier.payload_bytes, tag="fig6"),
-                    max_aggregations=max_agg,
+                    max_aggregations=cell.params["max_agg"],
                     target_effective_updates=float(target))
     m = _metrics(rep.n_aggregations, rep.n_client_updates,
-                 rep.effective_updates, rep.sim_time, target,
-                 rep.time_to_target)
+                 rep.effective_updates, rep.sim_time, rep.time_to_target)
     m["mean_staleness"] = rep.mean_staleness
-    return m
+    return {**m, "n_rounds": rep.n_aggregations,
+            **wire_stats(rt.fabric, rt.store)}
 
 
-def run(verbose=True, quick=False):
-    tiers = ["big"] if quick else ["big", "large"]
-    cells = {
-        "geo_distributed": ["grpc", "grpc+s3"] if quick
-        else ["grpc", "torch_rpc", "grpc+s3"],
-        "lan": ["grpc"] if quick else ["grpc", "torch_rpc"],
-    }
-    sync_rounds = 3 if quick else 5
-    modes = ["sync", "fedbuff", "semisync", "hier"]
-    target = 3 * N_CLIENTS
-    # async modes need headroom: enough merges to pass the target even
-    # with staleness discounts (fedbuff merges K=n/2 updates at a time)
-    max_agg = 4 * sync_rounds
+def _name(cell):
+    return (f"fig6/{cell.scenario.topology.kind}/"
+            f"{cell.scenario.fleet.tier}/{cell.scenario.channel.backend}/"
+            f"{cell.scenario.strategy.mode}")
 
-    rows, report = [], {"n_clients": N_CLIENTS, "target_effective_updates":
-                        target, "cells": []}
-    for env_name, backends in cells.items():
-        for tier_name in tiers:
-            tier = TIERS[tier_name]
-            for backend_name in backends:
-                cell = {"environment": env_name, "tier": tier_name,
-                        "backend": backend_name, "modes": {}}
-                for mode in modes:
-                    if mode == "sync":
-                        m = _run_sync(backend_name, env_name, tier,
-                                      sync_rounds, target)
-                    else:
-                        m = _run_mode(mode, backend_name, env_name, tier,
-                                      max_agg, target)
-                    cell["modes"][mode] = m
-                    rows.append({
-                        "name": f"fig6/{env_name}/{tier_name}/"
-                                f"{backend_name}/{mode}",
-                        "round_s": 3600.0 / max(
-                            m["aggregations_per_hour"], 1e-9),
-                        "agg_per_h": m["aggregations_per_hour"],
-                        "updates_per_h": m["updates_per_hour"],
-                        "time_to_target_s": m["time_to_target_s"] or -1.0,
-                        "mean_staleness": m["mean_staleness"],
-                    })
-                report["cells"].append(cell)
-                if verbose:
-                    parts = "  ".join(
-                        f"{mo}={cell['modes'][mo]['aggregations_per_hour']:8.1f}/h"
-                        for mo in modes)
-                    print(f"[fig6] {env_name:16s} {tier_name:6s} "
-                          f"{backend_name:9s}  {parts}")
 
-    report["validation"] = _validate(report, verbose)
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+_MODE_KEYS = ("aggregations_per_hour", "updates_per_hour",
+              "time_to_target_s", "sim_time_s", "n_aggregations",
+              "effective_updates", "mean_staleness")
+
+
+def _finalize(results, quick, verbose):
+    target = results[0].params["target"] if results else 3 * N_CLIENTS
+    report = {"n_clients": N_CLIENTS, "target_effective_updates": target,
+              "cells": []}
+    rows, groups = [], {}
+    for r in results:
+        _, env, tier, backend, mode = r.cell.split("/")
+        key = (env, tier, backend)
+        if key not in groups:
+            groups[key] = {"environment": env, "tier": tier,
+                           "backend": backend, "modes": {}}
+            report["cells"].append(groups[key])
+        m = {k: r.get(k) for k in _MODE_KEYS}
+        groups[key]["modes"][mode] = m
+        rows.append({
+            "name": r.cell,
+            "round_s": 3600.0 / max(m["aggregations_per_hour"], 1e-9),
+            "agg_per_h": m["aggregations_per_hour"],
+            "updates_per_h": m["updates_per_hour"],
+            "time_to_target_s": m["time_to_target_s"] or -1.0,
+            "mean_staleness": m["mean_staleness"],
+        })
     if verbose:
-        print(f"[fig6] JSON report -> {OUT_PATH}")
-    return rows
+        for cell in report["cells"]:
+            parts = "  ".join(
+                f"{mo}={cell['modes'][mo]['aggregations_per_hour']:8.1f}/h"
+                for mo in MODES)
+            print(f"[fig6] {cell['environment']:16s} {cell['tier']:6s} "
+                  f"{cell['backend']:9s}  {parts}")
+    report["validation"] = _validate(report, verbose)
+    return report, rows
 
 
 def _validate(report, verbose):
@@ -189,6 +200,12 @@ def _validate(report, verbose):
             "both_beat_sync_wan": both}
 
 
+STUDY = Study(
+    name="fig6", title="Fig 6: sync vs event-driven FL round throughput",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    out="fig6_async_vs_sync.json", order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    ENGINE.main(STUDY)

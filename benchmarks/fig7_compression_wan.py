@@ -11,65 +11,100 @@ compression:
 * ``fedbuff``  — buffered async with client-update compression on the
   backend channel itself (full client -> server path).
 
-Plus a *fidelity* study with real tensors: hierarchical relays with QSGD
-(error feedback per region) must land within quantisation tolerance of
-flat synchronous FedAvg after several rounds, with the per-region
-residual bounded (error feedback does not accumulate).
+Plus a *fidelity* study with real tensors (one extra sweep cell): hier
+relays with QSGD (error feedback per region) must land within
+quantisation tolerance of flat synchronous FedAvg after several rounds,
+with the per-region residual bounded (error feedback does not
+accumulate).
 
-Emits ``benchmarks/out/fig7_compression_wan.json`` and validates the
-headline claims: qsgd on the hier WAN hop improves round throughput over
-uncompressed hier for gRPC, and hier+qsgd == flat FedAvg within
-tolerance.
+The engine writes ``benchmarks/out/fig7_compression_wan.json``; the
+validation asserts the headline claims: qsgd on the hier WAN hop
+improves round throughput over uncompressed hier for gRPC, and
+hier+qsgd == flat FedAvg within tolerance.
 """
 from __future__ import annotations
 
-import json
-import os
-
 import numpy as np
 
-from benchmarks.common import scenario_for
+from benchmarks.common import ENGINE, scenario_for
 from repro.configs.paper_tiers import TIERS
 from repro.core import TensorPayload, VirtualPayload
 from repro.fl.async_strategies import FedBuffStrategy, HierarchicalStrategy
 from repro.fl.client import FLClient
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
-from repro.scenario import build_runtime
+from repro.scenario import build_runtime, with_overrides
+from repro.sweep import Axis, Study, Sweep, wire_stats
 
+BENCH_ORDER = 60
 N_CLIENTS = 14
-OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
-                        "fig7_compression_wan.json")
+TIER = "big"
 
 
-def _make_deployment(backend_name, tier, compression=None):
-    rt = build_runtime(scenario_for(
-        "geo_distributed", backend=backend_name, num_clients=N_CLIENTS,
-        compression=compression or "none",
-        name=f"fig7:{backend_name}:{compression or 'none'}"))
+def _sweeps(quick):
+    compressions = ("none", "qsgd") if quick else ("none", "qsgd",
+                                                   "topk:0.05")
+    modes = ("hier",) if quick else ("hier", "fedbuff")
+    base = scenario_for("geo_distributed", num_clients=N_CLIENTS,
+                        name="fig7")
+    return (
+        Sweep(name="fig7",
+              base=with_overrides(base, {"fleet.tier": TIER}),
+              axes=(Axis("strategy.mode", values=modes),
+                    Axis("channel.backend", values=("grpc", "grpc+s3")),
+                    Axis("channel.compression", values=compressions)),
+              params={"max_agg": 3 if quick else 5}),
+        Sweep(name="fig7:fidelity",
+              base=scenario_for("geo_distributed", backend="grpc",
+                                num_clients=8, name="fig7:fidelity"),
+              params={"variant": "fidelity", "rounds": 2 if quick else 3}),
+    )
+
+
+def _make_deployment(cell, compression=None):
+    sc = with_overrides(cell.scenario,
+                        {"channel.compression": compression or "none"})
+    rt = build_runtime(sc)
+    tier = TIERS[TIER]
     clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
                         sim_train_s=tier.train_s("geo_distributed"))
                for h in rt.env.clients]
-    return rt.make_backend("server", compression="none"), clients
+    return rt, rt.make_backend("server", compression="none"), clients
 
 
-def _run_cell(mode, backend_name, tier, compression, max_agg):
-    spec = None if compression == "none" else compression
+def _cell(cell):
+    if cell.params.get("variant") == "fidelity":
+        err, tol, upd, residuals = _fidelity(cell.params["rounds"])
+        return {"max_abs_err": err, "tolerance": tol,
+                "max_abs_update": upd, "ef_residual_inf_norms": residuals}
+    mode = cell.scenario.strategy.mode
+    comp = cell.scenario.channel.compression
+    spec = None if comp == "none" else comp
     if mode == "hier":
         # compression rides the relay WAN hop inside the strategy
-        sb, clients = _make_deployment(backend_name, tier)
+        rt, sb, clients = _make_deployment(cell)
         strategy = HierarchicalStrategy(wan_compression=spec)
     else:  # fedbuff: the client backends' channels compress the updates
-        sb, clients = _make_deployment(backend_name, tier, compression=spec)
+        rt, sb, clients = _make_deployment(cell, compression=spec)
         strategy = FedBuffStrategy(buffer_k=max(2, N_CLIENTS // 2),
                                    staleness_exponent=0.5)
     sched = FLScheduler(sb, clients, strategy, local_steps=1)
-    rep = sched.run(VirtualPayload(tier.payload_bytes, tag="fig7"),
-                    max_aggregations=max_agg)
+    rep = sched.run(VirtualPayload(TIERS[TIER].payload_bytes, tag="fig7"),
+                    max_aggregations=cell.params["max_agg"])
     return {"aggregations_per_hour": rep.aggregations_per_hour,
             "updates_per_hour": rep.client_updates_per_hour,
             "sim_time_s": rep.sim_time,
-            "n_aggregations": rep.n_aggregations}
+            "n_aggregations": rep.n_aggregations,
+            "n_rounds": rep.n_aggregations,
+            **wire_stats(rt.fabric, rt.store)}
+
+
+def _name(cell):
+    if cell.params.get("variant") == "fidelity":
+        return "fig7/fidelity/hier_qsgd_vs_flat"
+    return (f"fig7/{cell.scenario.strategy.mode}/"
+            f"{cell.scenario.channel.backend}/"
+            f"{cell.scenario.channel.compression}")
 
 
 # ---------------------------------------------------------------------------
@@ -151,55 +186,56 @@ def _fidelity(rounds):
     return err, tol, upd, residuals
 
 
-def run(verbose=True, quick=False):
-    tier = TIERS["big"]
-    backends = ["grpc", "grpc+s3"]
+def _finalize(results, quick, verbose):
     compressions = ["none", "qsgd"] if quick else ["none", "qsgd",
                                                    "topk:0.05"]
-    modes = ["hier"] if quick else ["hier", "fedbuff"]
-    max_agg = 3 if quick else 5
+    report = {"n_clients": N_CLIENTS, "tier": TIER, "cells": []}
+    rows, groups = [], {}
+    fid = None
+    for r in results:
+        if r.params.get("variant") == "fidelity":
+            fid = r
+            continue
+        _, mode, backend, comp = r.cell.split("/")
+        key = (mode, backend)
+        if key not in groups:
+            groups[key] = {"mode": mode, "backend": backend,
+                           "compressions": {}}
+            report["cells"].append(groups[key])
+        m = {"aggregations_per_hour": r.get("aggregations_per_hour"),
+             "updates_per_hour": r.get("updates_per_hour"),
+             "sim_time_s": r.sim_time_s,
+             "n_aggregations": r.get("n_aggregations")}
+        groups[key]["compressions"][comp] = m
+        rows.append({
+            "name": r.cell,
+            "round_s": 3600.0 / max(m["aggregations_per_hour"], 1e-9),
+            "agg_per_h": m["aggregations_per_hour"],
+            "updates_per_h": m["updates_per_hour"],
+        })
+    if verbose:
+        for cell in report["cells"]:
+            parts = "  ".join(
+                f"{c}={cell['compressions'][c]['aggregations_per_hour']:8.1f}/h"
+                for c in compressions)
+            print(f"[fig7] {cell['mode']:8s} {cell['backend']:9s}  {parts}")
 
-    rows, report = [], {"n_clients": N_CLIENTS, "tier": tier.name,
-                        "cells": []}
-    for mode in modes:
-        for backend_name in backends:
-            cell = {"mode": mode, "backend": backend_name,
-                    "compressions": {}}
-            for comp in compressions:
-                m = _run_cell(mode, backend_name, tier, comp, max_agg)
-                cell["compressions"][comp] = m
-                rows.append({
-                    "name": f"fig7/{mode}/{backend_name}/{comp}",
-                    "round_s": 3600.0 / max(m["aggregations_per_hour"],
-                                            1e-9),
-                    "agg_per_h": m["aggregations_per_hour"],
-                    "updates_per_h": m["updates_per_hour"],
-                })
-            report["cells"].append(cell)
-            if verbose:
-                parts = "  ".join(
-                    f"{c}={cell['compressions'][c]['aggregations_per_hour']:8.1f}/h"
-                    for c in compressions)
-                print(f"[fig7] {mode:8s} {backend_name:9s}  {parts}")
-
-    err, tol, upd, residuals = _fidelity(rounds=2 if quick else 3)
-    report["fidelity"] = {"max_abs_err": err, "tolerance": tol,
-                          "max_abs_update": upd,
-                          "ef_residual_inf_norms": residuals}
+    report["fidelity"] = {
+        "max_abs_err": fid.metrics["max_abs_err"],
+        "tolerance": fid.metrics["tolerance"],
+        "max_abs_update": fid.metrics["max_abs_update"],
+        "ef_residual_inf_norms": fid.metrics["ef_residual_inf_norms"]}
     rows.append({"name": "fig7/fidelity/hier_qsgd_vs_flat",
-                 "max_abs_err": err, "tolerance": tol})
+                 "max_abs_err": fid.metrics["max_abs_err"],
+                 "tolerance": fid.metrics["tolerance"]})
     if verbose:
-        print(f"[fig7] fidelity: max|hier+qsgd - flat fedavg| = {err:.2e} "
-              f"(tol {tol:.2e}); EF residual inf-norms "
-              f"{['%.2e' % r for r in residuals]}")
-
+        f = report["fidelity"]
+        print(f"[fig7] fidelity: max|hier+qsgd - flat fedavg| = "
+              f"{f['max_abs_err']:.2e} (tol {f['tolerance']:.2e}); "
+              f"EF residual inf-norms "
+              f"{['%.2e' % r for r in f['ef_residual_inf_norms']]}")
     report["validation"] = _validate(report, verbose)
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-    if verbose:
-        print(f"[fig7] JSON report -> {OUT_PATH}")
-    return rows
+    return report, rows
 
 
 def _validate(report, verbose):
@@ -233,6 +269,12 @@ def _validate(report, verbose):
             "fidelity_within_tolerance": True}
 
 
+STUDY = Study(
+    name="fig7", title="Fig 7: wire-stack compression on the WAN",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    out="fig7_compression_wan.json", order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    ENGINE.main(STUDY)

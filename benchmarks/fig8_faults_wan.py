@@ -7,19 +7,19 @@ clients are simply not counted, rejoining clients re-fetch the current
 model from the durable store), while MPI's static world aborts the round
 and pays checkpoint-restore + re-run.
 
-Cells (14-client WAN, 2 clients per Table-I region, tier Big):
+Cells (14-client WAN, 2 clients per Table-I region, tier Big) — three
+declarative sweeps through the shared engine:
 
-* ``fedbuff x {grpc, grpc+s3} x loss`` — event-driven runs under a
-  deterministic ``LinkFaultModel`` (per-chunk loss, seeded; gRPC rides
-  8 MB pipelined chunks, gRPC+S3 additionally sees S3 GET retries).
-  Claim: rounds complete via chunk retransmit with *bounded* overhead —
-  no wedged transfers, no failed runs.
-* ``mpi abort model`` — the synchronous loop with a dropped rank: the
-  round aborts; recovery = ckpt restore + full re-run (fl/fault.py).
-* ``churn`` — an explicit availability trace (leave/rejoin mid-run)
-  through fedbuff (grpc+s3: S3 late-join re-fetch, no sender re-upload)
-  and hier (relay quorum skips a churned-out region, folds it back in
-  on rejoin).
+* ``fedbuff x {grpc, grpc+s3} x {clean, zero, loss...}`` — event-driven
+  runs under a deterministic ``LinkFaultModel`` (per-chunk loss, seeded;
+  gRPC rides 8 MB pipelined chunks, gRPC+S3 additionally sees S3 GET
+  retries). ``zero`` forces an explicit zero-rate fault model — the
+  bit-for-bit equivalence probe against ``clean`` (no model installed).
+* ``hier x {clean, zero, loss}`` — chunk loss on the hier relay WAN
+  edge, a real faultable backend channel since the scenario redesign.
+* extras — the MPI abort model (ckpt restore + re-run), churn traces
+  through fedbuff (S3 late-join re-fetch) and hier (relay quorum), and
+  the hier full-quorum == flat FedAvg fidelity probe.
 
 Validations (CI gate):
 1. with loss injected, fedbuff/grpc and fedbuff/grpc+s3 still complete
@@ -33,16 +33,13 @@ Validations (CI gate):
 5. hier with full quorum and no churn still equals flat FedAvg exactly
    (the quorum machinery is a no-op when nobody leaves).
 
-Emits ``benchmarks/out/fig8_faults_wan.json``.
+The engine writes ``benchmarks/out/fig8_faults_wan.json``.
 """
 from __future__ import annotations
 
-import json
-import os
-
 import numpy as np
 
-from benchmarks.common import scenario_for
+from benchmarks.common import ENGINE, scenario_for
 from repro.configs.paper_tiers import TIERS
 from repro.core import TensorPayload, VirtualPayload
 from repro.fl.async_strategies import FedBuffStrategy, HierarchicalStrategy
@@ -51,14 +48,41 @@ from repro.fl.fault import AvailabilityTrace, mpi_abort_recovery_time
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
 from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep
 
+BENCH_ORDER = 70
 N_CLIENTS = 14
 CHUNK_MB = 8.0  # direct backends ride pipelined chunks (loss granularity)
 OVERHEAD_BOUND = 2.0  # lossy run must stay within this factor of clean
 CKPT_RESTORE_BW = 1024 ** 3  # bytes/s checkpoint restore (local disk)
 FAULT_SEED = 8
-OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
-                        "fig8_faults_wan.json")
+TIER = "big"
+
+
+def _losses(quick):
+    return (0.1,) if quick else (0.05, 0.15)
+
+
+def _sweeps(quick):
+    base = scenario_for("geo_distributed", num_clients=N_CLIENTS,
+                        seed=FAULT_SEED, name="fig8")
+    max_agg = 3 if quick else 5
+    return (
+        Sweep(name="fig8:fedbuff", base=base,
+              axes=(Axis("channel.backend", values=("grpc", "grpc+s3")),
+                    Axis("params.loss",
+                         values=("clean", "zero") + _losses(quick))),
+              params={"variant": "fedbuff", "max_agg": max_agg}),
+        Sweep(name="fig8:hier", base=base,
+              axes=(Axis("params.loss",
+                         values=("clean", "zero", _losses(quick)[0])),),
+              params={"variant": "hier_loss", "max_agg": max_agg}),
+        Sweep(name="fig8:extras", base=base,
+              axes=(Axis("params.variant",
+                         values=("mpi_abort", "churn_fedbuff",
+                                 "churn_hier", "hier_fidelity")),),
+              params={"max_agg": max_agg}),
+    )
 
 
 def _make_deployment(backend_name, tier, *, link_loss=0.0,
@@ -73,6 +97,15 @@ def _make_deployment(backend_name, tier, *, link_loss=0.0,
     return (rt.make_backend("server"), clients, rt.fabric, rt.store)
 
 
+def _force_zero_rate(fabric):
+    # a zero-rate fault model must be bit-for-bit the fault-free path;
+    # build_runtime installs None for loss=0, so force an explicit
+    # zero-rate model for the equivalence probe
+    from repro.core.netsim import LinkFaultModel
+    fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.0,
+                                        seed=FAULT_SEED)
+
+
 def _run_fedbuff(backend_name, tier, max_agg, *, loss=None,
                  availability=None):
     sb, clients, fabric, store = _make_deployment(
@@ -80,12 +113,7 @@ def _run_fedbuff(backend_name, tier, max_agg, *, loss=None,
         store_fail_rate=(loss or 0.0) if backend_name == "grpc+s3" else 0.0,
         chunk_mb=CHUNK_MB if backend_name != "grpc+s3" else 0.0)
     if loss == 0.0:
-        # a zero-rate fault model must be bit-for-bit the fault-free
-        # path; build_runtime installs None for loss=0, so force an
-        # explicit zero-rate model for the equivalence probe
-        from repro.core.netsim import LinkFaultModel
-        fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.0,
-                                            seed=FAULT_SEED)
+        _force_zero_rate(fabric)
     strategy = FedBuffStrategy(buffer_k=max(2, N_CLIENTS // 2),
                                staleness_exponent=0.5)
     sched = FLScheduler(sb, clients, strategy, local_steps=1,
@@ -126,19 +154,14 @@ def _mpi_abort_model(tier):
             / clean.round_time}
 
 
-# ---------------------------------------------------------------------------
-# hier: chunk loss on the relay WAN edge (a real backend channel now —
-# before the scenario redesign this hop was analytic and LinkFaultModel
-# could not touch it)
-# ---------------------------------------------------------------------------
-
 def _run_hier(tier, max_agg, *, loss=None):
+    """Chunk loss on the relay WAN edge (a real backend channel now —
+    before the scenario redesign this hop was analytic and LinkFaultModel
+    could not touch it)."""
     sb, clients, fabric, store = _make_deployment(
         "grpc", tier, link_loss=loss or 0.0, chunk_mb=CHUNK_MB)
     if loss == 0.0:
-        from repro.core.netsim import LinkFaultModel
-        fabric.fault_model = LinkFaultModel(chunk_loss_rate=0.0,
-                                            seed=FAULT_SEED)
+        _force_zero_rate(fabric)
     strategy = HierarchicalStrategy(region_quorum=1.0, chunk_mb=CHUNK_MB)
     sched = FLScheduler(sb, clients, strategy, local_steps=1)
     rep = sched.run(VirtualPayload(tier.payload_bytes, tag="fig8hl"),
@@ -179,11 +202,8 @@ def _run_hier_churn(tier, max_agg):
             "client_updates": rep.n_client_updates}
 
 
-# ---------------------------------------------------------------------------
-# fidelity: hier + full quorum + no churn == flat FedAvg (exact)
-# ---------------------------------------------------------------------------
-
 def _hier_quorum_fidelity():
+    """hier + full quorum + no churn == flat FedAvg (exact)."""
     from benchmarks.fig7_compression_wan import (_init_params,
                                                  _live_deployment)
     n, rounds = 8, 1
@@ -204,28 +224,89 @@ def _hier_quorum_fidelity():
     return err
 
 
-def run(verbose=True, quick=False):
-    tier = TIERS["big"]
-    max_agg = 3 if quick else 5
-    losses = [0.1] if quick else [0.05, 0.15]
+# ---------------------------------------------------------------------------
+# the study: cell dispatch + report assembly
+# ---------------------------------------------------------------------------
 
-    report = {"n_clients": N_CLIENTS, "tier": tier.name,
+def _loss_value(loss):
+    """'clean' -> no fault model; 'zero' -> explicit zero-rate model;
+    a number -> that chunk-loss rate."""
+    if loss == "clean":
+        return None
+    if loss == "zero":
+        return 0.0
+    return float(loss)
+
+
+def _cell(cell):
+    tier = TIERS[TIER]
+    max_agg = cell.params["max_agg"]
+    variant = cell.params.get("variant")
+    if variant == "mpi_abort":
+        return _mpi_abort_model(tier)
+    if variant == "churn_fedbuff":
+        train_s = tier.train_s("geo_distributed")
+        return _run_fedbuff("grpc+s3", tier, max_agg,
+                            availability=_churn_trace(train_s))
+    if variant == "churn_hier":
+        return _run_hier_churn(tier, max_agg)
+    if variant == "hier_fidelity":
+        return {"max_abs_err": _hier_quorum_fidelity()}
+    loss = _loss_value(cell.params["loss"])
+    if variant == "fedbuff":
+        return _run_fedbuff(cell.overrides["channel.backend"], tier,
+                            max_agg, loss=loss)
+    return _run_hier(tier, max_agg, loss=loss)
+
+
+def _name(cell):
+    variant = cell.params.get("variant")
+    if variant == "mpi_abort":
+        return "fig8/mpi_abort"
+    if variant == "churn_fedbuff":
+        return "fig8/churn/fedbuff_s3"
+    if variant == "churn_hier":
+        return "fig8/churn/hier"
+    if variant == "hier_fidelity":
+        return "fig8/hier_full_quorum_vs_flat"
+    loss = cell.params["loss"]
+    if variant == "fedbuff":
+        return (f"fig8/fedbuff/{cell.overrides['channel.backend']}/"
+                f"loss={loss}")
+    return f"fig8/hier/grpc/relay_loss={loss}"
+
+
+_FEDBUFF_KEYS = ("sim_time_s", "n_aggregations", "aggregations_per_hour",
+                 "retransmits", "transfers_failed",
+                 "scheduler_transfer_failures", "departures", "rejoins",
+                 "late_refetches", "discarded", "s3_retries")
+
+
+def _fedbuff_dict(r):
+    return {k: r.get(k) for k in _FEDBUFF_KEYS}
+
+
+def _finalize(results, quick, verbose):
+    losses = _losses(quick)
+    by = {r.cell: r for r in results}
+    report = {"n_clients": N_CLIENTS, "tier": TIER,
               "chunk_mb": CHUNK_MB, "overhead_bound": OVERHEAD_BOUND,
               "cells": {}}
     rows = []
 
     # 1) chunk-loss sweep + zero-loss bit-for-bit equivalence
     for backend_name in ["grpc", "grpc+s3"]:
-        base = _run_fedbuff(backend_name, tier, max_agg, loss=None)
-        zero = _run_fedbuff(backend_name, tier, max_agg, loss=0.0)
-        cell = {"clean": {k: v for k, v in base.items() if k != "trace"},
-                "zero_loss_identical": base["trace"] == zero["trace"]
-                and base["sim_time_s"] == zero["sim_time_s"],
+        base = by[f"fig8/fedbuff/{backend_name}/loss=clean"]
+        zero = by[f"fig8/fedbuff/{backend_name}/loss=zero"]
+        cell = {"clean": _fedbuff_dict(base),
+                "zero_loss_identical":
+                base.metrics["trace"] == zero.metrics["trace"]
+                and base.sim_time_s == zero.sim_time_s,
                 "loss": {}}
         for loss in losses:
-            m = _run_fedbuff(backend_name, tier, max_agg, loss=loss)
-            m.pop("trace")
-            m["overhead_factor"] = m["sim_time_s"] / base["sim_time_s"]
+            r = by[f"fig8/fedbuff/{backend_name}/loss={loss}"]
+            m = _fedbuff_dict(r)
+            m["overhead_factor"] = m["sim_time_s"] / base.sim_time_s
             cell["loss"][str(loss)] = m
             rows.append({"name": f"fig8/fedbuff/{backend_name}/loss={loss}",
                          "round_s": m["sim_time_s"] / max(
@@ -241,28 +322,27 @@ def run(verbose=True, quick=False):
                       f"failed={m['transfers_failed']:.0f}")
         report["cells"][backend_name] = cell
 
-    # 1b) chunk loss on the hier relay WAN edge: the relay -> hub hop is
-    # a real (faultable) backend channel over the topology graph edge
-    hier_base = _run_hier(tier, max_agg, loss=None)
-    hier_zero = _run_hier(tier, max_agg, loss=0.0)
-    hier_loss = _run_hier(tier, max_agg, loss=losses[0])
+    # 1b) chunk loss on the hier relay WAN edge
+    hier_base = by["fig8/hier/grpc/relay_loss=clean"]
+    hier_zero = by["fig8/hier/grpc/relay_loss=zero"]
+    hier_loss = by[f"fig8/hier/grpc/relay_loss={losses[0]}"]
     report["hier_relay_loss"] = {
-        "clean_sim_time_s": hier_base["sim_time_s"],
-        "zero_loss_identical": hier_base["trace"] == hier_zero["trace"]
-        and hier_base["sim_time_s"] == hier_zero["sim_time_s"],
+        "clean_sim_time_s": hier_base.sim_time_s,
+        "zero_loss_identical":
+        hier_base.metrics["trace"] == hier_zero.metrics["trace"]
+        and hier_base.sim_time_s == hier_zero.sim_time_s,
         "loss": losses[0],
-        "sim_time_s": hier_loss["sim_time_s"],
-        "n_aggregations": hier_loss["n_aggregations"],
-        "retransmits": hier_loss["retransmits"],
-        "transfers_failed": hier_loss["transfers_failed"],
-        "overhead_factor": hier_loss["sim_time_s"]
-        / hier_base["sim_time_s"]}
+        "sim_time_s": hier_loss.sim_time_s,
+        "n_aggregations": hier_loss.get("n_aggregations"),
+        "retransmits": hier_loss.retransmits,
+        "transfers_failed": hier_loss.transfers_failed,
+        "overhead_factor": hier_loss.sim_time_s / hier_base.sim_time_s}
     rows.append({"name": f"fig8/hier/grpc/relay_loss={losses[0]}",
-                 "round_s": hier_loss["sim_time_s"] / max(
-                     hier_loss["n_aggregations"], 1),
+                 "round_s": hier_loss.sim_time_s / max(
+                     hier_loss.get("n_aggregations"), 1),
                  "overhead_factor": report["hier_relay_loss"][
                      "overhead_factor"],
-                 "retransmits": hier_loss["retransmits"]})
+                 "retransmits": hier_loss.retransmits})
     if verbose:
         h = report["hier_relay_loss"]
         print(f"[fig8] hier    grpc      loss={h['loss']:<5g} "
@@ -271,7 +351,7 @@ def run(verbose=True, quick=False):
               f"retransmits={h['retransmits']:.0f}")
 
     # 2) MPI abort-recovery model
-    mpi = _mpi_abort_model(tier)
+    mpi = dict(by["fig8/mpi_abort"].metrics)
     report["mpi_abort"] = mpi
     rows.append({"name": "fig8/mpi_abort", "round_s": mpi["clean_round_s"],
                  "abort_factor": mpi["abort_factor"]})
@@ -281,12 +361,10 @@ def run(verbose=True, quick=False):
               f"(x{mpi['abort_factor']:.2f}: ckpt restore + re-run)")
 
     # 3) churn through fedbuff (S3 late-join re-fetch) and hier (quorum)
-    train_s = tier.train_s("geo_distributed")
-    churn = _run_fedbuff("grpc+s3", tier, max_agg,
-                         availability=_churn_trace(train_s))
-    churn.pop("trace")
+    churn = _fedbuff_dict(by["fig8/churn/fedbuff_s3"])
     report["churn_fedbuff"] = churn
-    hier = _run_hier_churn(tier, max_agg)
+    hier = dict(by["fig8/churn/hier"].metrics)
+    hier["sim_time_s"] = by["fig8/churn/hier"].sim_time_s
     report["churn_hier"] = hier
     rows.append({"name": "fig8/churn/fedbuff_s3",
                  "round_s": churn["sim_time_s"] / max(
@@ -308,20 +386,16 @@ def run(verbose=True, quick=False):
               f"{hier['n_aggregations']} aggregations completed")
 
     # 4) hier full-quorum/no-churn fidelity
-    err = _hier_quorum_fidelity()
+    err = by["fig8/hier_full_quorum_vs_flat"].metrics["max_abs_err"]
     report["hier_fidelity_err"] = err
-    rows.append({"name": "fig8/hier_full_quorum_vs_flat", "max_abs_err": err})
+    rows.append({"name": "fig8/hier_full_quorum_vs_flat",
+                 "max_abs_err": err})
     if verbose:
         print(f"[fig8] hier(full quorum, no churn) vs flat FedAvg: "
               f"max|err| = {err:.2e}")
 
     report["validation"] = _validate(report, verbose)
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-    if verbose:
-        print(f"[fig8] JSON report -> {OUT_PATH}")
-    return rows
+    return report, rows
 
 
 def _validate(report, verbose):
@@ -377,6 +451,12 @@ def _validate(report, verbose):
             "hier_rounds_with_skips": hier["rounds_with_skips"]}
 
 
+STUDY = Study(
+    name="fig8", title="Fig 8: fault tolerance under chunk loss & churn",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    out="fig8_faults_wan.json", order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    ENGINE.main(STUDY)

@@ -4,7 +4,7 @@ Marfoq & Neglia's *Throughput-Optimal Topology Design for Cross-Silo FL*
 argues the aggregation topology is a first-class knob next to backend
 choice. The scenario layer makes that claim runnable: each cell of this
 study is literally one ``Scenario`` whose ``TopologySpec`` names a graph
-preset, enumerated over backends:
+preset, enumerated over backends by one declarative Sweep:
 
 * ``star``      — the paper's default hub-and-spoke: synchronous FedAvg
   rounds, every silo's update crosses its own WAN link to the hub.
@@ -27,14 +27,11 @@ Validations (CI gate):
    serialising 14 WAN hops loses to both alternatives (its O(n) critical
    path is the Marfoq et al. argument against plain rings at silo count).
 
-Emits ``benchmarks/out/fig9_topology_wan.json``.
+The engine writes ``benchmarks/out/fig9_topology_wan.json``.
 """
 from __future__ import annotations
 
-import json
-import os
-
-from benchmarks.common import scenario_for
+from benchmarks.common import ENGINE, scenario_for
 from repro.configs.paper_tiers import TIERS
 from repro.core import FLMessage, VirtualPayload
 from repro.fl.async_strategies import HierarchicalStrategy
@@ -42,11 +39,22 @@ from repro.fl.client import FLClient
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
 from repro.scenario import build_runtime
+from repro.sweep import Axis, Study, Sweep
 
+BENCH_ORDER = 80
 N_CLIENTS = 14
-BACKENDS = ["grpc", "grpc+s3"]
-OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
-                        "fig9_topology_wan.json")
+BACKENDS = ("grpc", "grpc+s3")
+TOPOLOGIES = ("star", "multi_hub", "ring")
+TIER = "big"
+
+
+def _sweeps(quick):
+    return (Sweep(name="fig9",
+                  base=scenario_for("star", num_clients=N_CLIENTS,
+                                    name="fig9"),
+                  axes=(Axis("channel.backend", values=BACKENDS),
+                        Axis("topology.kind", values=TOPOLOGIES)),
+                  params={"rounds": 2 if quick else 4}),)
 
 
 def _scenario(topology, backend, mode):
@@ -132,31 +140,35 @@ def _run_ring(backend, tier, rounds):
 RUNNERS = {"star": _run_star, "multi_hub": _run_hier, "ring": _run_ring}
 
 
-def run(verbose=True, quick=False):
-    tier = TIERS["big"]
-    rounds = 2 if quick else 4
-    rows, report = [], {"n_clients": N_CLIENTS, "tier": tier.name,
-                        "cells": {}}
-    for backend in BACKENDS:
-        cell = {}
-        for topo, runner in RUNNERS.items():
-            m = runner(backend, tier, rounds)
-            cell[topo] = m
-            rows.append({"name": f"fig9/{topo}/{backend}",
-                         "round_s": m["round_s"]})
-        report["cells"][backend] = cell
-        if verbose:
+def _cell(cell):
+    topo = cell.scenario.topology.kind
+    backend = cell.scenario.channel.backend
+    return RUNNERS[topo](backend, TIERS[TIER], cell.params["rounds"])
+
+
+def _name(cell):
+    return (f"fig9/{cell.scenario.topology.kind}/"
+            f"{cell.scenario.channel.backend}")
+
+
+def _finalize(results, quick, verbose):
+    report = {"n_clients": N_CLIENTS, "tier": TIER, "cells": {}}
+    rows = []
+    for r in results:
+        _, topo, backend = r.cell.split("/")
+        cell = report["cells"].setdefault(backend, {})
+        cell[topo] = {"scenario": r.metrics["scenario"],
+                      "round_s": r.metrics["round_s"],
+                      "sim_time_s": r.sim_time_s,
+                      "rounds": r.metrics["rounds"]}
+        rows.append({"name": r.cell, "round_s": r.metrics["round_s"]})
+    if verbose:
+        for backend, cell in report["cells"].items():
             parts = "  ".join(f"{t}={cell[t]['round_s']:8.1f}s"
                               for t in RUNNERS)
             print(f"[fig9] {backend:9s}  {parts}")
-
     report["validation"] = _validate(report, verbose)
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
-    if verbose:
-        print(f"[fig9] JSON report -> {OUT_PATH}")
-    return rows
+    return report, rows
 
 
 def _validate(report, verbose):
@@ -183,6 +195,12 @@ def _validate(report, verbose):
             grpc["star"]["round_s"] / grpc["multi_hub"]["round_s"]}
 
 
+STUDY = Study(
+    name="fig9", title="Fig 9: topology as a tuning knob under WAN",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    out="fig9_topology_wan.json", order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    ENGINE.main(STUDY)

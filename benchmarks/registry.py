@@ -1,0 +1,78 @@
+"""Benchmark study registry: discovery instead of a hand-maintained list.
+
+``benchmarks/run.py`` used to keep its own import tuple + module list —
+a new study that forgot to add itself there silently dropped out of
+``--quick``/``--only``. Discovery walks the ``benchmarks`` package
+instead: every module (minus the infrastructure set below) must expose
+either a sweep ``STUDY`` (the engine-driven fig modules) or a legacy
+``run(verbose=...)`` callable; anything else is a loud error, so a study
+can be *added* by creating its file and cannot be silently lost.
+
+Ordering comes from the module's ``BENCH_ORDER`` int (``STUDY.order``
+for sweep studies); modules without one sort last. ``BENCH_IN_QUICK =
+False`` (or ``Study.in_quick``) keeps a module out of the ``--quick``
+CI gate (the JAX-heavy kernel/cross-pod modules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import pkgutil
+from typing import Callable, List
+
+# infrastructure modules that are not studies
+_EXCLUDE = {"run", "common", "registry", "__init__", "__main__"}
+
+
+@dataclasses.dataclass
+class BenchEntry:
+    """One runnable benchmark module."""
+    name: str            # the --only handle (fig2, table1, kernels, ...)
+    module: object
+    run: Callable        # run(verbose=True[, quick=...][, fresh=...])
+    order: int
+    in_quick: bool
+    accepts_quick: bool  # whether run() takes a quick= kwarg
+    accepts_fresh: bool  # whether run() takes a fresh= kwarg (sweep
+    #                      studies: per-study run-store invalidation)
+
+
+def _entry(modname: str) -> BenchEntry:
+    mod = importlib.import_module(f"benchmarks.{modname}")
+    study = getattr(mod, "STUDY", None)
+    run = getattr(mod, "run", None)
+    if run is None:
+        raise RuntimeError(
+            f"benchmarks.{modname} defines neither STUDY nor run(); every "
+            f"module in benchmarks/ must be a runnable study (or be added "
+            f"to registry._EXCLUDE)")
+    if study is not None:
+        return BenchEntry(name=study.name, module=mod, run=run,
+                          order=study.order, in_quick=study.in_quick,
+                          accepts_quick=True, accepts_fresh=True)
+    import inspect
+    name = getattr(mod, "BENCH_NAME", modname.split("_")[0])
+    params = inspect.signature(run).parameters
+    return BenchEntry(
+        name=name, module=mod, run=run,
+        order=getattr(mod, "BENCH_ORDER", 1000),
+        in_quick=getattr(mod, "BENCH_IN_QUICK", True),
+        accepts_quick="quick" in params,
+        accepts_fresh="fresh" in params)
+
+
+def discover() -> List[BenchEntry]:
+    """Every benchmark module in the package, ordered for run.py."""
+    import benchmarks
+    names = sorted(m.name for m in pkgutil.iter_modules(benchmarks.__path__)
+                   if m.name not in _EXCLUDE
+                   and not m.name.startswith("_"))
+    entries = [_entry(n) for n in names]
+    seen: dict = {}
+    for e in entries:
+        if e.name in seen:
+            raise RuntimeError(
+                f"duplicate benchmark name '{e.name}' "
+                f"({seen[e.name].module.__name__} vs {e.module.__name__})")
+        seen[e.name] = e
+    return sorted(entries, key=lambda e: (e.order, e.name))

@@ -1,15 +1,18 @@
 """Benchmark harness entry: one module per paper table/figure + the
-beyond-paper cross-pod and fig6 async studies. Prints a
+beyond-paper cross-pod and fig6-10 studies. Prints a
 ``name,us_per_call,derived`` CSV after the human-readable sections.
 
-``--quick`` (the CI smoke) skips the JAX-heavy kernel/cross-pod modules
-and runs fig6 in its reduced grid; ``--only NAME [NAME...]`` selects
-specific modules.
+Modules are *discovered* through ``benchmarks/registry.py`` — every
+module in the package must be a runnable study (a sweep ``STUDY`` or a
+legacy ``run``), so a new study cannot be silently dropped from
+``--quick``/``--only``. ``--quick`` (the CI smoke) skips the JAX-heavy
+kernel/cross-pod modules and runs the sweep studies in their reduced
+grids; ``--only NAME [NAME...]`` selects specific modules; ``--fresh``
+bypasses the sweep engine's run store and re-runs every cell.
 """
 from __future__ import annotations
 
 import argparse
-import inspect
 import sys
 import traceback
 
@@ -20,50 +23,34 @@ def main(argv=None) -> None:
                     help="netsim-only subset with reduced grids (CI smoke)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="run only these modules by name")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore the sweep run store; re-run every cell")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_kernels, crosspod_sync,
-                            fig2_grpc_concurrency, fig4a_p2p_latency,
-                            fig4b_concurrency_speedup, fig4c_broadcast_memory,
-                            fig5_end_to_end, fig6_async_vs_sync,
-                            fig7_compression_wan, fig8_faults_wan,
-                            fig9_topology_wan, table1_links)
-
-    modules = [
-        ("table1", table1_links),
-        ("fig2", fig2_grpc_concurrency),
-        ("fig4a", fig4a_p2p_latency),
-        ("fig4b", fig4b_concurrency_speedup),
-        ("fig4c", fig4c_broadcast_memory),
-        ("fig5", fig5_end_to_end),
-        ("fig6", fig6_async_vs_sync),
-        ("fig7", fig7_compression_wan),
-        ("fig8", fig8_faults_wan),
-        ("fig9", fig9_topology_wan),
-        ("kernels", bench_kernels),
-        ("crosspod", crosspod_sync),
-    ]
+    from benchmarks.registry import discover
+    entries = discover()
     if args.quick:
-        modules = [(n, m) for n, m in modules
-                   if n not in ("kernels", "crosspod")]
+        entries = [e for e in entries if e.in_quick]
     if args.only:
-        known = {n for n, _ in modules}
+        known = {e.name for e in entries}
         unknown = [n for n in args.only if n not in known]
         if unknown:
             ap.error(f"unknown module(s) {unknown}; choose from "
                      f"{sorted(known)}")
-        modules = [(n, m) for n, m in modules if n in args.only]
+        entries = [e for e in entries if e.name in args.only]
     all_rows = []
     failures = 0
-    for name, mod in modules:
-        kw = {}
-        if args.quick and "quick" in inspect.signature(mod.run).parameters:
-            kw["quick"] = True
+    for e in entries:
+        kw = {"quick": True} if args.quick and e.accepts_quick else {}
+        if args.fresh and e.accepts_fresh:
+            # per-study invalidation: only the *selected* studies re-run;
+            # the other studies' cached cells stay in the run store
+            kw["fresh"] = True
         try:
-            all_rows += mod.run(verbose=True, **kw)
+            all_rows += e.run(verbose=True, **kw)
         except Exception:  # noqa: BLE001
             failures += 1
-            print(f"[bench] {name} FAILED:\n{traceback.format_exc()}",
+            print(f"[bench] {e.name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr)
     print("\nname,us_per_call,derived")
     for r in all_rows:

@@ -3,6 +3,9 @@
 actual simulated transfers, not just constants)."""
 from __future__ import annotations
 
+BENCH_NAME = "table1"
+BENCH_ORDER = 10
+
 from repro.core.netsim import (GEO_REGIONS, MB, Host, Transfer,
                                simulate_transfers)
 

@@ -320,6 +320,9 @@ class CommBackend:
                     self.fabric.stats["retransmits"] += n - 1
             self.fabric.endpoints[msg.receiver].inbox.append(
                 _delivery(msg, enc.wire, finish))
+            # broadcast bypasses Fabric.deliver (the fluid solver already
+            # owns the timing) — keep the wire accounting consistent
+            self.fabric.account(enc.wire.nbytes)
             mem.free(a, finish)
             arrives.append(finish)
         return max(e[1] for e in encs), arrives

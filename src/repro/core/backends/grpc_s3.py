@@ -137,6 +137,10 @@ class GrpcS3Backend(CommBackend):
         wire_nbytes = self.store.size(key)
         dst = self.env.host(msg.receiver)
         get_t = self.store.get_time(wire_nbytes, dst, self.parts)
+        # the GET leg rides the store, not Fabric.deliver (which counted
+        # only the 256 B meta record): account the payload bytes so
+        # bytes_on_wire is comparable across backends and modes
+        self.fabric.account(wire_nbytes, messages=0)
         return SendHandle(msg=msg, issued=now, start=up_done,
                           inbox_t=arrive_meta, arrive=arrive_meta + get_t,
                           nbytes=wire_nbytes)
@@ -178,6 +182,9 @@ class GrpcS3Backend(CommBackend):
                    else self.serializer.deser_time(obj.nbytes))
             self.fabric.endpoints[msg.receiver].inbox.append(
                 _delivery(msg, obj.wire, tr.finish))
+            # as on the direct-backend broadcast path: the store GET
+            # bypasses Fabric.deliver, so count the wire bytes here
+            self.fabric.account(obj.nbytes)
             arrives.append(tr.finish + d_t)
         return up_done, arrives
 

@@ -316,12 +316,18 @@ class LinkFaultModel:
     * ``blackouts`` — per-host outage windows ``{host_id: [(t0, t1)]}``:
       nothing departs on a link while either end is dark; departures are
       shifted to the window's end (models transient WAN partitions).
+    * ``edge_blackouts`` — the per-edge form ``{(src_id, dst_id):
+      [(t0, t1)]}``: only the named directed edge goes dark (one flaky
+      WAN path, not a whole silo). Declared via
+      ``scenario.FaultSpec.blackouts``; with no windows installed the
+      ``delay`` path is untouched (bit-for-bit the per-host-only code).
     """
 
     chunk_loss_rate: float = 0.0
     max_retries: int = 4
     nack_rtts: float = 1.0  # receiver-driven NACK turnaround, in edge RTTs
     blackouts: dict = dataclasses.field(default_factory=dict)
+    edge_blackouts: dict = dataclasses.field(default_factory=dict)
     seed: int = 0
 
     def _uniform(self, src: str, dst: str, transfer_id: int,
@@ -346,8 +352,11 @@ class LinkFaultModel:
         return self.max_retries + 1 if forced else None
 
     def delay(self, host_ids: Sequence[str], t: float) -> float:
-        """Shift a departure time past any blackout window covering it on
-        either end of the link."""
+        """Shift a departure time past any blackout window covering it —
+        per-host windows on either end of the link, plus per-edge windows
+        on the ordered ``(src, dst)`` pair the callers pass."""
+        edge_windows = self.edge_blackouts.get(tuple(host_ids), ()) \
+            if self.edge_blackouts else ()
         moved = True
         while moved:
             moved = False
@@ -356,6 +365,10 @@ class LinkFaultModel:
                     if a <= t < b:
                         t = b
                         moved = True
+            for (a, b) in edge_windows:
+                if a <= t < b:
+                    t = b
+                    moved = True
         return t
 
     def detect_delay(self, edge: Link) -> float:

@@ -171,14 +171,21 @@ class Fabric:
         self.clock = max(self.clock, t)
 
     # -- point-to-point -----------------------------------------------------
+    def account(self, nbytes: float, messages: int = 1) -> None:
+        """Wire accounting for delivery paths that bypass ``deliver``
+        (concurrent broadcasts, the sync server's gather phase, store
+        GET legs): one place owns the stat names, so a new bypassing
+        call site cannot silently invent its own."""
+        self.stats["messages"] += messages
+        self.stats["bytes"] += nbytes
+
     def deliver(self, msg: FLMessage, wire: Optional[WireData],
                 start: float, duration: float):
         """Schedule arrival of a message whose transfer takes ``duration``
         starting at ``start`` (already computed by backend/netsim)."""
         arrive = start + duration
         self.endpoints[msg.receiver].inbox.append(Delivery(msg, wire, arrive))
-        self.stats["messages"] += 1
-        self.stats["bytes"] += wire.nbytes if wire else 0
+        self.account(wire.nbytes if wire else 0)
         return arrive
 
     def deliver_chunked(self, msg: FLMessage, wire: WireData,

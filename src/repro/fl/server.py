@@ -71,6 +71,7 @@ class FLServer:
         use_s3 = name == "grpc+s3" or (
             name == "auto" and sends
             and backend.resolve(sends[0][1]) is backend.s3)
+        fm = backend.fabric.fault_model
         if use_s3:
             s3 = backend if name == "grpc+s3" else backend.s3
             transfers, meta = [], []
@@ -92,9 +93,18 @@ class FLServer:
                 key = s3.store.content_key(
                     (msg.payload.fingerprint(), cb.channel.signature()),
                     msg.round, client.client_id)
-                s3.store.put(key, wire, nbytes, start + ser + put)
+                # BlackoutSpec contract, as on the isend path: the PUT
+                # holds while the client host is dark, the meta record
+                # while its edge to the hub is (no-op with no windows)
+                t_put = start + ser
+                if fm is not None:
+                    t_put = fm.delay((client.client_id,), t_put)
+                t_meta = t_put + put
+                if fm is not None:
+                    t_meta = fm.delay((client.client_id, "server"), t_meta)
+                s3.store.put(key, wire, nbytes, t_put + put)
                 region = cb._link_region("server")
-                meta_arrive = start + ser + put + cb._overhead(region) \
+                meta_arrive = t_meta + cb._overhead(region) \
                     + region.latency
                 dst = s3.env.host("server")
                 tr = s3.store.get_transfer(key, dst, meta_arrive, s3.parts)
@@ -105,6 +115,7 @@ class FLServer:
                 deser = (s3.channel.decode_time(wire) if wire is not None
                          else s3.serializer.deser_time(msg.payload_nbytes))
                 out[client.client_id] = (tr.finish + deser, ser, msg, key)
+                s3.fabric.account(tr.nbytes)
             return out
         # direct backends: concurrent client->server transfers
         transfers, meta = [], []
@@ -112,8 +123,13 @@ class FLServer:
             cb = self._client_backend(client, msg)
             ser = cb.serializer.ser_time(msg.payload_nbytes)
             region = cb._link_region("server")
+            dep = start + ser + cb._overhead(region)
+            if fm is not None:
+                # blackout-shifted departure, as on the isend path
+                # (no-op with no windows installed)
+                dep = fm.delay((client.client_id, "server"), dep)
             transfers.append(Transfer(
-                start=start + ser + cb._overhead(region),
+                start=dep,
                 src=cb.env.host(client.client_id),
                 dst=cb.env.host("server"),
                 nbytes=msg.payload_nbytes,
@@ -127,6 +143,7 @@ class FLServer:
                 sb = sb.resolve(msg)
             deser = sb.serializer.deser_time(msg.payload_nbytes)
             out[client.client_id] = (tr.finish + deser, ser, msg, None)
+            sb.fabric.account(tr.nbytes)
         return out
 
     # ------------------------------------------------------------------

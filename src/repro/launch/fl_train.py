@@ -150,6 +150,19 @@ def _parser() -> argparse.ArgumentParser:
     ap.add_argument("--scenario", default=None,
                     help="scenario JSON (see examples/scenarios/); other "
                          "flags become overrides on the loaded spec")
+    ap.add_argument("--sweep", default=None,
+                    help="sweep JSON (base scenario + axes, see "
+                         "examples/scenarios/sweep_decision_guide.json): "
+                         "run every cell through the generic scenario "
+                         "runner instead of one training run (equivalent "
+                         "to `python -m repro.sweep FILE`)")
+    ap.add_argument("--sweep-fresh", action="store_true",
+                    help="with --sweep: ignore the run store, re-run "
+                         "every cell")
+    ap.add_argument("--sweep-out-dir", default=None,
+                    help="with --sweep: run-store/report root (default: "
+                         "the repo's benchmarks/out when importable, "
+                         "else ./benchmarks/out)")
     ap.add_argument("--backend", default=None, choices=BACKEND_NAMES)
     ap.add_argument("--environment", default=None,
                     choices=list(TOPOLOGY_PRESETS),
@@ -247,6 +260,25 @@ def resolve_scenario(args, ap: argparse.ArgumentParser) -> Scenario:
 def main(argv=None):
     ap = _parser()
     args = ap.parse_args(argv)
+    if args.sweep:
+        # a sweep file is a whole grid of scenarios, not one training
+        # run: expand + execute through the engine's resumable run store
+        from repro.scenario import ScenarioError
+        from repro.sweep.__main__ import run_sweep_file
+        out_dir = args.sweep_out_dir
+        if out_dir is None:
+            try:
+                # anchor on the repo's benchmarks/out (the shared run
+                # store) rather than wherever the user happens to stand
+                from benchmarks.common import OUT_DIR as out_dir
+            except ImportError:
+                out_dir = "benchmarks/out"
+        try:
+            run_sweep_file(args.sweep, out_dir=out_dir,
+                           fresh=args.sweep_fresh)
+        except (ScenarioError, OSError, ValueError) as e:
+            ap.error(str(e))
+        return 0
     sc = resolve_scenario(args, ap)
 
     if sc.channel.backend == "grpc+s3" and sc.topology.kind == "lan":

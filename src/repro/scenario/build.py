@@ -43,11 +43,24 @@ def fault_model_for(scenario: Scenario) -> Optional[LinkFaultModel]:
     """The deterministic fault injector the spec asks for (None when the
     scenario is fault-free — the exact legacy timing path)."""
     f = scenario.faults
-    if f.link_loss <= 0.0:
+    host_bo: Dict[str, list] = {}
+    edge_bo: Dict[tuple, list] = {}
+    for b in f.blackouts:
+        window = (float(b.t0), float(b.t1))
+        if b.dst == "*":
+            # per-host form: every link touching src goes dark — this is
+            # LinkFaultModel's original blackout machinery
+            host_bo.setdefault(b.src, []).append(window)
+        else:
+            edge_bo.setdefault((b.src, b.dst), []).append(window)
+            if b.symmetric:
+                edge_bo.setdefault((b.dst, b.src), []).append(window)
+    if f.link_loss <= 0.0 and not host_bo and not edge_bo:
         return None
     return LinkFaultModel(chunk_loss_rate=f.link_loss,
                           max_retries=f.max_retries,
-                          nack_rtts=f.nack_rtts, seed=scenario.seed)
+                          nack_rtts=f.nack_rtts, seed=scenario.seed,
+                          blackouts=host_bo, edge_blackouts=edge_bo)
 
 
 def build_runtime(scenario: Scenario) -> Runtime:

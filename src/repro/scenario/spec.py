@@ -57,7 +57,17 @@ class EdgeSpec:
     caps the multi-connection saturation at ``max_conns * bw_single``
     (folded into the built edge's ``bw_multi``); ``symmetric`` installs
     the reverse edge too; ``lan_class`` edges resolve IB-vs-TCP per
-    backend policy like the LAN testbed links."""
+    backend policy like the LAN testbed links.
+
+    Asymmetric directed-pair shorthand: real WAN links are rarely
+    symmetric (a silo's uplink is usually thinner than its downlink), and
+    spelling that as two ``symmetric=False`` edges doubles every
+    declaration. Setting any ``rev_*`` field turns the edge into a
+    one-line directed pair — the forward direction carries the main
+    rates, the ``dst -> src`` direction the ``rev_*`` rates, with any
+    unset ``rev_*`` component inheriting its forward value. The pair
+    installs both directions, so combining ``rev_*`` with
+    ``symmetric=False`` is a contradiction and rejected at validation."""
     src: str
     dst: str
     bw_single_mb: float
@@ -66,6 +76,22 @@ class EdgeSpec:
     max_conns: int = 0
     symmetric: bool = True
     lan_class: bool = False
+    # directed-pair shorthand (0 / -1 = "same as forward")
+    rev_bw_single_mb: float = 0.0
+    rev_bw_multi_mb: float = 0.0
+    rev_latency_ms: float = -1.0
+
+    @property
+    def asymmetric(self) -> bool:
+        return (self.rev_bw_single_mb > 0 or self.rev_bw_multi_mb > 0
+                or self.rev_latency_ms >= 0)
+
+    def reverse_rates(self) -> Tuple[float, float, float]:
+        """(bw_single_mb, bw_multi_mb, latency_ms) of the reverse leg."""
+        return (self.rev_bw_single_mb or self.bw_single_mb,
+                self.rev_bw_multi_mb or self.bw_multi_mb,
+                self.rev_latency_ms if self.rev_latency_ms >= 0
+                else self.latency_ms)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +161,22 @@ class TopologySpec:
             if e.latency_ms < 0:
                 raise ScenarioError(
                     f"topology.edges[{i}]: latency_ms must be >= 0")
+            # any touched rev_* field counts as directed-pair intent —
+            # a lone negative bandwidth must error, not silently read
+            # as a symmetric edge
+            rev_touched = (e.rev_bw_single_mb != 0 or e.rev_bw_multi_mb != 0
+                           or e.rev_latency_ms >= 0)
+            if rev_touched:
+                if e.rev_bw_single_mb < 0 or e.rev_bw_multi_mb < 0:
+                    raise ScenarioError(
+                        f"topology.edges[{i}]: rev_* bandwidths must be "
+                        f"positive (0 = same as forward)")
+                if not e.symmetric:
+                    raise ScenarioError(
+                        f"topology.edges[{i}]: the rev_* directed-pair "
+                        f"shorthand installs both directions; it "
+                        f"contradicts symmetric=False (declare two "
+                        f"one-way edges instead)")
 
     def build(self) -> Environment:
         """Materialise the full directed edge map (the explicit graph the
@@ -195,15 +237,27 @@ class TopologySpec:
                         if a is not b:
                             put(a, b, LAN_TCP)
 
+        def edge_region(src, dst, bw_single_mb, bw_multi_mb, latency_ms,
+                        max_conns):
+            bw_multi = bw_multi_mb * MB
+            if max_conns > 0:
+                bw_multi = min(bw_multi, max_conns * bw_single_mb * MB)
+            return Region(f"edge:{src}>{dst}", bw_single_mb * MB,
+                          bw_multi, latency_ms * 1e-3)
+
         for e in self.edges:
-            bw_multi = e.bw_multi_mb * MB
-            if e.max_conns > 0:
-                bw_multi = min(bw_multi, e.max_conns * e.bw_single_mb * MB)
-            region = Region(f"edge:{e.src}>{e.dst}", e.bw_single_mb * MB,
-                            bw_multi, e.latency_ms * 1e-3)
+            region = edge_region(e.src, e.dst, e.bw_single_mb,
+                                 e.bw_multi_mb, e.latency_ms, e.max_conns)
             links[(e.src, e.dst)] = Link(e.src, e.dst, region,
                                          lan_class=e.lan_class)
-            if e.symmetric:
+            if e.asymmetric:
+                # directed-pair shorthand: the reverse leg gets its own
+                # rates (unset components inherit the forward values)
+                rs, rm, rl = e.reverse_rates()
+                rev = edge_region(e.dst, e.src, rs, rm, rl, e.max_conns)
+                links[(e.dst, e.src)] = Link(e.dst, e.src, rev,
+                                             lan_class=e.lan_class)
+            elif e.symmetric:
                 links[(e.dst, e.src)] = Link(e.dst, e.src, region,
                                              lan_class=e.lan_class)
 
@@ -236,6 +290,21 @@ class ChannelSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class BlackoutSpec:
+    """One link outage window: nothing departs on the named edge during
+    ``[t0, t1)``; departures shift to the window's end (a transient WAN
+    partition). ``dst="*"`` darkens every link touching ``src`` (the
+    per-host form — LinkFaultModel's original machinery); a concrete
+    ``dst`` darkens only that edge. ``symmetric`` darkens both
+    directions of the pair (partitions usually do)."""
+    src: str
+    dst: str = "*"
+    t0: float = 0.0
+    t1: float = 0.0
+    symmetric: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """What goes wrong (all deterministic from the scenario seed)."""
     link_loss: float = 0.0       # per-chunk loss on every graph edge
@@ -244,6 +313,7 @@ class FaultSpec:
     store_fail_rate: float = 0.0
     availability_trace: str = ""  # fl/fault.AvailabilityTrace spec
     trace_horizon_s: float = 3600.0
+    blackouts: Tuple[BlackoutSpec, ...] = ()  # per-edge/-host outages
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,6 +369,23 @@ class Scenario:
         if not 0.0 < self.strategy.quorum_fraction <= 1.0:
             raise ScenarioError("strategy.quorum_fraction must be in (0, 1]")
         self.topology.check()  # bad preset/regions/edges, without building
+        hosts = {"server"} | {f"client{i}"
+                              for i in range(self.topology.num_clients)}
+        for i, b in enumerate(self.faults.blackouts):
+            if b.t1 < b.t0 or b.t0 < 0:
+                raise ScenarioError(
+                    f"faults.blackouts[{i}]: need 0 <= t0 <= t1 "
+                    f"(got [{b.t0}, {b.t1}))")
+            for end, name in ((b.src, "src"), (b.dst, "dst")):
+                if end != "*" and end not in hosts:
+                    raise ScenarioError(
+                        f"faults.blackouts[{i}].{name}: '{end}' names no "
+                        f"host in this topology (hosts: server, client0.."
+                        f"client{self.topology.num_clients - 1}, or '*')")
+            if b.src == "*":
+                raise ScenarioError(
+                    f"faults.blackouts[{i}].src must name a host "
+                    f"(use dst='*' for the per-host form)")
         return self
 
     # -- (de)serialisation -------------------------------------------------
@@ -407,6 +494,12 @@ def _from_dict(cls, data, path):
                 raise ScenarioError(f"{path}.edges: expected a list")
             kw[k] = tuple(_from_dict(EdgeSpec, e, f"{path}.edges[{i}]")
                           for i, e in enumerate(v))
+        elif cls is FaultSpec and k == "blackouts":
+            if not isinstance(v, (list, tuple)):
+                raise ScenarioError(f"{path}.blackouts: expected a list")
+            kw[k] = tuple(_from_dict(BlackoutSpec, b,
+                                     f"{path}.blackouts[{i}]")
+                          for i, b in enumerate(v))
         elif isinstance(v, list):
             kw[k] = tuple(v)
         else:

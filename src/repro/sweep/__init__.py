@@ -1,0 +1,14 @@
+"""Declarative experiment engine: a Sweep (base Scenario + axes) expanded
+into fingerprinted cells, executed with a resumable JSONL run store, and
+reduced to reports by Study hooks (see spec.py / engine.py / runners.py;
+the §VII decision-guideline study rides this in
+benchmarks/fig10_decision_guide.py)."""
+from repro.sweep.engine import (Engine, RunStore, Study, StudyRunStats,
+                                fingerprint)
+from repro.sweep.result import CellResult
+from repro.sweep.runners import make_clients, run_scenario, wire_stats
+from repro.sweep.spec import Axis, Cell, Sweep, SweepError
+
+__all__ = ["Axis", "Sweep", "Cell", "SweepError", "CellResult",
+           "Engine", "RunStore", "Study", "StudyRunStats", "fingerprint",
+           "run_scenario", "make_clients", "wire_stats"]

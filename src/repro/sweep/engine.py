@@ -1,0 +1,190 @@
+"""The sweep engine: expand axes, dedupe by spec fingerprint, run, store.
+
+One ``Engine`` owns an output directory (``benchmarks/out`` for the
+paper studies). ``run_study`` expands every ``Sweep`` a study declares,
+fingerprints each cell (sha256 over the canonical JSON of
+``(study, version, scenario, params)``), replays completed cells from
+the study's JSONL run store (``<out>/runstore/<study>.jsonl``) and runs
+only the missing ones — so an interrupted grid resumes where it stopped
+and a re-run of an unchanged study touches zero cells. Results come back
+as the unified ``CellResult`` records; the study's ``finalize`` hook
+reduces them to its legacy JSON report + CSV rows (and runs its
+assertions), and the engine — not the study — writes the report file.
+
+A ``Study`` is what a refactored ``benchmarks/fig*.py`` module declares
+instead of hand-rolled grid loops: sweeps (quick-aware), a per-cell
+measurement, a cell namer, and the finalize/validate hook.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.sweep.result import CellResult
+from repro.sweep.spec import Cell, Sweep
+
+
+def fingerprint(study: str, version: int, cell: Cell) -> str:
+    """Content address of one cell: the study identity + the *complete*
+    cell spec (frozen scenario + params). Bumping ``Study.version``
+    invalidates every cached cell of that study."""
+    blob = json.dumps(
+        {"study": study, "version": version,
+         "scenario": cell.scenario.to_dict(), "params": cell.params},
+        sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+class RunStore:
+    """Append-only JSONL store of completed cells, keyed by fingerprint.
+
+    One line per CellResult; loading tolerates a truncated final line
+    (an interrupted run resumes from the last complete record)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._index: Dict[str, CellResult] = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = CellResult.from_dict(json.loads(line))
+                    except (ValueError, TypeError, KeyError):
+                        continue  # truncated / stale-schema line
+                    self._index[rec.fingerprint] = rec
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def get(self, fp: str) -> Optional[CellResult]:
+        return self._index.get(fp)
+
+    def put(self, result: CellResult) -> None:
+        os.makedirs(os.path.dirname(self.path), exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(result.to_dict(),
+                               separators=(",", ":")) + "\n")
+        self._index[result.fingerprint] = result
+
+
+def _default_finalize(results, quick, verbose):
+    return None, [r.row() for r in results]
+
+
+@dataclasses.dataclass
+class Study:
+    """One registered benchmark study: sweeps + cell runner + reducer."""
+    name: str
+    sweeps: Callable[[bool], Tuple[Sweep, ...]]  # quick -> sweeps
+    cell: Callable[[Cell], Dict[str, Any]]       # one cell -> metrics
+    cell_name: Optional[Callable[[Cell], str]] = None
+    # (results, quick, verbose) -> (report dict | None, CSV rows);
+    # runs the study's assertions
+    finalize: Callable[..., Tuple[Optional[dict], List[dict]]] = \
+        _default_finalize
+    out: Optional[str] = None  # report JSON filename under the out dir
+    title: str = ""
+    version: int = 1           # bump to invalidate cached cells
+    order: int = 100           # benchmarks/run.py ordering
+    in_quick: bool = True      # part of the --quick CI gate
+
+    def name_of(self, cell: Cell) -> str:
+        if self.cell_name is not None:
+            return self.cell_name(cell)
+        return f"{self.name}/{cell.label()}"
+
+
+@dataclasses.dataclass
+class StudyRunStats:
+    n_cells: int = 0
+    n_cached: int = 0
+    n_ran: int = 0
+
+
+class Engine:
+    """Executes studies (and ad-hoc sweeps) against one output dir."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.last_stats: Optional[StudyRunStats] = None
+
+    # ------------------------------------------------------------------
+    def store_path(self, study_name: str) -> str:
+        return os.path.join(self.out_dir, "runstore", f"{study_name}.jsonl")
+
+    def run_cells(self, study: Study, cells: List[Cell], *,
+                  fresh: bool = False, verbose: bool = True,
+                  ) -> List[CellResult]:
+        """The dedupe/cache/execute core. Duplicate fingerprints inside
+        one expansion run once; completed cells replay from the store."""
+        store = RunStore(self.store_path(study.name))
+        stats = StudyRunStats(n_cells=len(cells))
+        results: List[CellResult] = []
+        seen_this_run: Dict[str, CellResult] = {}
+        for cell in cells:
+            fp = fingerprint(study.name, study.version, cell)
+            rec = seen_this_run.get(fp)
+            if rec is None and not fresh:
+                rec = store.get(fp)
+                if rec is not None:
+                    stats.n_cached += 1
+            if rec is None:
+                metrics = study.cell(cell)
+                rec = CellResult.from_metrics(
+                    study.name, study.name_of(cell), fp,
+                    cell.overrides, cell.params, metrics)
+                store.put(rec)
+                stats.n_ran += 1
+            seen_this_run[fp] = rec
+            results.append(rec)
+        self.last_stats = stats
+        if verbose:
+            print(f"[{study.name}] {stats.n_cells} cells: {stats.n_ran} "
+                  f"run, {stats.n_cached} cached "
+                  f"(store: {os.path.relpath(store.path)})")
+        return results
+
+    def run_study(self, study: Study, *, quick: bool = False,
+                  verbose: bool = True, fresh: bool = False) -> List[dict]:
+        """Expand -> run/replay -> finalize -> write the report JSON.
+        Returns the CSV rows benchmarks/run.py prints."""
+        cells = [c for sw in study.sweeps(quick) for c in sw.expand()]
+        results = self.run_cells(study, cells, fresh=fresh, verbose=verbose)
+        report, rows = study.finalize(results, quick, verbose)
+        if report is not None and study.out:
+            path = os.path.join(self.out_dir, study.out)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(report, f, indent=2)
+            if verbose:
+                print(f"[{study.name}] JSON report -> {path}")
+        return rows
+
+    # ------------------------------------------------------------------
+    def runner(self, study: Study) -> Callable[..., List[dict]]:
+        """The legacy ``run(verbose=True, quick=False)`` module surface
+        (+ ``fresh=`` so run.py --fresh invalidates per study, not by
+        deleting the whole run store)."""
+        def run(verbose: bool = True, quick: bool = False,
+                fresh: bool = False) -> List[dict]:
+            return self.run_study(study, quick=quick, verbose=verbose,
+                                  fresh=fresh)
+        run.__doc__ = study.title or study.name
+        return run
+
+    def main(self, study: Study, argv=None) -> None:
+        """``python -m benchmarks.figX [--quick] [--fresh]``."""
+        ap = argparse.ArgumentParser(description=study.title or study.name)
+        ap.add_argument("--quick", action="store_true",
+                        help="reduced grid (the CI smoke)")
+        ap.add_argument("--fresh", action="store_true",
+                        help="ignore the run store; re-run every cell")
+        args = ap.parse_args(argv)
+        self.run_study(study, quick=args.quick, fresh=args.fresh)

@@ -1,0 +1,120 @@
+"""Generic cell runner: one Scenario -> unified metrics, via build_runtime.
+
+The studies under ``benchmarks/`` measure figure-specific quantities and
+keep their own ``run_cell``; this module is the *generic* measurement the
+sweep CLI (``fl_train --sweep`` / ``python -m repro.sweep``) applies to
+every cell: build the scenario's runtime, run its strategy mode end to
+end with tier-calibrated simulated training and tier-sized virtual
+payloads, and report the unified CellResult block — simulated time,
+bytes on the wire, per-stage/state charges, retransmits, round records.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.configs.paper_tiers import TIERS
+from repro.core.message import VirtualPayload
+from repro.fl.client import FLClient
+from repro.fl.scheduler import FLScheduler
+from repro.fl.server import FLServer
+from repro.scenario import Runtime, Scenario, build_runtime
+
+
+def wire_stats(fabric, store=None) -> Dict[str, float]:
+    """The fabric's wire-level accounting in CellResult's field names."""
+    out = {"bytes_on_wire": float(fabric.stats["bytes"]),
+           "retransmits": float(fabric.stats["retransmits"]),
+           "transfers_failed": float(fabric.stats["transfers_failed"])}
+    if store is not None:
+        out["s3_retries"] = float(store.stats["retries"])
+    return out
+
+
+def make_clients(rt: Runtime, *, train_s: Optional[float] = None,
+                 compression: Optional[str] = None):
+    """Tier-calibrated simulated clients over the runtime's backends."""
+    tier = TIERS[rt.scenario.fleet.tier]
+    if train_s is None:
+        train_s = tier.train_s(rt.scenario.topology.kind)
+    return [FLClient(h.host_id, rt.make_backend(h.host_id,
+                                                compression=compression),
+                     sim_train_s=train_s)
+            for h in rt.env.clients]
+
+
+def run_scenario(scenario: Scenario, *,
+                 rounds: Optional[int] = None) -> Dict[str, Any]:
+    """Run one cell's scenario end to end.
+
+    ``strategy.mode`` picks the loop: ``sync`` runs lockstep
+    ``FLServer.run_round`` rounds; the event-driven modes run the
+    scheduler under ``make_strategy`` with ``rounds`` aggregations."""
+    scenario.validate()
+    rt = build_runtime(scenario)
+    tier = TIERS[scenario.fleet.tier]
+    rounds = scenario.strategy.rounds if rounds is None else rounds
+    mode = scenario.strategy.mode
+
+    if mode == "sync":
+        clients = make_clients(rt)
+        server = FLServer(rt.make_backend("server", compression="none"),
+                          clients,
+                          quorum_fraction=scenario.strategy.quorum_fraction,
+                          round_deadline_s=scenario.strategy.round_deadline_s,
+                          local_steps=scenario.fleet.local_steps,
+                          live=False)
+        reports = []
+        for r in range(rounds):
+            rep = server.run_round(VirtualPayload(tier.payload_bytes,
+                                                  tag=f"sweep-r{r}"))
+            reports.append({"round": rep.round,
+                            "round_time": rep.round_time,
+                            "server": rep.server, "clients": rep.clients,
+                            "n_participants": rep.n_participants,
+                            "aborted": rep.aborted})
+        charges: Dict[str, float] = {}
+        for rep in reports:
+            for side, states in (("server", rep["server"]),
+                                 ("client", rep["clients"])):
+                for k, v in states.items():
+                    charges[f"{side}.{k}"] = charges.get(f"{side}.{k}", 0.0) \
+                        + float(v)
+        return {"sim_time_s": server.now, "n_rounds": rounds,
+                "round_s": server.now / max(rounds, 1),
+                "stage_charges": charges, "round_reports": reports,
+                **wire_stats(rt.fabric, rt.store)}
+
+    from repro.fl import make_strategy
+    from repro.fl.fault import make_availability
+    # the payload codec rides the client update path for the buffered
+    # modes; hier compresses its relay WAN hop inside the strategy
+    client_comp = (scenario.channel.compression
+                   if mode in ("fedbuff", "semisync") else "none")
+    clients = make_clients(rt, compression=client_comp)
+    strategy = make_strategy(scenario.fl_config(),
+                             scenario.topology.num_clients)
+    availability = make_availability(
+        scenario.faults.availability_trace,
+        [c.client_id for c in clients],
+        horizon_s=scenario.faults.trace_horizon_s, seed=scenario.seed)
+    sched = FLScheduler(rt.make_backend("server", compression="none"),
+                        clients, strategy,
+                        local_steps=scenario.fleet.local_steps,
+                        availability=availability)
+    rep = sched.run(VirtualPayload(tier.payload_bytes, tag="sweep"),
+                    max_aggregations=rounds)
+    reports = [{"version": e.version, "time": e.time,
+                "n_updates": e.n_updates,
+                "mean_staleness": e.mean_staleness}
+               for e in sched.agg_log]
+    return {"sim_time_s": rep.sim_time, "n_rounds": rep.n_aggregations,
+            "round_s": rep.sim_time / max(rep.n_aggregations, 1),
+            "aggregations_per_hour": rep.aggregations_per_hour,
+            "updates_per_hour": rep.client_updates_per_hour,
+            "n_client_updates": rep.n_client_updates,
+            "mean_staleness": rep.mean_staleness,
+            "n_departures": rep.n_departures,
+            "n_rejoins": rep.n_rejoins,
+            "n_discarded": rep.n_discarded,
+            "round_reports": reports,
+            **wire_stats(rt.fabric, rt.store)}

@@ -1,0 +1,239 @@
+"""Sweep spec: a base Scenario plus axes over its dotted fields.
+
+The paper's deliverable is not any single figure but §VII's *decision
+guidelines* — which backend/topology/compression to pick for a given FL
+task and network. Answering that takes systematic sweeps, and before this
+layer every ``benchmarks/fig*.py`` hand-rolled its own nested grid loop.
+A ``Sweep`` is the declarative replacement:
+
+* ``Axis``  — one swept dimension. ``field`` is a dotted ``Scenario``
+  path (``channel.backend``, ``faults.link_loss``, ``fleet.tier``) or a
+  study parameter (``params.channels``) that does not live in the spec.
+  Discrete axes list ``values``; continuous axes give ``lo``/``hi`` (+
+  ``steps`` for a grid linspace).
+* ``Sweep`` — base scenario + axes. With ``samples == 0`` the axes cross
+  into a full grid (declaration order = nesting order, so cell order is
+  reproducible); with ``samples > 0`` each cell draws one value per axis
+  from a stream seeded by ``(seed, cell index, axis field)`` — seeded
+  random search, deterministic and independent of axis evaluation order.
+
+``Sweep.to_dict`` / ``from_dict`` round-trip exactly (including through
+JSON), with unknown keys rejected on a readable path, so a sweep file is
+as declarative as a scenario file (``fl_train --sweep file.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+from typing import Any, Dict, List, Tuple
+
+from repro.scenario import Scenario, ScenarioError, with_overrides
+
+PARAM_PREFIX = "params."
+
+
+class SweepError(ScenarioError):
+    """Invalid sweep spec — the message carries the offending path."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One swept dimension: discrete ``values`` or a ``lo``/``hi`` range."""
+    field: str
+    values: Tuple[Any, ...] = ()
+    lo: float = 0.0
+    hi: float = 0.0
+    steps: int = 0  # grid mode: linspace(lo, hi, steps) for a range axis
+
+    @property
+    def is_range(self) -> bool:
+        return not self.values
+
+    def check(self, path: str) -> None:
+        if not self.field:
+            raise SweepError(f"{path}: axis field must be non-empty")
+        if not self.field.startswith(PARAM_PREFIX):
+            _check_scenario_path(self.field, path)
+        if self.values:
+            if any(v is None for v in self.values):
+                raise SweepError(f"{path}: axis values must not be None "
+                                 f"(None means 'unset' in overrides)")
+            if self.lo or self.hi or self.steps:
+                raise SweepError(f"{path}: give either values or a "
+                                 f"lo/hi range, not both")
+            return
+        if not self.hi > self.lo:
+            raise SweepError(f"{path}: range axis needs hi > lo "
+                             f"(got lo={self.lo}, hi={self.hi})")
+
+    def grid_values(self, path: str) -> Tuple[Any, ...]:
+        if self.values:
+            return self.values
+        if self.steps < 2:
+            raise SweepError(
+                f"{path}: a range axis in a grid sweep needs steps >= 2 "
+                f"(or set samples > 0 for random search)")
+        span = self.hi - self.lo
+        return tuple(self.lo + span * i / (self.steps - 1)
+                     for i in range(self.steps))
+
+    def draw(self, rng: random.Random) -> Any:
+        if self.values:
+            return self.values[rng.randrange(len(self.values))]
+        return rng.uniform(self.lo, self.hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One concrete point of an expanded sweep: a frozen scenario plus
+    the non-scenario study parameters that complete its identity."""
+    index: int
+    scenario: Scenario
+    overrides: Dict[str, Any]  # dotted scenario field -> value
+    params: Dict[str, Any]     # params.* axis values + sweep constants
+
+    def label(self) -> str:
+        parts = [f"{k.split('.')[-1]}={v}" for k, v in
+                 list(self.overrides.items()) + list(self.params.items())]
+        return ",".join(parts) or f"cell{self.index}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Sweep:
+    """A base scenario + axes; grid (samples == 0) or seeded random
+    search (samples > 0). ``params`` are constants merged into every
+    cell's ``params`` dict (study knobs that are not swept)."""
+    name: str = "sweep"
+    base: Scenario = Scenario()
+    axes: Tuple[Axis, ...] = ()
+    samples: int = 0
+    seed: int = 0
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def check(self) -> None:
+        seen = set()
+        for i, ax in enumerate(self.axes):
+            path = f"sweep.axes[{i}]"
+            ax.check(path)
+            if ax.field in seen:
+                raise SweepError(f"{path}: duplicate axis field "
+                                 f"'{ax.field}'")
+            seen.add(ax.field)
+        if self.samples < 0:
+            raise SweepError("sweep.samples must be >= 0")
+
+    # -- expansion ---------------------------------------------------------
+    def expand(self) -> List[Cell]:
+        """Axes -> concrete cells. Grid: cross-product in declaration
+        order. Random: ``samples`` cells, each axis drawn from its own
+        ``(seed, index, field)``-seeded stream."""
+        self.check()
+        if self.samples > 0:
+            assignments = [
+                [(ax.field,
+                  ax.draw(random.Random(f"{self.seed}:{i}:{ax.field}")))
+                 for ax in self.axes]
+                for i in range(self.samples)]
+        else:
+            assignments = [[]]
+            for ax in self.axes:
+                vals = ax.grid_values(f"sweep.axes[{ax.field}]")
+                assignments = [a + [(ax.field, v)]
+                               for a in assignments for v in vals]
+        cells = []
+        for i, assign in enumerate(assignments):
+            overrides = {f: v for f, v in assign
+                         if not f.startswith(PARAM_PREFIX)}
+            params = dict(self.params)
+            params.update({f[len(PARAM_PREFIX):]: v for f, v in assign
+                           if f.startswith(PARAM_PREFIX)})
+            sc = with_overrides(self.base, overrides) if overrides \
+                else self.base
+            cells.append(Cell(index=i, scenario=sc, overrides=overrides,
+                              params=params))
+        return cells
+
+    # -- (de)serialisation -------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["base"] = self.base.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "Sweep":
+        if not isinstance(data, dict):
+            raise SweepError(
+                f"sweep: expected an object, got {type(data).__name__}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - fields)
+        if unknown:
+            raise SweepError(f"sweep: unknown key(s) {unknown}; valid "
+                             f"keys: {sorted(fields)}")
+        kw: dict = {}
+        for k, v in data.items():
+            if k == "base":
+                kw[k] = Scenario.from_dict(v)
+            elif k == "axes":
+                if not isinstance(v, (list, tuple)):
+                    raise SweepError("sweep.axes: expected a list")
+                kw[k] = tuple(_axis_from_dict(a, f"sweep.axes[{i}]")
+                              for i, a in enumerate(v))
+            elif k == "params":
+                if not isinstance(v, dict):
+                    raise SweepError("sweep.params: expected an object")
+                kw[k] = dict(v)
+            else:
+                kw[k] = v
+        try:
+            sweep = cls(**kw)
+        except TypeError as e:
+            raise SweepError(f"sweep: {e}") from None
+        sweep.check()
+        return sweep
+
+    def to_json(self, **kwargs) -> str:
+        kwargs.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kwargs)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Sweep":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path: str) -> "Sweep":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+def _axis_from_dict(data: dict, path: str) -> Axis:
+    if not isinstance(data, dict):
+        raise SweepError(f"{path}: expected an object")
+    fields = {f.name for f in dataclasses.fields(Axis)}
+    unknown = sorted(set(data) - fields)
+    if unknown:
+        raise SweepError(f"{path}: unknown key(s) {unknown}; valid keys: "
+                         f"{sorted(fields)}")
+    kw = {k: (tuple(v) if isinstance(v, list) else v)
+          for k, v in data.items()}
+    try:
+        return Axis(**kw)
+    except TypeError as e:
+        raise SweepError(f"{path}: {e}") from None
+
+
+def _check_scenario_path(field: str, path: str) -> None:
+    """A dotted axis field must name a real Scenario field (typos fail at
+    declaration, not mid-run)."""
+    node: Any = Scenario()
+    parts = field.split(".")
+    for i, part in enumerate(parts):
+        if not dataclasses.is_dataclass(node):
+            raise SweepError(f"{path}: '{field}' descends past the leaf "
+                             f"field '{parts[i - 1]}'")
+        if not any(f.name == part for f in dataclasses.fields(node)):
+            raise SweepError(
+                f"{path}: '{field}' is not a Scenario field (no "
+                f"'{part}' on {type(node).__name__}; use the 'params.' "
+                f"prefix for study parameters)")
+        node = getattr(node, part)

@@ -136,6 +136,115 @@ def test_link_fault_model_blackout_delays_departures():
 
 
 # ---------------------------------------------------------------------------
+# per-edge blackout windows (FaultSpec.blackouts -> edge_blackouts)
+# ---------------------------------------------------------------------------
+
+def test_edge_blackout_is_directional_and_cascades_with_host_windows():
+    fm = LinkFaultModel(blackouts={"sv": [(19.0, 25.0)]},
+                        edge_blackouts={("sv", "hk"): [(10.0, 20.0)]})
+    # only the named directed edge is dark
+    assert fm.delay(("sv", "hk"), 12.0) == 25.0  # 12 -> 20 (edge) -> 25
+    assert fm.delay(("hk", "sv"), 12.0) == 12.0  # reverse edge unaffected
+    assert fm.delay(("sv", "other"), 12.0) == 12.0
+
+
+def test_fault_spec_blackouts_reach_the_fault_model():
+    from repro.scenario import BlackoutSpec, FaultSpec, Scenario, \
+        build_runtime
+    rt = build_runtime(Scenario(name="bo", faults=FaultSpec(blackouts=(
+        BlackoutSpec("server", "client0", 10.0, 20.0),
+        BlackoutSpec("client1", "*", 5.0, 6.0),
+        BlackoutSpec("server", "client2", 1.0, 2.0, symmetric=False)))))
+    fm = rt.fabric.fault_model
+    assert fm is not None and fm.chunk_loss_rate == 0.0
+    assert fm.delay(("server", "client0"), 12.0) == 20.0
+    assert fm.delay(("client0", "server"), 12.0) == 20.0  # symmetric pair
+    assert fm.delay(("client1", "server"), 5.5) == 6.0    # per-host form
+    assert fm.delay(("server", "client2"), 1.5) == 2.0
+    assert fm.delay(("client2", "server"), 1.5) == 1.5    # one-way
+
+
+def test_edge_blackout_shifts_a_real_send_past_the_window():
+    from repro.scenario import BlackoutSpec, ChannelSpec, FaultSpec, \
+        Scenario, build_runtime
+    clean = build_runtime(Scenario(name="c",
+                                   channel=ChannelSpec(backend="grpc")))
+    dark = build_runtime(Scenario(
+        name="d", channel=ChannelSpec(backend="grpc"),
+        faults=FaultSpec(blackouts=(
+            BlackoutSpec("server", "client0", 0.0, 50.0),))))
+    msg = FLMessage("m", "server", "client0",
+                    payload=VirtualPayload(4 * MB, tag="x"))
+    import dataclasses
+    t_clean = clean.make_backend("server").isend(msg, 0.0).arrive
+    t_dark = dark.make_backend("server").isend(
+        dataclasses.replace(msg), 0.0).arrive
+    # the departure (post-serialization) shifts past the window; the
+    # remaining wire time is what a clean send pays after its encode
+    assert t_clean < 50.0 < t_dark < 50.0 + t_clean
+
+
+def test_sync_round_honours_client_to_server_blackout():
+    """The sync server's gather phase must hold client uploads while
+    their edge to the hub is dark (it used to bypass the fault model)."""
+    from repro.fl.client import FLClient
+    from repro.fl.server import FLServer
+    from repro.scenario import BlackoutSpec, ChannelSpec, FaultSpec, \
+        Scenario, TopologySpec, build_runtime
+
+    def round_time(backend, faults):
+        rt = build_runtime(Scenario(
+            name="sbo", channel=ChannelSpec(backend=backend),
+            topology=TopologySpec(num_clients=3), faults=faults))
+        clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                            sim_train_s=10.0) for h in rt.env.clients]
+        server = FLServer(rt.make_backend("server"), clients,
+                          local_steps=1, live=False)
+        return server.run_round(VirtualPayload(8 * MB, tag="r")).round_time
+
+    dark = FaultSpec(blackouts=(
+        BlackoutSpec("client0", "server", 0.0, 500.0, symmetric=False),))
+    for backend in ("grpc", "grpc+s3"):
+        clean_t = round_time(backend, FaultSpec())
+        dark_t = round_time(backend, dark)
+        assert clean_t < 500.0 < dark_t, \
+            f"{backend}: upload blackout ignored ({dark_t} vs {clean_t})"
+        # zero-width windows stay bit-for-bit no-ops on the sync path too
+        noop = FaultSpec(blackouts=(
+            BlackoutSpec("client0", "server", 10.0, 10.0),))
+        assert round_time(backend, noop) == clean_t
+
+
+def test_zero_width_blackout_window_is_bit_for_bit_noop():
+    """A FaultSpec whose only content is a zero-width window installs a
+    fault model, but every trace and timestamp must equal the fault-free
+    run exactly (the regression the ISSUE demands)."""
+    from repro.configs.paper_tiers import TIERS
+    from repro.fl.client import FLClient
+    from repro.scenario import BlackoutSpec, FaultSpec, Scenario, \
+        TopologySpec, build_runtime
+
+    def trace(faults):
+        rt = build_runtime(Scenario(
+            name="z", topology=TopologySpec(num_clients=6),
+            faults=faults))
+        clients = [FLClient(h.host_id, rt.make_backend(h.host_id),
+                            sim_train_s=30.0) for h in rt.env.clients]
+        sched = FLScheduler(rt.make_backend("server"), clients,
+                            FedBuffStrategy(buffer_k=3,
+                                            staleness_exponent=0.5),
+                            local_steps=1)
+        rep = sched.run(VirtualPayload(32 * MB, tag="t"),
+                        max_aggregations=4)
+        return tuple(sched.loop.trace), rep.sim_time
+
+    clean = trace(FaultSpec())
+    zero = trace(FaultSpec(blackouts=(
+        BlackoutSpec("server", "client0", 10.0, 10.0),)))
+    assert clean == zero
+
+
+# ---------------------------------------------------------------------------
 # chunk retransmit over a real backend
 # ---------------------------------------------------------------------------
 

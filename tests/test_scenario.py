@@ -263,6 +263,64 @@ def test_edge_spec_overrides_preset_link_and_caps_conns():
     assert env.link("client1", "server").region.name == "oregon"
 
 
+def test_asymmetric_edge_shorthand_roundtrip():
+    s = Scenario(name="asym", topology=TopologySpec(
+        num_clients=2, edges=(
+            EdgeSpec("client0", "server", 100, 1000, 10,
+                     rev_bw_single_mb=5, rev_bw_multi_mb=50,
+                     rev_latency_ms=80),)))
+    assert Scenario.from_dict(json.loads(json.dumps(s.to_dict()))) == s
+
+
+def test_asymmetric_edge_builds_directed_pair():
+    env = TopologySpec(num_clients=2, edges=(
+        EdgeSpec("client0", "server", 100, 1000, 10,
+                 rev_bw_single_mb=5, rev_latency_ms=80),)).build()
+    fwd = env.link("client0", "server")
+    rev = env.link("server", "client0")
+    assert fwd.region.bw_single == 100 * 1024 ** 2
+    assert fwd.region.latency == pytest.approx(10e-3)
+    assert rev.region.bw_single == 5 * 1024 ** 2
+    assert rev.region.latency == pytest.approx(80e-3)
+    # unset rev components inherit the forward values
+    assert rev.region.bw_multi == fwd.region.bw_multi
+
+
+def test_asymmetric_edge_rejects_symmetric_false():
+    spec = TopologySpec(num_clients=2, edges=(
+        EdgeSpec("client0", "server", 100, 1000, 10, symmetric=False,
+                 rev_bw_single_mb=5),))
+    with pytest.raises(ScenarioError, match="directed-pair"):
+        spec.check()
+
+
+def test_asymmetric_edge_rejects_lone_negative_rev_bandwidth():
+    """A typo'd negative rev_* must error, not silently fall back to a
+    symmetric edge (asymmetric-intent detection uses != 0, not > 0)."""
+    spec = TopologySpec(num_clients=2, edges=(
+        EdgeSpec("client0", "server", 100, 1000, 10,
+                 rev_bw_single_mb=-5),))
+    with pytest.raises(ScenarioError, match="rev_.*positive"):
+        spec.check()
+
+
+def test_backend_consumes_asymmetric_edge():
+    """The declared thin uplink must actually slow sends one way only."""
+    rt = build_runtime(Scenario(
+        name="asym", channel=ChannelSpec(backend="grpc"),
+        topology=TopologySpec(num_clients=2, edges=(
+            EdgeSpec("client0", "server", bw_single_mb=200,
+                     bw_multi_mb=2000, latency_ms=5,
+                     rev_bw_single_mb=2, rev_bw_multi_mb=20),))))
+    msg_up = FLMessage("m", "client0", "server",
+                       payload=VirtualPayload(16 << 20, tag="u"))
+    msg_dn = FLMessage("m", "server", "client0",
+                       payload=VirtualPayload(16 << 20, tag="d"))
+    t_up = rt.make_backend("client0").isend(msg_up, 0.0).arrive
+    t_dn = rt.make_backend("server").isend(msg_dn, 0.0).arrive
+    assert t_dn > 10 * t_up  # the reverse leg is ~100x thinner
+
+
 def test_backend_consumes_custom_edge():
     """A declared slow edge must actually slow that backend's sends."""
     fast = build_runtime(Scenario(name="fast"))
