@@ -35,6 +35,8 @@ class BenchEntry:
     accepts_quick: bool  # whether run() takes a quick= kwarg
     accepts_fresh: bool  # whether run() takes a fresh= kwarg (sweep
     #                      studies: per-study run-store invalidation)
+    accepts_workers: bool = False  # whether run() takes workers= (sweep
+    #                      studies: parallel cell execution)
 
 
 def _entry(modname: str) -> BenchEntry:
@@ -49,7 +51,8 @@ def _entry(modname: str) -> BenchEntry:
     if study is not None:
         return BenchEntry(name=study.name, module=mod, run=run,
                           order=study.order, in_quick=study.in_quick,
-                          accepts_quick=True, accepts_fresh=True)
+                          accepts_quick=True, accepts_fresh=True,
+                          accepts_workers=True)
     import inspect
     name = getattr(mod, "BENCH_NAME", modname.split("_")[0])
     params = inspect.signature(run).parameters
@@ -58,7 +61,8 @@ def _entry(modname: str) -> BenchEntry:
         order=getattr(mod, "BENCH_ORDER", 1000),
         in_quick=getattr(mod, "BENCH_IN_QUICK", True),
         accepts_quick="quick" in params,
-        accepts_fresh="fresh" in params)
+        accepts_fresh="fresh" in params,
+        accepts_workers="workers" in params)
 
 
 def discover() -> List[BenchEntry]:

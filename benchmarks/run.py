@@ -25,6 +25,9 @@ def main(argv=None) -> None:
                     help="run only these modules by name")
     ap.add_argument("--fresh", action="store_true",
                     help="ignore the sweep run store; re-run every cell")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="run missing sweep cells on N worker processes "
+                         "(bit-identical results and run store vs serial)")
     args = ap.parse_args(argv)
 
     from benchmarks.registry import discover
@@ -46,6 +49,8 @@ def main(argv=None) -> None:
             # per-study invalidation: only the *selected* studies re-run;
             # the other studies' cached cells stay in the run store
             kw["fresh"] = True
+        if args.workers and e.accepts_workers:
+            kw["workers"] = args.workers
         try:
             all_rows += e.run(verbose=True, **kw)
         except Exception:  # noqa: BLE001

@@ -28,12 +28,27 @@ def qsgd_compress(tree, state: Optional[QuantState] = None, *,
                   block: int = 256, interpret=None):
     """-> (packed dict, new_state, unflatten). Wire payload = packed."""
     flat, unflatten = ops.flatten_pytree(tree)
-    if state is not None:
-        flat = flat + state.error
-    packed = ops.quantize_flat(flat, block=block, interpret=interpret)
-    recon = ops.dequantize_flat(packed, interpret=interpret)
-    new_state = QuantState(error=flat - recon) if state is not None else None
+    (packed,), (new_state,) = qsgd_compress_flat_batch(
+        [flat], [state], block=block, interpret=interpret)
     return packed, new_state, unflatten
+
+
+def qsgd_compress_flat_batch(flats, states, *, block: int = 256,
+                             interpret=None):
+    """Batched core: [flat_i], [state_i|None] -> ([packed_i],
+    [new_state_i]). One fused quantize dispatch for the whole batch (and
+    one fused dequantize for the error-feedback residuals), bit-identical
+    per item to ``qsgd_compress`` run message by message."""
+    fed = [f if s is None else f + s.error for f, s in zip(flats, states)]
+    packed = ops.quantize_flat_batch(fed, block=block, interpret=interpret)
+    ef_idx = [i for i, s in enumerate(states) if s is not None]
+    new_states = [None] * len(flats)
+    if ef_idx:
+        recons = ops.dequantize_flat_batch([packed[i] for i in ef_idx],
+                                           interpret=interpret)
+        for i, recon in zip(ef_idx, recons):
+            new_states[i] = QuantState(error=fed[i] - recon)
+    return packed, new_states
 
 
 def qsgd_decompress(packed, unflatten, *, interpret=None):

@@ -223,3 +223,21 @@ class FLConfig:
     link_loss_rate: float = 0.0  # per-chunk wire loss on every direct link
     region_quorum: float = 0.5  # hier: min live fraction per region
     relay_conns: int = 8  # hier: WAN-hop connection multiplexing per relay
+
+    # -- the one FLConfig <-> Scenario conversion ------------------------
+    def to_scenario(self, *, tier: str = "small", local_steps: int = 4,
+                    store_fail_rate: float = 0.0):
+        """Lift this flat config into the declarative ``Scenario`` spec.
+
+        This and its inverse, ``Scenario.fl_config()``, are THE two
+        conversion points between the flat runtime config and the
+        declarative spec — every entry point (``fl_train``, tests,
+        examples) routes through them, so a field added to one side must
+        be added to both or the round-trip tests fail. Implemented by
+        ``Scenario.from_fl_config`` (the Scenario side owns the field
+        mapping); ``tier`` / ``local_steps`` / ``store_fail_rate`` are
+        deployment knobs with no FLConfig field."""
+        from repro.scenario import Scenario
+        return Scenario.from_fl_config(self, tier=tier,
+                                       local_steps=local_steps,
+                                       store_fail_rate=store_fail_rate)

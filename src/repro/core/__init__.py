@@ -4,10 +4,10 @@ over a Table-I-calibrated network model + object store."""
 from repro.core.backends import BACKEND_NAMES, make_backend
 from repro.core.message import (FLMessage, PackedPayload, TensorPayload,
                                 VirtualPayload)
-from repro.core.netsim import ENVIRONMENTS, Environment, make_env
+from repro.core.netsim import ENVIRONMENTS, Environment
 from repro.core.objectstore import ObjectStore
 from repro.core.transport import Fabric, MemoryMeter
 
 __all__ = ["make_backend", "BACKEND_NAMES", "FLMessage", "TensorPayload",
-           "VirtualPayload", "PackedPayload", "make_env", "Environment",
+           "VirtualPayload", "PackedPayload", "Environment",
            "ENVIRONMENTS", "ObjectStore", "Fabric", "MemoryMeter"]

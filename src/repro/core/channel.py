@@ -107,14 +107,23 @@ class CompressStage(WireStage):
     def signature(self) -> str:
         return self.codec.signature()
 
-    def compress(self, payload, peer):
+    def resolve_state(self, payload, peer):
+        """The pre-compress state rule, factored so the batched path
+        applies exactly it: existing residual if it fits, else fresh."""
         state = self._state.get(peer)
         if self.error_feedback and not self.codec.state_matches(state,
                                                                 payload):
             state = self.codec.init_state(payload)  # new/shape-changed
-        out, new_state, info = self.codec.compress(payload, state)
+        return state
+
+    def store_state(self, peer, new_state) -> None:
         if self.error_feedback and new_state is not None:
             self._state[peer] = new_state
+
+    def compress(self, payload, peer):
+        state = self.resolve_state(payload, peer)
+        out, new_state, info = self.codec.compress(payload, state)
+        self.store_state(peer, new_state)
         return out, info
 
 
@@ -172,6 +181,11 @@ class Channel:
         self._order = sorted(self.stages, key=lambda s: s.phase)
         self.serializer = next(s.serializer for s in stages
                                if isinstance(s, SerializeStage))
+        # the (at most one) payload-domain compress stage — the part of
+        # the stack encode_many can fuse across a batch of encodes
+        self.compress_stage: Optional[CompressStage] = next(
+            (s for s in self._order if isinstance(s, CompressStage)
+             and not isinstance(s, WireCompressStage)), None)
 
     # ------------------------------------------------------------------
     def signature(self) -> str:
@@ -181,8 +195,13 @@ class Channel:
         return "|".join(s.signature() for s in self._order)
 
     # ------------------------------------------------------------------
-    def encode(self, payload, peer: Optional[str] = None) -> Encoded:
-        """Run the stack forward: payload -> wire (+ itemised charges)."""
+    def encode(self, payload, peer: Optional[str] = None, *,
+               _pre: Optional[Tuple] = None) -> Encoded:
+        """Run the stack forward: payload -> wire (+ itemised charges).
+
+        ``_pre`` is a precomputed ``(payload', info)`` for the payload
+        compress stage (``encode_many``'s fused dispatch); the charges,
+        provenance and wire are identical to computing it here."""
         charges: List[Tuple[str, float, int]] = []
         infos: List[dict] = []
         wire: Optional[WireData] = None
@@ -198,7 +217,10 @@ class Channel:
                     wire = out
             elif isinstance(stage, CompressStage):
                 orig_nbytes = payload.nbytes
-                payload, info = stage.compress(payload, peer)
+                if _pre is not None:
+                    payload, info = _pre
+                else:
+                    payload, info = stage.compress(payload, peer)
                 if info is not None:
                     charges.append((stage.name,
                                     stage.codec.enc_time(orig_nbytes),
@@ -261,6 +283,62 @@ class Channel:
                 cost += codec.dec_time(info["orig_nbytes"])
         return payload, cost
 
+    def encode_batch(self, items: List[Tuple[object, Optional[str]]]
+                     ) -> List[Encoded]:
+        """Batched ``encode``: [(payload, peer)] -> [Encoded], with the
+        payload-compress work of the whole batch fused into one kernel
+        dispatch where the codec supports it. Single-channel shorthand
+        for ``encode_many``."""
+        return encode_many([(self, p, peer) for p, peer in items])
+
+    def decode_batch(self, wires: List[WireData]
+                     ) -> List[Tuple[object, float]]:
+        """Batched ``decode``: the per-wire wirecodec + deserialize steps
+        run as usual, then every wire's final payload-codec inversion is
+        grouped per codec and dispatched through ``codec.decode_batch``
+        (one fused dequantize for a round's worth of received updates).
+        Charges and payloads are identical to per-wire ``decode``."""
+        from repro.compression.stages import codec_for
+        results: List[Optional[Tuple[object, float]]] = [None] * len(wires)
+        # wire -> payload via the non-payload-codec steps; collect the
+        # remaining payload-codec inversions (applied right-to-left)
+        tail: dict = {}  # codec name -> [(idx, payload, [info...])]
+        for idx, wire in enumerate(wires):
+            payload, cur, cost = None, wire, 0.0
+            payload_infos = []
+            for info in reversed(self._stage_infos(wire)):
+                kind = info.get("stage", "compress")
+                if kind == "chunk":
+                    continue
+                if kind == "wirecodec":
+                    codec = codec_for(info["codec"])
+                    cur = codec.decompress_wire(cur, info)
+                    cost += codec.dec_time(info["orig_nbytes"])
+                elif kind == "serialize":
+                    payload = decode_wire(cur, self.serializer)
+                    cost += self.serializer.deser_time(cur.nbytes)
+                else:  # payload-domain: defer for the fused dispatch
+                    payload_infos.append(info)
+                    cost += codec_for(info["codec"]).dec_time(
+                        info["orig_nbytes"])
+            if payload_infos:
+                # group by the outermost deferred codec; a stack rarely
+                # nests payload codecs, but apply any extras in order
+                tail.setdefault(payload_infos[0]["codec"], []).append(
+                    (idx, payload, payload_infos))
+            results[idx] = (payload, cost)
+        for name, members in tail.items():
+            codec = codec_for(name)
+            decoded = codec.decode_batch([p for _, p, _ in members],
+                                         [infos[0] for _, _, infos in
+                                          members])
+            for (idx, _, infos), payload in zip(members, decoded):
+                for info in infos[1:]:
+                    payload = codec_for(info["codec"]).decompress(payload,
+                                                                  info)
+                results[idx] = (payload, results[idx][1])
+        return results
+
     def decode_time(self, wire: WireData) -> float:
         """Decode cost without materialising (planners/broadcast)."""
         from repro.compression.stages import codec_for
@@ -277,6 +355,48 @@ class Channel:
             else:
                 cost += codec_for(info["codec"]).dec_time(info["orig_nbytes"])
         return cost
+
+
+def encode_many(items: List[Tuple[Channel, object, Optional[str]]]
+                ) -> List[Encoded]:
+    """Encode a batch of (channel, payload, peer) triples — possibly
+    across *different* channels — with every payload-compress step that
+    shares a codec fused into one kernel dispatch.
+
+    The per-item result (wire bytes, provenance, charges, error-feedback
+    transitions) is identical to calling ``channel.encode(payload, peer)``
+    item by item, by construction: states are resolved through the same
+    ``CompressStage.resolve_state`` rule before the fused dispatch and
+    written back through ``store_state`` after it, and the rest of each
+    stack runs unchanged via ``encode(..., _pre=...)``. Items whose
+    (stage, peer) stream appears more than once in the batch are left on
+    the sequential path — their residuals chain, so fusing them would
+    reorder the feedback loop."""
+    pre: List[Optional[Tuple]] = [None] * len(items)
+    # count per-stream occurrences: a stream = one EF residual slot
+    streams: dict = {}
+    for ch, _, peer in items:
+        if ch.compress_stage is not None:
+            key = (id(ch.compress_stage), peer)
+            streams[key] = streams.get(key, 0) + 1
+    groups: dict = {}  # (codec type, signature) -> [(idx, stage, peer)]
+    for idx, (ch, payload, peer) in enumerate(items):
+        stage = ch.compress_stage
+        if stage is None or streams[(id(stage), peer)] > 1:
+            continue
+        groups.setdefault((type(stage.codec), stage.codec.signature()),
+                          []).append((idx, stage, peer))
+    for (_, _sig), members in groups.items():
+        codec = members[0][1].codec
+        payloads = [items[i][1] for i, _, _ in members]
+        states = [stage.resolve_state(p, peer)
+                  for (_, stage, peer), p in zip(members, payloads)]
+        for (i, stage, peer), (out, new_state, info) in zip(
+                members, codec.encode_batch(payloads, states)):
+            stage.store_state(peer, new_state)
+            pre[i] = (out, info)
+    return [ch.encode(payload, peer, _pre=pre[idx])
+            for idx, (ch, payload, peer) in enumerate(items)]
 
 
 def make_channel(serializer_name: str, *, compression=None, wire_codec=None,

@@ -163,7 +163,13 @@ def make_env(name: str, num_clients: int = 7) -> Environment:
     """Deprecated shim: environments are described by scenario specs now.
     Equivalent to ``TopologySpec.preset(name, num_clients).build()`` —
     which also accepts the graph presets (star/ring/multi_hub) the legacy
-    constructors never had."""
+    constructors never had. Warns; no longer re-exported from
+    ``repro.core``."""
+    import warnings
+    warnings.warn(
+        "make_env is deprecated; use "
+        "TopologySpec.preset(name, num_clients=...).build()",
+        DeprecationWarning, stacklevel=2)
     from repro.scenario import TopologySpec
     return TopologySpec.preset(name, num_clients=num_clients).build()
 

@@ -73,16 +73,24 @@ class FLServer:
             and backend.resolve(sends[0][1]) is backend.s3)
         fm = backend.fabric.fault_model
         if use_s3:
+            from repro.core.channel import encode_many
             s3 = backend if name == "grpc+s3" else backend.s3
+            cbs = [self._client_backend(client, msg)
+                   for client, msg, _ in sends]
+            # store exactly what each client's wire stack produces and
+            # charge those bytes (a compressing channel stores the
+            # smaller wire); virtual paper-scale payloads keep their
+            # nominal size. All clients' encodes go through one fused
+            # batch — one quantize kernel dispatch for the whole round
+            enc_idx = [i for i, (_, msg, _) in enumerate(sends)
+                       if isinstance(msg.payload, TensorPayload)]
+            fused = encode_many([(cbs[i].channel, sends[i][1].payload, "s3")
+                                 for i in enc_idx])
+            encs = [None] * len(sends)
+            for i, enc in zip(enc_idx, fused):
+                encs[i] = enc
             transfers, meta = [], []
-            for client, msg, start in sends:
-                cb = self._client_backend(client, msg)
-                # store exactly what the client's wire stack produces and
-                # charge those bytes (a compressing channel stores the
-                # smaller wire); virtual paper-scale payloads keep their
-                # nominal size
-                enc = (cb.channel.encode(msg.payload, peer="s3")
-                       if isinstance(msg.payload, TensorPayload) else None)
+            for (client, msg, start), cb, enc in zip(sends, cbs, encs):
                 wire = enc.wire if enc is not None else None
                 nbytes = wire.nbytes if wire is not None \
                     else msg.payload_nbytes

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.kernels import fedavg_reduce as fr
 from repro.kernels import quantize as qz
+from repro.kernels import ref as kref
 
 
 def _default_interpret() -> bool:
@@ -50,6 +51,103 @@ def dequantize_flat(packed, *, out_dtype=jnp.float32, interpret=None):
     s = packed["scales"].reshape(-1, 1)
     x = qz.dequantize_blocks(q, s, out_dtype=out_dtype, interpret=interpret)
     return x.reshape(-1)[: packed["orig_len"]]
+
+
+# ---------------------------------------------------------------------------
+# batched flat-array API (the channel's fused encode path)
+# ---------------------------------------------------------------------------
+#
+# One round's outstanding encodes arrive as a *list* of flat vectors. Each
+# is padded independently to a whole number of (ROW_TILE, block) row-tiles
+# and the tiles are concatenated into one (rows, block) array, so a single
+# kernel dispatch quantises the lot — and, because quantisation is
+# row-wise, every row is bit-identical to what the per-message call would
+# have produced. Dispatch:
+#
+# * TPU (``interpret`` resolves False)  — the real Pallas kernel, fused.
+# * CPU (``interpret`` resolves True)   — the jitted XLA reference
+#   (kernels/ref.py): same f32 math, parity-tested bit-exact against the
+#   interpret-mode kernel, but compiled instead of interpreted (the
+#   interpreter walks the grid in Python; it is a correctness tool, not a
+#   perf path). Pass ``interpret=True`` explicitly to force the Pallas
+#   interpreter (the parity tests do).
+
+_jit_quantize_ref = jax.jit(kref.quantize_blocks_ref)
+_jit_dequantize_ref = jax.jit(kref.dequantize_blocks_ref)
+
+
+def _quantize_rows(rows_x, interpret):
+    """(rows, block) -> (q, scales) through the fastest bit-exact path."""
+    if interpret is True:
+        return qz.quantize_blocks(rows_x, interpret=True)
+    if interpret is False or not _default_interpret():
+        return qz.quantize_blocks(rows_x, interpret=False)
+    return _jit_quantize_ref(rows_x)
+
+
+def _dequantize_rows(q, s, interpret):
+    if interpret is True:
+        return qz.dequantize_blocks(q, s, interpret=True)
+    if interpret is False or not _default_interpret():
+        return qz.dequantize_blocks(q, s, interpret=False)
+    return _jit_dequantize_ref(q, s)
+
+
+def quantize_flat_batch(flats: Sequence, *, block: int = 256,
+                        interpret=None):
+    """[x_i] -> [packed_i], one fused kernel dispatch for the whole batch.
+
+    Per-item results are bit-identical to ``quantize_flat(x_i)`` (padding
+    is per-item and row-aligned; quantisation is row-wise)."""
+    if not flats:
+        return []
+    mult = block * qz.ROW_TILE
+    # pad + concatenate on the host: per-item jnp pads would cost one
+    # dispatch each and dominate the small-message regime this API is
+    # for; a single zeros+memcpy feeds one device transfer instead
+    arrs = [np.asarray(x, np.float32).reshape(-1) for x in flats]
+    pad_lens = [-(-a.size // mult) * mult for a in arrs]
+    big = np.zeros(sum(pad_lens), np.float32)
+    off = 0
+    for a, pl in zip(arrs, pad_lens):
+        big[off:off + a.size] = a
+        off += pl
+    q, s = _quantize_rows(jnp.asarray(big.reshape(-1, block)), interpret)
+    q, s = np.asarray(q), np.asarray(s)  # one transfer; slices are views
+    out, row = [], 0
+    for a, pl in zip(arrs, pad_lens):
+        rows = pl // block
+        out.append({"q": q[row:row + rows].reshape(-1),
+                    "scales": s[row:row + rows].reshape(-1),
+                    "block": block, "orig_len": a.size})
+        row += rows
+    return out
+
+
+def dequantize_flat_batch(packed_list: Sequence[dict], *,
+                          out_dtype=jnp.float32, interpret=None):
+    """[packed_i] -> [x_i], fused when every item shares one block size."""
+    if not packed_list:
+        return []
+    blocks = {int(p["block"]) for p in packed_list}
+    if len(blocks) > 1:  # mixed block sizes cannot share a (rows, block)
+        return [dequantize_flat(p, out_dtype=out_dtype, interpret=interpret)
+                for p in packed_list]
+    block = blocks.pop()
+    qs = [np.asarray(p["q"]).reshape(-1, block) for p in packed_list]
+    ss = [np.asarray(p["scales"]).reshape(-1, 1) for p in packed_list]
+    q = qs[0] if len(qs) == 1 else np.concatenate(qs)
+    s = ss[0] if len(ss) == 1 else np.concatenate(ss)
+    x = _dequantize_rows(jnp.asarray(q), jnp.asarray(s), interpret)
+    if out_dtype != jnp.float32:
+        x = x.astype(out_dtype)
+    x = np.asarray(x)
+    out, row = [], 0
+    for p, qi in zip(packed_list, qs):
+        rows = qi.shape[0]
+        out.append(x[row:row + rows].reshape(-1)[: p["orig_len"]])
+        row += rows
+    return out
 
 
 # ---------------------------------------------------------------------------

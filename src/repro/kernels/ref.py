@@ -1,7 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)
+plus the pure-NumPy legacy codec (the pre-batching per-message baseline the
+perf trajectory and the bit-exactness parity tests compare against)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def quantize_blocks_ref(x):
@@ -16,6 +19,25 @@ def quantize_blocks_ref(x):
 
 def dequantize_blocks_ref(q, scales, out_dtype=jnp.float32):
     return (q.astype(jnp.float32) * scales).astype(out_dtype)
+
+
+def quantize_blocks_np(x):
+    """Pure-NumPy twin of ``quantize_blocks_ref`` (single-threaded, no
+    XLA): the legacy per-message codec baseline. Same math, same f32
+    rounding (np.round is round-half-even like jnp.round), so its int8
+    output is bit-identical to the kernel's."""
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    scale = amax / np.float32(127.0)
+    inv = np.divide(np.float32(1.0), scale, where=scale > 0.0,
+                    out=np.zeros_like(scale))
+    q = np.clip(np.round(x * inv), -127.0, 127.0).astype(np.int8)
+    return q, scale
+
+
+def dequantize_blocks_np(q, scales, out_dtype=np.float32):
+    return (np.asarray(q, np.float32) * np.asarray(scales,
+                                                   np.float32)).astype(out_dtype)
 
 
 def fedavg_reduce_ref(updates, weights):

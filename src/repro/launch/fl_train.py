@@ -25,6 +25,7 @@ event-driven runtime (fl/scheduler.py): clients run independently and
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -45,10 +46,28 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
                      reduced: bool = True, local_steps: int = 4,
                      fail_rate: float = 0.0, scenario: Scenario = None):
     """FLConfig/Scenario -> live deployment, through the scenario runtime
-    (the same path ``--scenario`` files take)."""
-    sc = scenario or Scenario.from_fl_config(
-        fl_cfg, tier=tier, local_steps=local_steps,
-        store_fail_rate=fail_rate)
+    (the same path ``--scenario`` files take).
+
+    Passing *both* ``fl_cfg`` and ``scenario`` is only legal when they
+    agree: the scenario's flat projection (``Scenario.fl_config()``)
+    must equal ``fl_cfg`` field-for-field, otherwise we raise instead of
+    silently preferring one — a disagreement means the caller built the
+    two specs independently and one of them is wrong."""
+    if scenario is not None:
+        back = scenario.fl_config()
+        if back != fl_cfg:
+            diffs = [f"{f.name}: fl_cfg={getattr(fl_cfg, f.name)!r} "
+                     f"scenario={getattr(back, f.name)!r}"
+                     for f in dataclasses.fields(FLConfig)
+                     if getattr(back, f.name) != getattr(fl_cfg, f.name)]
+            raise ValueError(
+                "build_deployment got both fl_cfg and scenario but they "
+                "disagree (scenario.fl_config() != fl_cfg): "
+                + "; ".join(diffs))
+        sc = scenario
+    else:
+        sc = fl_cfg.to_scenario(tier=tier, local_steps=local_steps,
+                                store_fail_rate=fail_rate)
     rt = build_runtime(sc)
     env, store = rt.env, rt.store
 

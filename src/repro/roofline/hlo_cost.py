@@ -402,6 +402,32 @@ def computation_cost(name: str, comps, pod_size: int,
     return total
 
 
+# TPU-class machine balance (peak flops / HBM bandwidth), flops per byte:
+# ~197 Tf/s over ~0.82 TB/s ≈ 240. A kernel whose arithmetic intensity
+# sits far below this is bandwidth-bound — more compute cannot speed it
+# up, only fewer bytes can (which is what fusing a batch of encodes into
+# one dispatch buys: the fixed dispatch/launch cost amortises and the
+# rows stream once).
+MACHINE_BALANCE_FLOPS_PER_BYTE = 240.0
+
+
+def arithmetic_intensity(cost: Cost) -> float:
+    """flops per HBM byte of a walked computation (inf when byte-free)."""
+    if cost.hbm_bytes <= 0:
+        return float("inf")
+    return cost.flops / cost.hbm_bytes
+
+
+def is_bandwidth_bound(cost: Cost, *, balance: float =
+                       MACHINE_BALANCE_FLOPS_PER_BYTE) -> bool:
+    """True when the computation's intensity sits below the machine
+    balance point — the roofline says HBM bandwidth, not compute, limits
+    it. The batched-codec CI assertion: the fused quantize stage must
+    stay bandwidth-bound (it streams rows; if intensity ever climbs the
+    fusion regressed into recomputation)."""
+    return arithmetic_intensity(cost) < balance
+
+
 def entry_cost(text: str, pod_size: int = 0) -> Cost:
     comps = parse_hlo(text)
     entry = None

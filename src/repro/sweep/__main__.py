@@ -15,21 +15,22 @@ import sys
 
 from repro.scenario import ScenarioError
 from repro.sweep.engine import Engine, Study
-from repro.sweep.runners import run_scenario
+from repro.sweep.runners import run_scenario_cell
 from repro.sweep.spec import Sweep
 
 
 def run_sweep_file(path: str, *, out_dir: str = "benchmarks/out",
                    fresh: bool = False, verbose: bool = True,
-                   report_path: str = None) -> list:
+                   report_path: str = None, workers: int = 0) -> list:
     """Load + expand + execute one sweep file; returns the CellResults."""
     sweep = Sweep.load(path)
     study = Study(name=sweep.name, sweeps=lambda quick: (sweep,),
-                  cell=lambda cell: run_scenario(cell.scenario),
+                  cell=run_scenario_cell,  # module-level: --workers pickles it
                   title=f"ad-hoc sweep {sweep.name} ({path})")
     engine = Engine(out_dir)
     cells = sweep.expand()
-    results = engine.run_cells(study, cells, fresh=fresh, verbose=verbose)
+    results = engine.run_cells(study, cells, fresh=fresh, verbose=verbose,
+                               workers=workers)
     if verbose:
         print(f"{'cell':44s} {'sim_time_s':>11s} {'round_s':>9s} "
               f"{'wire_MB':>9s} {'retx':>5s}")
@@ -60,10 +61,12 @@ def main(argv=None) -> int:
                     help="write the full CellResult list to this JSON file")
     ap.add_argument("--fresh", action="store_true",
                     help="ignore the run store; re-run every cell")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="run missing cells on N worker processes")
     args = ap.parse_args(argv)
     try:
         run_sweep_file(args.sweep, out_dir=args.out_dir, fresh=args.fresh,
-                       report_path=args.report)
+                       report_path=args.report, workers=args.workers)
     except (ScenarioError, OSError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

@@ -67,15 +67,35 @@ class RunStore:
         return self._index.get(fp)
 
     def put(self, result: CellResult) -> None:
+        """Append one record. Multiprocess-safe: the line is written in
+        one O_APPEND write under an exclusive flock, so concurrent
+        writers (parallel engines sharing a store, or a crashed worker's
+        partial line) never interleave records — loading tolerates the
+        one truncated tail a hard kill can still leave."""
         os.makedirs(os.path.dirname(self.path), exist_ok=True)
+        line = json.dumps(result.to_dict(), separators=(",", ":")) + "\n"
         with open(self.path, "a") as f:
-            f.write(json.dumps(result.to_dict(),
-                               separators=(",", ":")) + "\n")
+            try:
+                import fcntl
+                fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+            except (ImportError, OSError):
+                pass  # no flock here (non-POSIX): O_APPEND still holds
+            f.write(line)
+            f.flush()
         self._index[result.fingerprint] = result
 
 
 def _default_finalize(results, quick, verbose):
     return None, [r.row() for r in results]
+
+
+def _run_cell_task(cell_fn, study_name, cell_name, fp, cell) -> CellResult:
+    """One worker-side cell execution (module-level so the spawn-context
+    pool can pickle it; carries only the cell fn + the cell, never the
+    whole Study — finalize hooks and closures stay in the parent)."""
+    metrics = cell_fn(cell)
+    return CellResult.from_metrics(study_name, cell_name, fp,
+                                   cell.overrides, cell.params, metrics)
 
 
 @dataclasses.dataclass
@@ -121,42 +141,71 @@ class Engine:
 
     def run_cells(self, study: Study, cells: List[Cell], *,
                   fresh: bool = False, verbose: bool = True,
-                  ) -> List[CellResult]:
+                  workers: int = 0) -> List[CellResult]:
         """The dedupe/cache/execute core. Duplicate fingerprints inside
-        one expansion run once; completed cells replay from the store."""
+        one expansion run once; completed cells replay from the store.
+
+        ``workers > 1`` executes the missing cells on a spawn-context
+        process pool (spawn, not fork: the cells run JAX). The parent
+        collects worker results *in submission order* and is the only
+        store writer, so the store file is bit-for-bit identical to a
+        serial run of the same grid — cells must be (and the studies
+        are) deterministic, which ``--workers`` therefore preserves."""
         store = RunStore(self.store_path(study.name))
         stats = StudyRunStats(n_cells=len(cells))
-        results: List[CellResult] = []
-        seen_this_run: Dict[str, CellResult] = {}
-        for cell in cells:
-            fp = fingerprint(study.name, study.version, cell)
-            rec = seen_this_run.get(fp)
-            if rec is None and not fresh:
-                rec = store.get(fp)
-                if rec is not None:
-                    stats.n_cached += 1
-            if rec is None:
-                metrics = study.cell(cell)
-                rec = CellResult.from_metrics(
-                    study.name, study.name_of(cell), fp,
-                    cell.overrides, cell.params, metrics)
+        fps = [fingerprint(study.name, study.version, cell)
+               for cell in cells]
+        recs: Dict[str, CellResult] = {}
+        todo: List[Tuple[str, Cell]] = []  # first-occurrence order
+        todo_fps = set()
+        for cell, fp in zip(cells, fps):
+            if fp in recs or fp in todo_fps:
+                continue
+            rec = None if fresh else store.get(fp)
+            if rec is not None:
+                stats.n_cached += 1
+                recs[fp] = rec
+            else:
+                todo.append((fp, cell))
+                todo_fps.add(fp)
+        if workers > 1 and len(todo) > 1:
+            import multiprocessing as mp
+            from concurrent.futures import ProcessPoolExecutor
+            ctx = mp.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=min(workers, len(todo)),
+                                     mp_context=ctx) as pool:
+                futs = [pool.submit(_run_cell_task, study.cell, study.name,
+                                    study.name_of(cell), fp, cell)
+                        for fp, cell in todo]
+                for (fp, _), fut in zip(todo, futs):
+                    rec = fut.result()  # submission order == serial order
+                    store.put(rec)
+                    recs[fp] = rec
+                    stats.n_ran += 1
+        else:
+            for fp, cell in todo:
+                rec = _run_cell_task(study.cell, study.name,
+                                     study.name_of(cell), fp, cell)
                 store.put(rec)
+                recs[fp] = rec
                 stats.n_ran += 1
-            seen_this_run[fp] = rec
-            results.append(rec)
+        results = [recs[fp] for fp in fps]
         self.last_stats = stats
         if verbose:
+            par = f", {workers} workers" if workers > 1 else ""
             print(f"[{study.name}] {stats.n_cells} cells: {stats.n_ran} "
-                  f"run, {stats.n_cached} cached "
+                  f"run, {stats.n_cached} cached{par} "
                   f"(store: {os.path.relpath(store.path)})")
         return results
 
     def run_study(self, study: Study, *, quick: bool = False,
-                  verbose: bool = True, fresh: bool = False) -> List[dict]:
+                  verbose: bool = True, fresh: bool = False,
+                  workers: int = 0) -> List[dict]:
         """Expand -> run/replay -> finalize -> write the report JSON.
         Returns the CSV rows benchmarks/run.py prints."""
         cells = [c for sw in study.sweeps(quick) for c in sw.expand()]
-        results = self.run_cells(study, cells, fresh=fresh, verbose=verbose)
+        results = self.run_cells(study, cells, fresh=fresh, verbose=verbose,
+                                 workers=workers)
         report, rows = study.finalize(results, quick, verbose)
         if report is not None and study.out:
             path = os.path.join(self.out_dir, study.out)
@@ -173,18 +222,21 @@ class Engine:
         (+ ``fresh=`` so run.py --fresh invalidates per study, not by
         deleting the whole run store)."""
         def run(verbose: bool = True, quick: bool = False,
-                fresh: bool = False) -> List[dict]:
+                fresh: bool = False, workers: int = 0) -> List[dict]:
             return self.run_study(study, quick=quick, verbose=verbose,
-                                  fresh=fresh)
+                                  fresh=fresh, workers=workers)
         run.__doc__ = study.title or study.name
         return run
 
     def main(self, study: Study, argv=None) -> None:
-        """``python -m benchmarks.figX [--quick] [--fresh]``."""
+        """``python -m benchmarks.figX [--quick] [--fresh] [--workers N]``."""
         ap = argparse.ArgumentParser(description=study.title or study.name)
         ap.add_argument("--quick", action="store_true",
                         help="reduced grid (the CI smoke)")
         ap.add_argument("--fresh", action="store_true",
                         help="ignore the run store; re-run every cell")
+        ap.add_argument("--workers", type=int, default=0,
+                        help="run missing cells on N worker processes")
         args = ap.parse_args(argv)
-        self.run_study(study, quick=args.quick, fresh=args.fresh)
+        self.run_study(study, quick=args.quick, fresh=args.fresh,
+                       workers=args.workers)

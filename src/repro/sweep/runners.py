@@ -118,3 +118,9 @@ def run_scenario(scenario: Scenario, *,
             "n_discarded": rep.n_discarded,
             "round_reports": reports,
             **wire_stats(rt.fabric, rt.store)}
+
+
+def run_scenario_cell(cell) -> Dict[str, Any]:
+    """``Study.cell`` adapter over ``run_scenario`` — module-level so a
+    ``--workers`` process pool can pickle the ad-hoc sweep-file study."""
+    return run_scenario(cell.scenario)

@@ -39,22 +39,40 @@ class SweepError(ScenarioError):
 
 @dataclasses.dataclass(frozen=True)
 class Axis:
-    """One swept dimension: discrete ``values`` or a ``lo``/``hi`` range."""
+    """One swept dimension: discrete ``values`` or a ``lo``/``hi`` range.
+
+    ``sub`` makes the axis *conditional*: per-value sub-grids, keyed by
+    ``str(value)``. When the grid expansion assigns a value whose key
+    appears in ``sub``, that value's axes are crossed in (recursively)
+    for those cells only — the declarative form of "chunking only
+    applies on the gRPC branch" couplings that otherwise hide inside a
+    study's ``_cell`` function. Sub-axes exist in grid sweeps only
+    (random search draws axes independently, which a value-conditioned
+    sub-grid contradicts)."""
     field: str
     values: Tuple[Any, ...] = ()
     lo: float = 0.0
     hi: float = 0.0
     steps: int = 0  # grid mode: linspace(lo, hi, steps) for a range axis
+    # str(value) -> axes crossed in only under that value
+    sub: Dict[str, Tuple["Axis", ...]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def is_range(self) -> bool:
         return not self.values
 
-    def check(self, path: str) -> None:
+    def check(self, path: str, seen=()) -> None:
         if not self.field:
             raise SweepError(f"{path}: axis field must be non-empty")
+        if self.field in seen:
+            raise SweepError(f"{path}: duplicate axis field "
+                             f"'{self.field}' on this branch")
         if not self.field.startswith(PARAM_PREFIX):
             _check_scenario_path(self.field, path)
+        if self.sub and not self.values:
+            raise SweepError(f"{path}: sub-axes need discrete values "
+                             f"(a range axis has no value keys)")
         if self.values:
             if any(v is None for v in self.values):
                 raise SweepError(f"{path}: axis values must not be None "
@@ -62,10 +80,45 @@ class Axis:
             if self.lo or self.hi or self.steps:
                 raise SweepError(f"{path}: give either values or a "
                                  f"lo/hi range, not both")
+            self._check_sub(path, seen)
             return
         if not self.hi > self.lo:
             raise SweepError(f"{path}: range axis needs hi > lo "
                              f"(got lo={self.lo}, hi={self.hi})")
+
+    def _check_sub(self, path: str, seen) -> None:
+        keys = {str(v) for v in self.values}
+        branch_seen = set(seen) | {self.field}
+        for key, axes in self.sub.items():
+            if key not in keys:
+                raise SweepError(
+                    f"{path}.sub['{key}']: no axis value str()s to "
+                    f"'{key}' (values: {sorted(keys)})")
+            if not isinstance(axes, tuple):
+                raise SweepError(f"{path}.sub['{key}']: expected a tuple "
+                                 f"of axes")
+            # each sub value opens its own branch: a field may repeat
+            # across branches but not along one
+            sub_seen = set(branch_seen)
+            for j, ax in enumerate(axes):
+                ax.check(f"{path}.sub['{key}'][{j}]", tuple(sub_seen))
+                sub_seen.add(ax.field)
+
+    def grid_values(self, path: str) -> Tuple[Any, ...]:
+        if self.values:
+            return self.values
+        if self.steps < 2:
+            raise SweepError(
+                f"{path}: a range axis in a grid sweep needs steps >= 2 "
+                f"(or set samples > 0 for random search)")
+        span = self.hi - self.lo
+        return tuple(self.lo + span * i / (self.steps - 1)
+                     for i in range(self.steps))
+
+    def draw(self, rng: random.Random) -> Any:
+        if self.values:
+            return self.values[rng.randrange(len(self.values))]
+        return rng.uniform(self.lo, self.hi)
 
     def grid_values(self, path: str) -> Tuple[Any, ...]:
         if self.values:
@@ -115,19 +168,22 @@ class Sweep:
         seen = set()
         for i, ax in enumerate(self.axes):
             path = f"sweep.axes[{i}]"
-            ax.check(path)
-            if ax.field in seen:
-                raise SweepError(f"{path}: duplicate axis field "
-                                 f"'{ax.field}'")
+            ax.check(path, tuple(seen))
             seen.add(ax.field)
         if self.samples < 0:
             raise SweepError("sweep.samples must be >= 0")
+        if self.samples > 0 and any(_has_sub(ax) for ax in self.axes):
+            raise SweepError(
+                "sweep: conditional sub-axes require a grid sweep "
+                "(samples == 0); random search draws axes independently")
 
     # -- expansion ---------------------------------------------------------
     def expand(self) -> List[Cell]:
         """Axes -> concrete cells. Grid: cross-product in declaration
-        order. Random: ``samples`` cells, each axis drawn from its own
-        ``(seed, index, field)``-seeded stream."""
+        order, with each axis value's conditional ``sub`` axes crossed
+        in (recursively) under that value only. Random: ``samples``
+        cells, each axis drawn from its own ``(seed, index,
+        field)``-seeded stream."""
         self.check()
         if self.samples > 0:
             assignments = [
@@ -136,11 +192,7 @@ class Sweep:
                  for ax in self.axes]
                 for i in range(self.samples)]
         else:
-            assignments = [[]]
-            for ax in self.axes:
-                vals = ax.grid_values(f"sweep.axes[{ax.field}]")
-                assignments = [a + [(ax.field, v)]
-                               for a in assignments for v in vals]
+            assignments = _grid_assignments(self.axes)
         cells = []
         for i, assign in enumerate(assignments):
             overrides = {f: v for f, v in assign
@@ -206,6 +258,32 @@ class Sweep:
             return cls.from_dict(json.load(f))
 
 
+def _has_sub(ax: Axis) -> bool:
+    return bool(ax.sub)
+
+
+def _grid_assignments(axes) -> List[list]:
+    """Cross the axes into [(field, value)] assignment lists, declaration
+    order = nesting order; a value's ``sub`` axes nest directly under it
+    (so cells of one branch stay contiguous and cell order stays
+    reproducible)."""
+    assignments: List[list] = [[]]
+    for ax in axes:
+        vals = ax.grid_values(f"sweep.axes[{ax.field}]")
+        nxt: List[list] = []
+        for prefix in assignments:
+            for v in vals:
+                branch = prefix + [(ax.field, v)]
+                sub_axes = ax.sub.get(str(v), ())
+                if sub_axes:
+                    nxt.extend(branch + tail
+                               for tail in _grid_assignments(sub_axes))
+                else:
+                    nxt.append(branch)
+        assignments = nxt
+    return assignments
+
+
 def _axis_from_dict(data: dict, path: str) -> Axis:
     if not isinstance(data, dict):
         raise SweepError(f"{path}: expected an object")
@@ -216,6 +294,20 @@ def _axis_from_dict(data: dict, path: str) -> Axis:
                          f"{sorted(fields)}")
     kw = {k: (tuple(v) if isinstance(v, list) else v)
           for k, v in data.items()}
+    sub = kw.get("sub")
+    if sub is not None:
+        if not isinstance(sub, dict):
+            raise SweepError(f"{path}.sub: expected an object mapping "
+                             f"str(value) -> list of axes")
+        parsed = {}
+        for key, axes in sub.items():
+            if not isinstance(axes, (list, tuple)):
+                raise SweepError(f"{path}.sub['{key}']: expected a list "
+                                 f"of axes")
+            parsed[key] = tuple(
+                _axis_from_dict(a, f"{path}.sub['{key}'][{j}]")
+                for j, a in enumerate(axes))
+        kw["sub"] = parsed
     try:
         return Axis(**kw)
     except TypeError as e:

@@ -6,7 +6,8 @@ now that they share the isend completion path.
 import pytest
 
 from repro.core import (Fabric, FLMessage, ObjectStore, VirtualPayload,
-                        make_backend, make_env)
+                        make_backend)
+from repro.scenario import TopologySpec
 from repro.core.netsim import MB, NCAL
 
 NBYTES = 50 * MB
@@ -14,7 +15,7 @@ NBYTES = 50 * MB
 
 @pytest.fixture
 def deployment():
-    env = make_env("geo_distributed")
+    env = TopologySpec.preset("geo_distributed", num_clients=7).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL)
     for h in [env.server] + list(env.clients):

@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import (Fabric, FLMessage, ObjectStore, TensorPayload,
-                        VirtualPayload, make_backend, make_env)
+                        VirtualPayload, make_backend)
+from repro.scenario import TopologySpec
 from repro.core.netsim import MB, NCAL
 
 LARGE = int(1243.14 * MB)
@@ -12,7 +13,7 @@ SMALL = int(2.39 * MB)
 
 @pytest.fixture
 def deployment():
-    env = make_env("geo_distributed")
+    env = TopologySpec.preset("geo_distributed", num_clients=7).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL)
     for h in [env.server] + list(env.clients):
@@ -166,7 +167,7 @@ def test_s3_recv_decodes_with_producing_codec(deployment):
 
 
 def test_s3_refetch_after_failure():
-    env = make_env("geo_distributed")
+    env = TopologySpec.preset("geo_distributed", num_clients=7).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL, fail_rate=0.4, seed=3)
     for h in [env.server] + list(env.clients):

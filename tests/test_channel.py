@@ -6,8 +6,8 @@ import pytest
 
 from repro.compression.stages import QsgdCodec, TopkCodec, make_codec
 from repro.core import (Fabric, FLMessage, MemoryMeter, ObjectStore,
-                        TensorPayload, VirtualPayload, make_backend,
-                        make_env)
+                        TensorPayload, VirtualPayload, make_backend)
+from repro.scenario import TopologySpec
 from repro.core.channel import (ChunkStage, CompressStage, SerializeStage,
                                 make_channel)
 from repro.core.netsim import MB, NCAL
@@ -22,7 +22,7 @@ def tree(rng):
 
 @pytest.fixture
 def deployment():
-    env = make_env("geo_distributed")
+    env = TopologySpec.preset("geo_distributed", num_clients=7).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL)
     for h in [env.server] + list(env.clients):

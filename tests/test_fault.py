@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core import (Fabric, FLMessage, ObjectStore, VirtualPayload,
-                        make_backend, make_env)
+                        make_backend)
+from repro.scenario import TopologySpec
 from repro.core.netsim import MB, NCAL, LinkFaultModel
 from repro.fl import FedBuffStrategy, HierarchicalStrategy, SemiSyncStrategy
 from repro.fl.fault import (AvailabilityTrace, FaultPlan, make_availability)
@@ -250,7 +251,7 @@ def test_zero_width_blackout_window_is_bit_for_bit_noop():
 
 @pytest.fixture
 def deployment():
-    env = make_env("geo_distributed")
+    env = TopologySpec.preset("geo_distributed", num_clients=7).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL)
     for h in [env.server] + list(env.clients):
@@ -319,7 +320,7 @@ def test_zero_rate_fault_model_is_bit_for_bit_noop(deployment):
 # ---------------------------------------------------------------------------
 
 def _deployment(backend="grpc", n=4, env_name="geo_distributed"):
-    env = make_env(env_name, n)
+    env = TopologySpec.preset(env_name, num_clients=n).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL)
     for h in [env.server] + list(env.clients):

@@ -6,7 +6,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.netsim import (BAHRAIN, GEO_REGIONS, HONGKONG, MB, NCAL,
                                Host, Region, Transfer, geo_distributed_env,
-                               lan_env, make_env, simulate_transfers,
+                               lan_env, simulate_transfers,
                                transfer_time)
 
 
@@ -74,7 +74,8 @@ def test_fluid_staggered_starts():
 
 
 def test_environments():
+    from repro.scenario import TopologySpec
     for name in ("lan", "geo_proximal", "geo_distributed"):
-        env = make_env(name)
+        env = TopologySpec.preset(name, num_clients=7).build()
         assert len(env.clients) == 7
     assert lan_env().trusted and not geo_distributed_env().trusted

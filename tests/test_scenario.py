@@ -8,7 +8,7 @@ import random
 import pytest
 
 from repro.core import Fabric, FLMessage, ObjectStore, VirtualPayload, \
-    make_backend, make_env
+    make_backend
 from repro.core.netsim import (NCAL, Environment, geo_distributed_env,
                                geo_proximal_env, lan_env)
 from repro.fl.client import FLClient
@@ -217,7 +217,9 @@ def test_preset_graph_traces_bit_for_bit(env_name, backend):
 
 
 def test_make_env_is_the_preset_shim():
-    env = make_env("geo_distributed", 5)
+    from repro.core.netsim import make_env
+    with pytest.warns(DeprecationWarning, match="TopologySpec.preset"):
+        env = make_env("geo_distributed", 5)
     assert env.links  # graph-built
     assert env == TopologySpec.preset("geo_distributed", 5).build()
 

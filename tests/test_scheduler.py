@@ -13,7 +13,8 @@ import numpy as np
 import pytest
 
 from repro.core import (Fabric, ObjectStore, TensorPayload, VirtualPayload,
-                        make_backend, make_env)
+                        make_backend)
+from repro.scenario import TopologySpec
 from repro.core.netsim import NCAL
 from repro.data import make_silo_datasets
 from repro.fl import (FedBuffStrategy, FLClient, FLScheduler, FLServer,
@@ -46,7 +47,7 @@ def _init_params():
 
 def _deployment(backend="grpc", env_name="lan", n=4, *, live=True, seed=0,
                 sim_train_s=5.0, straggle=None):
-    env = make_env(env_name, n)
+    env = TopologySpec.preset(env_name, num_clients=n).build()
     fabric = Fabric(env)
     store = ObjectStore(NCAL)
     for h in [env.server] + list(env.clients):
