@@ -1,0 +1,195 @@
+"""Fig 11: fleet-scale engine — rounds/s and peak server memory vs fleet size.
+
+Sweeps the fleet axis (14 / 100 / 1k, full adds 10k) through the
+semisync scheduler in its fleet configuration — calendar event queue,
+vectorised flow solver, seeded cohort sampling (K=100 above 100
+clients) and the streaming O(model) hub — and compares against the
+un-vectorised pre-PR hot path (heapq queue, scalar solver, linear
+inbox scan, linear host lookup, dense O(clients) hub, full-fleet
+participation) re-enabled via the baseline context managers.
+
+Gates (the PR's acceptance criteria, re-checked on every bench run):
+
+* 14-client traces bit-identical: the new engine at paper scale must
+  replay the exact historical event sequence.
+* >= 5x rounds/s at 1k clients: the fleet configuration vs the pre-PR
+  path (the only way to run 1k clients before this change).
+* sub-linear peak server memory: the streaming hub holds the peak flat
+  while the dense hub grows with the fleet.
+
+Writes ``benchmarks/out/fig11_scale.json`` plus the BENCH_7 trajectory
+record ``benchmarks/out/BENCH_7.json`` (gated by benchmarks/trajectory.py
+against the committed ``benchmarks/BENCH_7.json``).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+
+BENCH_NAME = "fig11"
+BENCH_ORDER = 110  # after the paper figs, before the trajectory gate
+BENCH_IN_QUICK = True
+
+_OUT = os.path.join(os.path.dirname(__file__), "out", "fig11_scale.json")
+_BENCH7 = os.path.join(os.path.dirname(__file__), "out", "BENCH_7.json")
+
+FLEETS_QUICK = (14, 100, 1_000)
+FLEETS_FULL = (14, 100, 1_000, 10_000)
+ROUNDS = 5
+COHORT_K = 100  # fleets above this sample a seeded K-of-N cohort
+SPEEDUP_FLEET = 1_000  # the ISSUE's >= 5x gate point
+MIN_SPEEDUP = 5.0
+
+
+def _build(n: int, engine: str):
+    from repro.fl import make_strategy
+    from repro.fl.scheduler import FLScheduler
+    from repro.scenario import Scenario, build_runtime
+    from repro.scenario.spec import FleetSpec, StrategySpec, TopologySpec
+    from repro.sweep.runners import make_clients
+    # the pre-PR path has no cohort sampling: full-fleet participation
+    cohort = COHORT_K if engine == "new" and n > COHORT_K else 0
+    sc = Scenario(name=f"fig11_{n}_{engine}",
+                  topology=TopologySpec(kind="geo_distributed",
+                                        num_clients=n),
+                  fleet=FleetSpec(tier="small", local_steps=4,
+                                  cohort_k=cohort),
+                  strategy=StrategySpec(mode="semisync",
+                                        quorum_fraction=0.8))
+    sc.validate()
+    rt = build_runtime(sc)
+    clients = make_clients(rt, compression="none")
+    strategy = make_strategy(sc.fl_config(), n)
+    kw = dict(local_steps=4, cohort_k=cohort, cohort_seed=sc.seed)
+    if engine == "new":
+        kw.update(event_queue="calendar", streaming_hub=True)
+    else:
+        kw.update(event_queue="heap", streaming_hub=False)
+    return FLScheduler(rt.make_backend("server", compression="none"),
+                       clients, strategy, **kw), cohort
+
+
+def _legacy_ctx():
+    """The pre-PR hot path, re-enabled: scalar fluid solver, O(inbox)
+    recv scan, O(clients) host lookup (results identical, complexity
+    historical)."""
+    from repro.core.netsim import linear_host_lookup, scalar_transfers
+    from repro.core.transport import linear_inbox
+    stack = contextlib.ExitStack()
+    stack.enter_context(scalar_transfers())
+    stack.enter_context(linear_inbox())
+    stack.enter_context(linear_host_lookup())
+    return stack
+
+
+def _run(n: int, engine: str):
+    from repro.configs.paper_tiers import TIERS
+    from repro.core.message import VirtualPayload
+    from repro.core.netsim import MB
+    sched, cohort = _build(n, engine)
+    ctx = _legacy_ctx() if engine == "legacy" else contextlib.nullcontext()
+    t0 = time.perf_counter()
+    with ctx:
+        rep = sched.run(VirtualPayload(TIERS["small"].payload_bytes,
+                                       tag="fig11"),
+                        max_aggregations=ROUNDS)
+    wall = time.perf_counter() - t0
+    return {"fleet": n, "engine": engine, "cohort_k": cohort,
+            "rounds": rep.n_aggregations,
+            "wall_s": wall,
+            "rounds_per_s": rep.n_aggregations / wall,
+            "sim_time_s": rep.sim_time,
+            "peak_server_MB": sched.backend.endpoint.memory.peak / MB,
+            "trace": sched.loop.trace}
+
+
+def run(verbose: bool = True, quick: bool = False):
+    fleets = FLEETS_QUICK if quick else FLEETS_FULL
+    rows, points = [], {}
+    for n in fleets:
+        r = _run(n, "new")
+        points[n] = r
+        rows.append({"name": f"fig11/{n}/new",
+                     "rounds_per_s": r["rounds_per_s"],
+                     "peak_server_MB": r["peak_server_MB"]})
+
+    # gate 1: paper-scale trace bit-identity against the pre-PR path
+    legacy_14 = _run(14, "legacy")
+    trace_identical = points[14]["trace"] == legacy_14["trace"]
+    assert trace_identical, (
+        "fig11: 14-client trace diverged from the pre-PR heapq/dense path")
+
+    # gate 2: >= 5x rounds/s at 1k clients over the un-vectorised path
+    legacy_1k = _run(SPEEDUP_FLEET, "legacy")
+    rows.append({"name": f"fig11/{SPEEDUP_FLEET}/legacy",
+                 "rounds_per_s": legacy_1k["rounds_per_s"],
+                 "peak_server_MB": legacy_1k["peak_server_MB"]})
+    speedup = points[SPEEDUP_FLEET]["rounds_per_s"] \
+        / legacy_1k["rounds_per_s"]
+    assert speedup >= MIN_SPEEDUP, (
+        f"fig11: {speedup:.2f}x rounds/s at {SPEEDUP_FLEET} clients "
+        f"< the required {MIN_SPEEDUP:.0f}x over the un-vectorised path")
+
+    # gate 3: sub-linear peak server memory vs fleet size (the streaming
+    # hub holds the peak near-flat; linear growth would track fleet/14)
+    n_max = max(fleets)
+    mem_ratio = points[n_max]["peak_server_MB"] \
+        / max(points[14]["peak_server_MB"], 1e-9)
+    sublinear_bound = 0.25 * n_max / 14
+    assert mem_ratio <= sublinear_bound, (
+        f"fig11: peak server memory grew {mem_ratio:.1f}x from 14 to "
+        f"{n_max} clients (bound {sublinear_bound:.1f}x) — not sub-linear")
+
+    result = {
+        "bench": "fig11_scale", "rounds": ROUNDS,
+        "mode": "semisync", "cohort_k": COHORT_K,
+        "fleets": {str(n): {k: v for k, v in p.items() if k != "trace"}
+                   for n, p in points.items()},
+        "legacy_1k": {k: v for k, v in legacy_1k.items() if k != "trace"},
+        "speedup_1k": speedup,
+        "trace_identical_14": trace_identical,
+        "mem_ratio_max_fleet": mem_ratio,
+        "dense_peak_1k_MB": legacy_1k["peak_server_MB"],
+    }
+    os.makedirs(os.path.dirname(_OUT), exist_ok=True)
+    with open(_OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    # the BENCH_7 trajectory record: machine-portable ratios only
+    with open(_BENCH7, "w") as f:
+        json.dump({"bench": "BENCH_7", "recorded_at_pr": 7,
+                   "speedup_1k": speedup,
+                   "mem_ratio_max_fleet": mem_ratio,
+                   "max_fleet": n_max,
+                   "streaming_peak_MB": points[n_max]["peak_server_MB"],
+                   "dense_peak_1k_MB": legacy_1k["peak_server_MB"]},
+                  f, indent=2)
+    if verbose:
+        print("\n== Fig 11: fleet-scale engine (semisync, rounds/s and "
+              "peak server MB) ==")
+        print(f"{'fleet':>8s} {'cohort':>7s} {'rounds/s':>10s} "
+              f"{'peak MB':>9s}")
+        for n in fleets:
+            p = points[n]
+            print(f"{n:8d} {p['cohort_k'] or n:7d} "
+                  f"{p['rounds_per_s']:10.2f} {p['peak_server_MB']:9.1f}")
+        print(f"legacy @ {SPEEDUP_FLEET}: "
+              f"{legacy_1k['rounds_per_s']:.2f} rounds/s, "
+              f"{legacy_1k['peak_server_MB']:.1f} MB peak "
+              f"(heap+scalar+linear+dense, full fleet)")
+        print(f"speedup @ {SPEEDUP_FLEET}: {speedup:.1f}x "
+              f"(gate >= {MIN_SPEEDUP:.0f}x) | 14-client trace identical: "
+              f"{trace_identical} | mem {mem_ratio:.2f}x at {n_max} "
+              f"(sub-linear bound {sublinear_bound:.1f}x)")
+        print(f"[fig11] record -> {_OUT}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="fleet points 14/100/1k (full adds 10k)")
+    args = ap.parse_args()
+    run(quick=args.quick)

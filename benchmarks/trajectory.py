@@ -34,6 +34,10 @@ BENCH_IN_QUICK = True
 
 _RECORD = os.path.join(os.path.dirname(__file__), "BENCH_6.json")
 _OUT = os.path.join(os.path.dirname(__file__), "out", "BENCH_6.json")
+# BENCH_7 (PR 7, fleet-scale engine): written by benchmarks/fig11_scale.py
+# on every bench run; gated here against the committed record
+_RECORD7 = os.path.join(os.path.dirname(__file__), "BENCH_7.json")
+_OUT7 = os.path.join(os.path.dirname(__file__), "out", "BENCH_7.json")
 
 # encode bench: many small messages — the regime the batched API targets
 _N_MSGS, _N_ELEMS = 64, 10_000
@@ -187,6 +191,34 @@ def _gate(measured: dict, verbose: bool) -> None:
                   f"(recorded {want:.3f})")
 
 
+def _gate_bench7(verbose: bool) -> None:
+    """BENCH_7 (fleet-scale engine): gate fig11's measured ratios.
+
+    The fig11 study writes ``out/BENCH_7.json`` when it runs; in a bench
+    sweep it runs before this module (BENCH_ORDER). Skips quietly when
+    the measurement is absent (e.g. ``--only trajectory``). The gates
+    are the PR's absolute invariants — a >= 5x engine speedup at 1k
+    clients and a flat streaming-hub memory peak — not machine-relative
+    ratios, so they hold on any host."""
+    if not os.path.exists(_RECORD7) or not os.path.exists(_OUT7):
+        if verbose:
+            print("[trajectory] BENCH_7: no fig11 measurement/record to "
+                  "gate against")
+        return
+    with open(_OUT7) as f:
+        got = json.load(f)
+    assert got["speedup_1k"] >= 5.0, (
+        f"perf regression: fig11 engine speedup at 1k clients "
+        f"{got['speedup_1k']:.2f}x < the required 5x (BENCH_7)")
+    assert got["mem_ratio_max_fleet"] <= 1.5, (
+        f"perf regression: streaming-hub peak memory grew "
+        f"{got['mem_ratio_max_fleet']:.2f}x with fleet size (BENCH_7)")
+    if verbose:
+        print(f"[trajectory] gate ok: fig11 speedup_1k "
+              f"{got['speedup_1k']:.1f}x, mem ratio "
+              f"{got['mem_ratio_max_fleet']:.2f}x")
+
+
 def run(verbose: bool = True, quick: bool = False, fresh: bool = False,
         workers: int = 0):
     encode = _encode_bench()
@@ -210,6 +242,7 @@ def run(verbose: bool = True, quick: bool = False, fresh: bool = False,
               f"replay{par}")
         print(f"[trajectory] record -> {_OUT}")
     _gate(measured, verbose)
+    _gate_bench7(verbose)
     msg_bytes = encode["elems_per_msg"] * 4
     return [{"name": "trajectory/encode",
              "us_per_call": 1e6 * msg_bytes / (encode["batched_mb_s"]

@@ -30,7 +30,8 @@ import numpy as np
 from repro.compression.qsgd import (QuantState, qsgd_compress,
                                     qsgd_compress_flat_batch,
                                     qsgd_decompress)
-from repro.compression.topk import topk_compress, topk_decompress
+from repro.compression.topk import (topk_compress, topk_compress_flat_batch,
+                                    topk_decompress)
 from repro.core.message import (PackedPayload, TensorPayload, VirtualPayload)
 from repro.kernels import ops
 
@@ -240,6 +241,33 @@ class TopkCodec(BaseCodec):
         info = {"codec": self.name, "orig_nbytes": payload.nbytes,
                 "tree_meta": tree_meta(payload.tree)}
         return out, new_state, info
+
+    def encode_batch(self, payloads, states):
+        """Fused override (the QsgdCodec rule applied to sparsification):
+        every TensorPayload in the batch routes through one Pallas top-k
+        dispatch per (length, k) group (kernels/ops.topk_flat_batch);
+        per-item sparse wires, info and error-feedback transitions are
+        bit-identical to the per-message path. Non-tensor payloads fall
+        through to the scalar rules in declaration order."""
+        tensor_idx = [i for i, p in enumerate(payloads)
+                      if isinstance(p, TensorPayload)]
+        tensor_set = set(tensor_idx)
+        out = [None] * len(payloads)
+        for i, (p, s) in enumerate(zip(payloads, states)):
+            if i not in tensor_set:
+                out[i] = self.compress(p, s)
+        if tensor_idx:
+            flats = [ops.flatten_pytree(payloads[i].tree)[0]
+                     for i in tensor_idx]
+            sparse, new_states = topk_compress_flat_batch(
+                flats, [states[i] for i in tensor_idx], k_frac=self.k_frac)
+            for i, sp, ns in zip(tensor_idx, sparse, new_states):
+                sp = jax.tree.map(np.asarray, sp)
+                info = {"codec": self.name,
+                        "orig_nbytes": payloads[i].nbytes,
+                        "tree_meta": tree_meta(payloads[i].tree)}
+                out[i] = (PackedPayload(sp), ns, info)
+        return out
 
     def _decompress_tree(self, payload: PackedPayload, info):
         p = payload.packed

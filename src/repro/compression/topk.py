@@ -1,33 +1,55 @@
-"""Top-k magnitude sparsification with error feedback (Wangni et al. 2018)."""
+"""Top-k magnitude sparsification with error feedback (Wangni et al. 2018).
+
+The selection runs on the Pallas top-k kernel path (kernels/ops
+``topk_flat_batch``): messages sharing a (length, k) land in one fused
+kernel dispatch, and the sparse wire form — |value|-descending, ties to
+the lower index — is bit-identical to the historical per-message
+``jax.lax.top_k(|flat|)`` + gather, which remains the jitted reference
+the dispatch rule falls back to on CPU.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compression.qsgd import QuantState
 from repro.kernels import ops
 
 
-def topk_compress(tree, k_frac: float, state: Optional[QuantState] = None):
+def topk_compress(tree, k_frac: float, state: Optional[QuantState] = None,
+                  *, interpret=None):
     """-> (payload dict {idx, vals, n}, new_state, unflatten)."""
     flat, unflatten = ops.flatten_pytree(tree)
-    if state is not None:
-        flat = flat + state.error
-    k = max(1, int(flat.size * k_frac))
-    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
-    vals = flat[idx]
-    payload = {"idx": idx.astype(jnp.int32), "vals": vals, "n": flat.size}
-    if state is not None:
-        recon = jnp.zeros_like(flat).at[idx].set(vals)
-        state = QuantState(error=flat - recon)
-    return payload, state, unflatten
+    (payload,), (new_state,) = topk_compress_flat_batch(
+        [flat], [state], k_frac=k_frac, interpret=interpret)
+    return payload, new_state, unflatten
+
+
+def topk_compress_flat_batch(flats, states, *, k_frac: float,
+                             interpret=None):
+    """Batched core: [flat_i], [state_i|None] -> ([payload_i],
+    [new_state_i]). Same-shape messages share one fused top-k dispatch;
+    per-item payloads and error-feedback transitions are bit-identical
+    to ``topk_compress`` run message by message."""
+    fed = [f if s is None else f + s.error for f, s in zip(flats, states)]
+    payloads = ops.topk_flat_batch(fed, k_frac=k_frac, interpret=interpret)
+    new_states = [None] * len(flats)
+    for i, s in enumerate(states):
+        if s is None:
+            continue
+        recon = np.zeros(int(payloads[i]["n"]), np.float32)
+        recon[np.asarray(payloads[i]["idx"])] = np.asarray(
+            payloads[i]["vals"])
+        new_states[i] = QuantState(error=jnp.asarray(fed[i]) - recon)
+    return payloads, new_states
 
 
 def topk_decompress(payload, unflatten):
-    flat = jnp.zeros((payload["n"],), payload["vals"].dtype)
-    flat = flat.at[payload["idx"]].set(payload["vals"])
+    flat = jnp.zeros((int(payload["n"]),), jnp.float32)
+    flat = flat.at[jnp.asarray(payload["idx"])].set(
+        jnp.asarray(payload["vals"]))
     return unflatten(flat)
 
 

@@ -206,6 +206,12 @@ class FLConfig:
     # FedAsync-style adaptivity: scale alpha by each update's percentile
     # rank among observed staleness (fl/async_strategies.py)
     staleness_adaptive: bool = False
+    # fleet-scale knobs (fl/scheduler.py): seeded K-of-N cohort sampling
+    # for fedbuff/semisync (0 = whole fleet), and streaming hub
+    # aggregation (fold updates into one O(model) accumulator instead of
+    # buffering O(clients) payloads at the server)
+    cohort_k: int = 0
+    streaming_hub: bool = False
 
     # wire pipeline (core/channel.py): gradient compression on the client
     # update path — and, in hier mode, on the relay WAN hop only (the LAN
@@ -223,6 +229,7 @@ class FLConfig:
     link_loss_rate: float = 0.0  # per-chunk wire loss on every direct link
     region_quorum: float = 0.5  # hier: min live fraction per region
     relay_conns: int = 8  # hier: WAN-hop connection multiplexing per relay
+    relay_depth: int = 1  # hier: relay-tree levels (1 = single-tier)
 
     # -- the one FLConfig <-> Scenario conversion ------------------------
     def to_scenario(self, *, tier: str = "small", local_steps: int = 4,

@@ -91,16 +91,48 @@ class AutoBackend:
         """Per-message routing: each routed subset rides its own
         backend's concurrent dispatch (timing semantics per backend are
         unchanged — grpc's fluid contention, s3's single upload + N
-        GETs); arrivals come back in input order."""
+        GETs); arrivals come back in input order.
+
+        The direct subsets' payload encodes are fused into ONE
+        cross-channel ``encode_many`` dispatch spanning grpc and membuff
+        (their channels share codecs, so one broadcast wave is one
+        kernel call); each subset then receives its ready-made encodings
+        via ``_encs`` — wire bytes bit-identical to the per-backend
+        ``_encode_batch`` path. S3 keeps its own upload-once flow."""
+        from repro.core.channel import Encoded, encode_many
+        from repro.core.serialization import WireData
         routed: dict = {}
         for i, msg in enumerate(msgs):
             routed.setdefault(id(self._route(msg)), []).append(i)
         backends = {id(b): b for b in (self.grpc, self.membuff, self.s3)
                     if b is not None}
+        # one fused dispatch across every direct (non-s3) subset
+        direct = [(bid, i) for bid in routed
+                  if backends[bid] is not self.s3 for i in routed[bid]]
+        payload_items, payload_pos = [], []
+        encs: dict = {}  # msg index -> Encoded
+        for bid, i in direct:
+            m = msgs[i]
+            if m.payload is None:
+                ser = backends[bid].serializer
+                encs[i] = Encoded(wire=WireData(nbytes=256),
+                                  cost_s=ser.ser_time(256))
+            else:
+                payload_items.append((backends[bid].channel, m.payload,
+                                      m.receiver))
+                payload_pos.append(i)
+        for i, enc in zip(payload_pos, encode_many(payload_items)):
+            encs[i] = enc
         sender_done = now
         arrives = [0.0] * len(msgs)
         for bid, idxs in routed.items():
-            done, arr = backends[bid].broadcast([msgs[i] for i in idxs], now)
+            be = backends[bid]
+            sub = [msgs[i] for i in idxs]
+            if be is self.s3:
+                done, arr = be.broadcast(sub, now)
+            else:
+                done, arr = be.broadcast(sub, now,
+                                         _encs=[encs[i] for i in idxs])
             sender_done = max(sender_done, done)
             for i, a in zip(idxs, arr):
                 arrives[i] = a

@@ -252,11 +252,14 @@ class CommBackend:
         return h.start, h.arrive
 
     # ------------------------------------------------------------------
-    def _broadcast_transfers(self, msgs, now) -> Tuple[list, list]:
+    def _broadcast_transfers(self, msgs, now, _encs=None) -> Tuple[list, list]:
         """Common prep: stack-encode (sequential or parallel), build
-        transfers. Returns ([(Encoded, encode_done_t)], transfers)."""
+        transfers. Returns ([(Encoded, encode_done_t)], transfers).
+        ``_encs`` lets a routing backend (AUTO) hand in message encodings
+        it already fused across its sub-backends' channels — the wires
+        and charges are identical to ``_encode_batch`` here."""
         encs, ser_done = [], now
-        for enc in self._encode_batch(msgs):
+        for enc in (self._encode_batch(msgs) if _encs is None else _encs):
             if self.policy.ser_parallel:
                 enc_done = now + enc.cost_s
                 ser_done = max(ser_done, enc_done)
@@ -299,9 +302,9 @@ class CommBackend:
                 link_region=eff_region, tag=f"msg{msg.msg_id}"))
         return encs, transfers
 
-    def broadcast(self, msgs: Sequence[FLMessage], now: float):
+    def broadcast(self, msgs: Sequence[FLMessage], now: float, _encs=None):
         """Concurrent dispatch (the FL server's global-model distribution)."""
-        encs, transfers = self._broadcast_transfers(msgs, now)
+        encs, transfers = self._broadcast_transfers(msgs, now, _encs)
         mem = self.endpoint.memory
         allocs = []
         for msg, (enc, start) in zip(msgs, encs):

@@ -13,12 +13,15 @@ All bandwidths stored in bytes/s, latencies in seconds.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import heapq
 import math
 import zlib
 from typing import Optional, Sequence
+
+import numpy as np
 
 MB = 1024 ** 2
 GB = 1024 ** 3
@@ -103,12 +106,25 @@ class Environment:
     links: Optional[dict] = None  # (src_id, dst_id) -> Link
 
     def host(self, host_id: str) -> Host:
-        if host_id == self.server.host_id:
-            return self.server
-        for c in self.clients:
-            if c.host_id == host_id:
-                return c
-        raise KeyError(host_id)
+        # lazily built id -> Host index (frozen dataclass, so it lives in
+        # __dict__ via object.__setattr__): lookups are on every transfer's
+        # hot path and a linear scan is quadratic at fleet scale
+        if _LINEAR_LOOKUP[0]:  # pre-index baseline (fig11 speedup gate)
+            if host_id == self.server.host_id:
+                return self.server
+            for c in self.clients:
+                if c.host_id == host_id:
+                    return c
+            raise KeyError(host_id)
+        idx = self.__dict__.get("_host_idx")
+        if idx is None:
+            idx = {c.host_id: c for c in self.clients}
+            idx[self.server.host_id] = self.server
+            object.__setattr__(self, "_host_idx", idx)
+        try:
+            return idx[host_id]
+        except KeyError:
+            raise KeyError(host_id) from None
 
     def link(self, src_id: str, dst_id: str) -> Link:
         """The graph edge a (src -> dst) transmission rides."""
@@ -245,9 +261,58 @@ def _fair_rates(active: Sequence[Transfer]) -> dict:
     return rates
 
 
+# Fleet-scale dispatch: at and above this many transfers one fluid call
+# switches from the per-transfer scalar loop to the NumPy flow solver
+# (same max-min water-filling, vectorised + contended edges collapsed
+# into weighted flows). Below it — every paper-scale run — the scalar
+# path runs unconditionally, so small-fleet traces are bit-identical to
+# the pre-vectorisation code by construction.
+SIM_VECTORIZE_MIN = 64
+
+_FORCE_SCALAR = [0]
+
+
+@contextlib.contextmanager
+def scalar_transfers():
+    """Force the scalar reference solver regardless of transfer count
+    (the fig11 legacy baseline and the vec-vs-scalar parity tests)."""
+    _FORCE_SCALAR[0] += 1
+    try:
+        yield
+    finally:
+        _FORCE_SCALAR[0] -= 1
+
+
+# ``Environment.host`` baseline switch: >0 forces the pre-index linear
+# scan over the client tuple (identical results, O(fleet) per lookup).
+_LINEAR_LOOKUP = [0]
+
+
+@contextlib.contextmanager
+def linear_host_lookup():
+    """Force the historical O(clients) host scan — with
+    ``scalar_transfers`` and ``transport.linear_inbox``, the measurable
+    pre-PR hot path for the fig11 engine-speedup gate."""
+    _LINEAR_LOOKUP[0] += 1
+    try:
+        yield
+    finally:
+        _LINEAR_LOOKUP[0] -= 1
+
+
 def simulate_transfers(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
     """Event-driven fluid simulation. Sets ``finish`` on each transfer
-    (start + latency + contention-aware transmission time)."""
+    (start + latency + contention-aware transmission time).
+
+    Dispatches to the vectorised flow solver for fleet-scale calls
+    (``len >= SIM_VECTORIZE_MIN``, matches the scalar path within float
+    tolerance); the scalar loop below is the reference semantics."""
+    if len(transfers) >= SIM_VECTORIZE_MIN and not _FORCE_SCALAR[0]:
+        return _simulate_transfers_np(transfers)
+    return _simulate_transfers_scalar(transfers)
+
+
+def _simulate_transfers_scalar(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
     remaining = {id(t): float(t.nbytes) for t in transfers}
     begin = {id(t): t.start + t.latency() for t in transfers}
     pending = sorted(transfers, key=lambda t: begin[id(t)])
@@ -275,6 +340,176 @@ def simulate_transfers(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
                 t.finish = now + dt
                 active.remove(t)
         now += dt
+    return transfers
+
+
+def _fair_rates_np(caps, src, dst, w, up, dn):
+    """Vectorised max-min water-filling over weighted flows.
+
+    Mirrors ``_fair_rates`` exactly: each filling iteration computes
+    every unfrozen flow's share from the budgets as they stood at the
+    start of the iteration (the scalar loop does the same — it reads
+    ``up``/``down`` before applying any increment of the round), then
+    applies all increments at once. A flow of weight m stands in for m
+    identical scalar transfers: it counts m times in the per-host fair
+    split and drains m shares from each budget, which is exactly what
+    the m members would have done one by one.
+
+    caps/src/dst/w are per-flow; up/dn are per-host budget arrays
+    (mutated). Returns per-flow member rates (not multiplied by w)."""
+    m = caps.size
+    rates = np.zeros(m)
+    unfrozen = np.ones(m, bool)
+    nh = up.size
+    for _ in range(m + 2):
+        act = np.nonzero(unfrozen)[0]
+        if act.size == 0:
+            break
+        wu = np.bincount(src[act], weights=w[act], minlength=nh)
+        wd = np.bincount(dst[act], weights=w[act], minlength=nh)
+        share = np.minimum(np.minimum(up[src[act]] / wu[src[act]],
+                                      dn[dst[act]] / wd[dst[act]]),
+                           caps[act] - rates[act])
+        share = np.maximum(share, 0.0)
+        np.subtract.at(up, src[act], share * w[act])
+        np.subtract.at(dn, dst[act], share * w[act])
+        rates[act] += share
+        newly = (rates[act] >= caps[act] - 1e-9) | (share <= 1e-9)
+        if not newly.any():
+            break
+        unfrozen[act[newly]] = False
+    return rates
+
+
+def _simulate_transfers_np(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
+    """NumPy twin of the scalar fluid loop for fleet-scale fan-in/out.
+
+    Two ideas on top of straight vectorisation:
+
+    * **host factorisation** — per-client Transfer objects reduce to
+      integer (src, dst) host indices; the fair split becomes two
+      ``bincount``s instead of the scalar loop's O(active^2) host scans.
+    * **flow collapsing (aggregate link modeling)** — a broadcast or
+      upload wave through one shared bottleneck edge is m transfers that
+      differ only in their singleton far end. They are collapsed into
+      ONE weighted flow (weight m, synthetic far-end budget m*B), so the
+      contended edge is charged once per wave, not once per client. By
+      symmetry of max-min fairness the m members always receive equal
+      rates and finish together, so the collapse is exact, not an
+      approximation.
+
+    Matches ``_simulate_transfers_scalar`` within float tolerance
+    (summation order differs); paper-scale calls never route here."""
+    n = len(transfers)
+    if n == 0:
+        return transfers
+
+    host_ix: dict = {}
+    up_b: list = []
+    dn_b: list = []
+
+    def hid(h):
+        i = host_ix.get(h.host_id)
+        if i is None:
+            i = host_ix[h.host_id] = len(up_b)
+            up_b.append(float(h.uplink))
+            dn_b.append(float(h.downlink))
+        return i
+
+    src = np.fromiter((hid(t.src) for t in transfers), np.int64, n)
+    dst = np.fromiter((hid(t.dst) for t in transfers), np.int64, n)
+    caps = np.fromiter((t.rate_cap() for t in transfers), float, n)
+    begin = np.fromiter((t.start + t.latency() for t in transfers), float, n)
+    sizes = np.fromiter((float(t.nbytes) for t in transfers), float, n)
+
+    # ---- collapse singleton-end groups into weighted flows ------------
+    # a host is "singleton" when it appears in exactly one transfer: its
+    # budget is private to that transfer, so two transfers sharing the
+    # OTHER end and all rate-relevant scalars are exchangeable.
+    occur = np.bincount(np.concatenate([src, dst]), minlength=len(up_b))
+    f_key: dict = {}
+    f_members: list = []  # per flow: list of transfer indices
+    f_src: list = []
+    f_dst: list = []
+    f_syn: list = []  # per flow: None | ("up"|"dn", budget B) synthetic end
+    for i in range(n):
+        si, di = src[i], dst[i]
+        if occur[di] == 1:  # fan-out: shared src, private dst
+            key = ("out", si, caps[i], begin[i], sizes[i],
+                   up_b[di], dn_b[di])
+        elif occur[si] == 1:  # fan-in: private src, shared dst
+            key = ("in", di, caps[i], begin[i], sizes[i],
+                   up_b[si], dn_b[si])
+        else:
+            key = ("solo", i)
+        fi = f_key.get(key)
+        if fi is None:
+            fi = f_key[key] = len(f_members)
+            f_members.append([i])
+            f_src.append(si)
+            f_dst.append(di)
+            f_syn.append(None if key[0] == "solo" else key[0])
+        else:
+            f_members[fi].append(i)
+    nf = len(f_members)
+
+    # synthetic hosts: a collapsed flow's private ends merge into one
+    # host with m-times the budget (m members each brought their own B)
+    fsrc = np.empty(nf, np.int64)
+    fdst = np.empty(nf, np.int64)
+    fw = np.empty(nf, float)
+    first = np.fromiter((mem[0] for mem in f_members), np.int64, nf)
+    for fi, mem in enumerate(f_members):
+        m = len(mem)
+        fw[fi] = m
+        si, di = f_src[fi], f_dst[fi]
+        if m > 1:
+            if f_syn[fi] == "out":  # private dst hosts merge
+                di = len(up_b)
+                up_b.append(m * up_b[f_dst[fi]])
+                dn_b.append(m * dn_b[f_dst[fi]])
+            else:  # "in": private src hosts merge
+                si = len(up_b)
+                up_b.append(m * up_b[f_src[fi]])
+                dn_b.append(m * dn_b[f_src[fi]])
+        fsrc[fi] = si
+        fdst[fi] = di
+    fcaps = caps[first]
+    fbegin = begin[first]
+    fsizes = sizes[first]
+    up0 = np.asarray(up_b, float)
+    dn0 = np.asarray(dn_b, float)
+
+    # ---- event loop (same structure as the scalar path) ---------------
+    remaining = fsizes.copy()
+    finish = np.full(nf, math.inf)
+    order = np.argsort(fbegin, kind="stable")
+    sb = fbegin[order]
+    active = np.zeros(nf, bool)
+    now = sb[0]
+    pi = 0
+    while pi < nf or active.any():
+        while pi < nf and sb[pi] <= now + 1e-12:
+            active[order[pi]] = True
+            pi += 1
+        act = np.nonzero(active)[0]
+        if act.size == 0:
+            now = sb[pi]
+            continue
+        rates = _fair_rates_np(fcaps[act], fsrc[act], fdst[act], fw[act],
+                               up0.copy(), dn0.copy())
+        t_fin = np.min(remaining[act] / np.maximum(rates, 1e-9))
+        t_next = sb[pi] - now if pi < nf else math.inf
+        dt = min(t_fin, t_next)
+        remaining[act] -= rates * dt
+        done = act[remaining[act] <= 1e-6]
+        finish[done] = now + dt
+        active[done] = False
+        now += dt
+
+    for fi, mem in enumerate(f_members):
+        for i in mem:  # collapsed members finish together (symmetry)
+            transfers[i].finish = finish[fi]
     return transfers
 
 

@@ -8,6 +8,7 @@ virtual ones — reproducing Fig 2 (bottom) and Fig 4c.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import itertools
@@ -17,6 +18,22 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.message import FLMessage
 from repro.core.netsim import Environment, Transfer, simulate_transfers
 from repro.core.serialization import WireData
+
+# ``Endpoint.pop_ready`` baseline switch, mirroring
+# ``netsim.scalar_transfers``: >0 forces the historical full-inbox scan
+# instead of the heap fast path (identical results, O(inbox) per recv).
+_LINEAR_INBOX = [0]
+
+
+@contextlib.contextmanager
+def linear_inbox():
+    """Force the pre-heap O(inbox) ``pop_ready`` scan — the measurable
+    un-vectorized baseline for the fig11 engine-speedup gate."""
+    _LINEAR_INBOX[0] += 1
+    try:
+        yield
+    finally:
+        _LINEAR_INBOX[0] -= 1
 
 
 class MemoryMeter:
@@ -72,10 +89,49 @@ class Delivery:
     chunk: Optional[tuple] = None
 
 
+class Inbox:
+    """Pending deliveries with a (arrive_time, seq) heap over the
+    chunk-free entries, so ``pop_ready`` costs O(ready · log n) instead
+    of re-scanning the whole inbox on every recv — the scan was the
+    scheduler's top hot spot at 1k+ clients (O(fleet²) overall).
+
+    Keeps the historical list surface (append/extend/clear/iter/len;
+    iteration yields insertion order) so fault tests can still inject
+    and inspect raw deliveries. Chunked deliveries stay in a plain list:
+    they need group-wise reassembly anyway and only exist when
+    ``chunk_mb`` is set."""
+
+    def __init__(self):
+        self._simple: List[tuple] = []  # heap of (arrive_time, seq, d)
+        self._chunks: List[tuple] = []  # [(seq, d)] for chunked entries
+        self._seq = itertools.count()
+
+    def append(self, d: Delivery):
+        if d.chunk is None:
+            heapq.heappush(self._simple, (d.arrive_time, next(self._seq), d))
+        else:
+            self._chunks.append((next(self._seq), d))
+
+    def extend(self, ds):
+        for d in ds:
+            self.append(d)
+
+    def clear(self):
+        self._simple.clear()
+        self._chunks.clear()
+
+    def __len__(self):
+        return len(self._simple) + len(self._chunks)
+
+    def __iter__(self):
+        entries = [(s, d) for _, s, d in self._simple] + self._chunks
+        return iter(d for _, d in sorted(entries, key=lambda e: e[0]))
+
+
 class Endpoint:
     def __init__(self, host_id: str):
         self.host_id = host_id
-        self.inbox: List[Delivery] = []
+        self.inbox = Inbox()
         self.memory = MemoryMeter()
         # transfer ids already released to recv: a duplicate chunk or a
         # late retransmit of a completed/superseded transfer is dropped on
@@ -92,9 +148,7 @@ class Endpoint:
         original on the wire) and chunks of completed transfers are
         discarded here — they must never double-deliver."""
         groups: Dict[int, Dict[int, Delivery]] = {}
-        for d in self.inbox:
-            if d.chunk is None:
-                continue
+        for _, d in self.inbox._chunks:
             idx, _, xid = d.chunk
             if xid in self._done_xids:
                 continue
@@ -110,34 +164,46 @@ class Endpoint:
         return groups
 
     def pop_ready(self, now: float) -> List[Delivery]:
-        ready, keep = [], []
-        groups = self._chunk_groups()
-        for d in self.inbox:
-            if d.chunk is None:
-                if d.arrive_time <= now + 1e-12:
-                    ready.append(d)
+        # chunk-free fast path: pop the (arrive_time, seq) heap — same
+        # (time, insertion-order) release order the historical full-inbox
+        # scan + stable sort produced, without touching unready entries
+        ready = []
+        heap = self.inbox._simple
+        if _LINEAR_INBOX[0]:
+            keep = []
+            for t, _, d in sorted(heap, key=lambda e: e[1]):
+                (ready if t <= now + 1e-12 else keep).append(d)
+            heap.clear()
+            for d in keep:
+                heapq.heappush(heap, (d.arrive_time,
+                                      next(self.inbox._seq), d))
+        else:
+            while heap and heap[0][0] <= now + 1e-12:
+                ready.append(heapq.heappop(heap)[2])
+        if self.inbox._chunks:
+            keep: List[Delivery] = []
+            for xid, got in self._chunk_groups().items():
+                ds = list(got.values())
+                n_total = ds[0].chunk[1]
+                last = max(d.arrive_time for d in ds)
+                if len(ds) == n_total and last <= now + 1e-12:
+                    wire = next(d.wire for d in ds if d.wire is not None)
+                    ready.append(Delivery(ds[0].msg, wire, last))
+                    self._done_xids[xid] = None
+                    while len(self._done_xids) > self._done_cap:
+                        self._done_xids.popitem(last=False)
                 else:
-                    keep.append(d)
-        for xid, got in groups.items():
-            ds = list(got.values())
-            n_total = ds[0].chunk[1]
-            last = max(d.arrive_time for d in ds)
-            if len(ds) == n_total and last <= now + 1e-12:
-                wire = next(d.wire for d in ds if d.wire is not None)
-                ready.append(Delivery(ds[0].msg, wire, last))
-                self._done_xids[xid] = None
-                while len(self._done_xids) > self._done_cap:
-                    self._done_xids.popitem(last=False)
-            else:
-                keep.extend(ds)
-        self.inbox = keep
+                    keep.extend(ds)
+            # rebuild with fresh seqs: matches the historical rebuilt-list
+            # order (kept chunk groups follow the surviving simples)
+            self.inbox._chunks = [(next(self.inbox._seq), d) for d in keep]
         return sorted(ready, key=lambda d: d.arrive_time)
 
     def pending_times(self) -> List[float]:
         """Message-complete times of everything still in the inbox (a
         chunked transfer counts once, at its last chunk's arrival;
         completed transfers' stray retransmits count never)."""
-        times = [d.arrive_time for d in self.inbox if d.chunk is None]
+        times = [t for t, _, _ in self.inbox._simple]
         for got in self._chunk_groups().values():
             times.append(max(d.arrive_time for d in got.values()))
         return times

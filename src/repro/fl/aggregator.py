@@ -3,6 +3,9 @@
 ``fedavg``            — weighted average of client pytrees.
 ``fedavg_quantized``  — aggregates int8 client payloads with fused
                         dequant+reduce (never materialises f32 copies).
+``StreamingAccumulator`` — O(model) running fold for the fleet-scale hub
+                        (one ``acc += eff * update`` per arrival instead
+                        of buffering O(clients) update trees).
 ``staleness_weight``  — FedBuff-style polynomial discount for async modes.
 ``merge_global``      — staleness-damped server update (event-driven modes).
 Aggregation compute time is measured for the Fig 5 'aggregation' bars.
@@ -33,6 +36,65 @@ def fedavg_quantized(packed_list: Sequence[dict], weights, unflatten, *,
                                   interpret=interpret)
     agg = jax.block_until_ready(agg)
     return agg, time.perf_counter() - t0
+
+
+class StreamingAccumulator:
+    """O(model) streaming replacement for the hub's dense update buffer.
+
+    ``fold`` adds one effective-weight-scaled update into a flat f32
+    running sum (``ops.fedavg_accumulate_flat`` — the fedavg_reduce
+    streaming-accumulate kernel path); ``merged`` divides by the summed
+    effective weight, which equals the dense ``fedavg(trees, eff)``
+    normalised average within float tolerance (tested). Virtual payloads
+    fold as bookkeeping only (count / weight sums), so paper-scale runs
+    keep their analytic merge timing.
+    """
+
+    def __init__(self):
+        self.acc = None  # flat f32 running sum of eff-weighted updates
+        self.unflatten = None
+        self.sum_eff = 0.0
+        self.sum_weight = 0.0
+        self.count = 0  # client updates folded (records' ``count`` sum)
+        self.agg_s = 0.0  # accumulated fold compute seconds
+
+    def fold(self, rec, alpha: float, *, interpret=None):
+        """rec: scheduler UpdateRecord; alpha: its staleness discount."""
+        from repro.core.message import TensorPayload
+        eff = rec.weight * float(alpha)
+        self.sum_eff += eff
+        self.sum_weight += rec.weight
+        self.count += rec.count
+        if isinstance(rec.payload, TensorPayload):
+            t0 = time.perf_counter()
+            flat, unflatten = ops.flatten_pytree(rec.payload.tree)
+            if self.acc is None:
+                self.unflatten = unflatten
+                self.acc = ops.fedavg_accumulate_flat(
+                    np.zeros(flat.shape[0], np.float32), flat, eff,
+                    interpret=interpret)
+            else:
+                self.acc = ops.fedavg_accumulate_flat(
+                    self.acc, flat, eff, interpret=interpret)
+            jax.block_until_ready(self.acc)
+            self.agg_s += time.perf_counter() - t0
+
+    def merged(self):
+        """-> (merged pytree | None, measured agg seconds)."""
+        if self.acc is None or self.sum_eff <= 0:
+            return None, self.agg_s
+        t0 = time.perf_counter()
+        tree = self.unflatten(self.acc / np.float32(self.sum_eff))
+        tree = jax.block_until_ready(tree)
+        return tree, self.agg_s + time.perf_counter() - t0
+
+    def reset(self):
+        self.acc = None
+        self.unflatten = None
+        self.sum_eff = 0.0
+        self.sum_weight = 0.0
+        self.count = 0
+        self.agg_s = 0.0
 
 
 def simulated_agg_time(nbytes: int, n_clients: int,

@@ -21,6 +21,7 @@ the event flow.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -108,7 +109,7 @@ class FedBuffStrategy(AggregationStrategy):
         if self.max_staleness and rec.staleness > self.max_staleness:
             sched.discarded += 1
         else:
-            self.buffer.append(rec)
+            self.buffer.append(sched.hub_fold(rec, now))
             if len(self.buffer) >= self.buffer_k:
                 recs, self.buffer = self.buffer, []
                 t = sched.aggregate(recs, now)
@@ -136,9 +137,10 @@ class SemiSyncStrategy(AggregationStrategy):
         self._arm(sched, now)
 
     def _need(self, sched) -> int:
-        # clamp like the sync server — against the *live* fleet: a quorum
-        # over departed clients would stall the round forever
-        n_live = sum(1 for c in sched.clients if sched.is_up(c.client_id))
+        # clamp like the sync server — against the *eligible* fleet (live
+        # cohort members under cohort sampling, the live fleet otherwise):
+        # a quorum over departed or unsampled clients would stall forever
+        n_live = sched.eligible_count()
         need = int(np.ceil(self.quorum_fraction * max(n_live, 1)))
         return min(max(1, need), max(n_live, 1))
 
@@ -149,7 +151,7 @@ class SemiSyncStrategy(AggregationStrategy):
                         round_id=self.round_id)
 
     def on_update(self, sched, rec: UpdateRecord, now: float):
-        self.collected.append(rec)
+        self.collected.append(sched.hub_fold(rec, now))
         if len(self.collected) >= self._need(sched):
             self._close(sched, now)
 
@@ -200,10 +202,19 @@ class HierarchicalStrategy(AggregationStrategy):
     def __init__(self, *, relay_link: Region = LAN_TCP, relay_conns: int = 8,
                  staleness_exponent: float = 0.0, wan_compression=None,
                  wan_wire_codec=None, chunk_mb: float = 0.0,
-                 region_quorum: float = 0.5):
+                 region_quorum: float = 0.5, relay_depth: int = 1):
         self.relay_link = relay_link
         self.relay_conns = relay_conns
         self.staleness_exponent = staleness_exponent
+        # reduction-tree depth on the upload side: 1 = every region relay
+        # ships straight to the hub (the historical single-tier path,
+        # bit-for-bit); D > 1 inserts D-1 tiers of super-relays between
+        # the region relays and the hub, each folding its children's
+        # partials before one upstream hop. The downlink stays
+        # single-tier — the hub's broadcast already fans out through the
+        # region relays, and multi-download (S3) makes a nested downlink
+        # redundant.
+        self.relay_depth = max(1, int(relay_depth))
         # relay-level quorum: a region with fewer than
         # ceil(region_quorum * members) live clients is *skipped* for the
         # round (its relay sends nothing, the hub does not wait) and
@@ -238,7 +249,63 @@ class HierarchicalStrategy(AggregationStrategy):
         # (set in _begin_round; fan-out, member uploads and the WAN
         # partial must all agree on the relay host, also under churn)
         self._relay_host: Dict[str, str] = {}
+        self._build_tree()
         self._begin_round(sched, now)
+
+    # -- relay tree (relay_depth > 1) --------------------------------------
+    def _build_tree(self):
+        """Chunk the sorted region list into D-1 tiers of super-relays.
+
+        Tier t groups the previous tier's nodes into chunks of
+        ``fan = max(2, ceil(sqrt(len)))``; a tier that collapses to one
+        node ends the tree early (more depth would only relabel it).
+        ``_parent`` maps every node (region name or tier node id) to its
+        parent, 'hub' at the top."""
+        self._parent = {g: "hub" for g in self.groups}
+        self._children: Dict[str, list] = {}
+        self._top = list(self.groups)
+        if self.relay_depth <= 1:
+            return
+        level = list(self.groups)
+        for tier in range(1, self.relay_depth):
+            if len(level) <= 1:
+                break
+            fan = max(2, math.ceil(len(level) ** 0.5))
+            nxt = []
+            for i in range(0, len(level), fan):
+                node = f"tier{tier}.{i // fan}"
+                kids = level[i:i + fan]
+                self._children[node] = kids
+                for kd in kids:
+                    self._parent[kd] = node
+                nxt.append(node)
+            level = nxt
+        for node in level:
+            self._parent[node] = "hub"
+        self._top = level
+
+    def _desc_groups(self, node: str) -> list:
+        """Descendant region names of ``node`` in region-sorted order."""
+        if node in self.groups:
+            return [node]
+        out = []
+        for kd in self._children[node]:
+            out.extend(self._desc_groups(kd))
+        return out
+
+    def _node_host(self, node: str) -> str:
+        """The host a tree node runs on: a region's elected relay, or —
+        for a super-relay — the relay of its first round-active
+        descendant region (falling back to the first descendant when no
+        round is open)."""
+        if node in self.groups:
+            return self._relay_id(node)
+        active = getattr(self, "_round_active", None)
+        desc = self._desc_groups(node)
+        for g in desc:
+            if active is None or g in active:
+                return self._relay_id(g)
+        return self._relay_id(desc[0])
 
     def _wan_conns(self) -> int:
         return max(self._be.policy.conns_per_transfer, self.relay_conns)
@@ -250,12 +317,15 @@ class HierarchicalStrategy(AggregationStrategy):
         return self._relay_host.get(group, self.groups[group][0].client_id)
 
     def _relay_backend(self, group: str):
-        """The relay's channel: same backend family as the deployment,
-        colocated with the elected relay host, WAN hop multiplexed over
+        return self._backend_at(self._relay_id(group))
+
+    def _backend_at(self, host_id: str):
+        """A relay's channel: same backend family as the deployment,
+        colocated with ``host_id`` (a region's elected relay or a
+        super-relay tier node's host), WAN hop multiplexed over
         ``relay_conns`` connections. Cached per host — if churn migrates
         a region's relay, the new host starts a fresh channel (and a
         fresh error-feedback stream, as a real relay would)."""
-        host_id = self._relay_id(group)
         be = self._relay_be.get(host_id)
         if be is None:
             import dataclasses as _dc
@@ -343,7 +413,25 @@ class HierarchicalStrategy(AggregationStrategy):
         self.pending = {g: {c.client_id for c in cs}
                         for g, cs in active.items()}
         self.partials: Dict[str, List[UpdateRecord]] = {g: [] for g in active}
-        self.expected = set(active)  # groups the hub still waits on
+        self._round_active = set(active)
+        if self.relay_depth > 1:
+            # arm the super-relay tiers: each node waits on the children
+            # with at least one round-active descendant region; the hub
+            # waits on the active top-tier nodes
+            self._node_expected: Dict[str, set] = {}
+            self._node_partials: Dict[str, List[UpdateRecord]] = {}
+            for nd, kids in self._children.items():
+                exp = {kd for kd in kids
+                       if any(g in self._round_active
+                              for g in self._desc_groups(kd))}
+                if exp:
+                    self._node_expected[nd] = exp
+                    self._node_partials[nd] = []
+            self.expected = {nd for nd in self._top
+                             if any(g in self._round_active
+                                    for g in self._desc_groups(nd))}
+        else:
+            self.expected = set(active)  # groups the hub still waits on
         self.hub_records: List[UpdateRecord] = []
         be, env = self._be, sched.env
         nbytes = sched.global_payload.nbytes
@@ -449,10 +537,8 @@ class HierarchicalStrategy(AggregationStrategy):
         if not recs:
             member = self.groups[group][0]
             region = be._link_region(member.client_id)
-            sched.loop.call_at(
-                now + be._overhead(region) + region.latency,
-                f"hier-skip<{group}", self._on_hub_partial, rec=None,
-                group=group)
+            self._notify_skip(group,
+                              now + be._overhead(region) + region.latency)
             return
         weight = float(sum(r.weight for r in recs))
         trees = [r.payload.tree for r in recs
@@ -472,18 +558,36 @@ class HierarchicalStrategy(AggregationStrategy):
         self._send_partial(group, payload, weight, recs[0].version,
                            len(recs), now + agg_s, 0)
 
+    def _notify_skip(self, node: str, t: float):
+        """Resolve ``node`` as a skip at its parent — the hub for
+        single-tier trees (and top-tier nodes), the next super-relay up
+        otherwise, so a churned-empty region still closes every tier."""
+        parent = self._parent.get(node, "hub")
+        if parent == "hub":
+            self.sched.loop.call_at(t, f"hier-skip<{node}",
+                                    self._on_hub_partial, rec=None,
+                                    group=node)
+        else:
+            self.sched.loop.call_at(t, f"hier-skip<{node}",
+                                    self._on_node_skip, node=parent,
+                                    child=node)
+
     def _send_partial(self, group: str, payload, weight: float,
                       version: int, count: int, t: float, attempt: int):
-        """Ship one region's reduced partial to the hub over the relay's
-        real backend channel (graph edge relay-host -> hub): compression /
-        wire codec / chunking ride the channel, the fabric's fault model
-        can lose chunks, and a transfer the model fails outright is
-        re-issued with bounded retries before the region resolves as a
-        skip — the hub never wedges on a dead WAN edge."""
+        """Ship one tree node's reduced partial one hop upstream over the
+        node's real backend channel (graph edge node-host -> parent
+        host, the hub at the top): compression / wire codec / chunking
+        ride the channel, the fabric's fault model can lose chunks, and
+        a transfer the model fails outright is re-issued with bounded
+        retries before the node resolves as a skip — the hub never
+        wedges on a dead WAN edge. ``group`` is a region name or a
+        ``tierN.M`` super-relay node id."""
         sched = self.sched
-        relay = self._relay_backend(group)
-        msg = FLMessage("relay_partial", relay.host_id,
-                        sched.backend.host_id, round=version,
+        parent = self._parent.get(group, "hub")
+        relay = self._backend_at(self._node_host(group))
+        dest = sched.backend.host_id if parent == "hub" \
+            else self._node_host(parent)
+        msg = FLMessage("relay_partial", relay.host_id, dest, round=version,
                         payload=payload,
                         metadata={"group": group, "weight": weight,
                                   "count": count, "version": version})
@@ -498,12 +602,68 @@ class HierarchicalStrategy(AggregationStrategy):
                     c=count, a=attempt:
                     self._send_partial(g, p, w, v, c, now, a + 1))
             else:
-                sched.loop.call_at(h.start, f"hier-skip<{group}",
-                                   self._on_hub_partial, rec=None,
-                                   group=group)
+                self._notify_skip(group, h.start)
             return
-        sched.loop.call_at(h.inbox_t, f"hier-hub<{group}",
-                           self._on_hub_arrival)
+        if parent == "hub":
+            sched.loop.call_at(h.inbox_t, f"hier-hub<{group}",
+                               self._on_hub_arrival)
+        else:
+            sched.loop.call_at(h.inbox_t, f"hier-tier<{parent}",
+                               self._on_tier_arrival, node=parent,
+                               be=self._backend_at(dest))
+
+    # -- super-relay tiers (relay_depth > 1) -------------------------------
+    def _on_tier_arrival(self, now: float, node: str, be):
+        """Drain a super-relay's endpoint: child partials decode by their
+        recorded wire stages, then join the node's fold at their
+        decode-complete time (the hub-arrival flow, one tier down)."""
+        sched = self.sched
+        for msg, ready in be.recv(now):
+            if msg.msg_type != "relay_partial":
+                continue
+            rec = UpdateRecord(client=None, payload=msg.payload,
+                               weight=float(msg.metadata["weight"]),
+                               version=int(msg.metadata["version"]),
+                               staleness=0, arrive_t=ready,
+                               count=int(msg.metadata["count"]))
+            sched.loop.call_at(ready, f"hier-fold<{node}",
+                               self._on_node_partial, node=node, rec=rec,
+                               child=msg.metadata["group"])
+
+    def _on_node_skip(self, now: float, node: str, child: str):
+        self._on_node_partial(now, node=node, rec=None, child=child)
+
+    def _on_node_partial(self, now: float, node: str,
+                         rec: Optional[UpdateRecord], child: str):
+        """One child of super-relay ``node`` resolved (partial or skip);
+        when the last one lands the node folds and ships upstream."""
+        exp = self._node_expected.get(node)
+        if exp is None or child not in exp:
+            return  # superseded round
+        exp.discard(child)
+        if rec is not None:
+            self._node_partials[node].append(rec)
+        if exp:
+            return
+        recs = self._node_partials.pop(node)
+        del self._node_expected[node]
+        if not recs:  # every child skipped: propagate upward
+            self._notify_skip(node, now)
+            return
+        weight = float(sum(r.weight for r in recs))
+        count = int(sum(r.count for r in recs))
+        version = recs[0].version
+        trees = [r.payload.tree for r in recs
+                 if isinstance(r.payload, TensorPayload)]
+        if len(trees) == len(recs):
+            partial, agg_s = fedavg(trees, [r.weight for r in recs])
+            payload = TensorPayload(partial)
+        else:
+            nb = max(r.payload.nbytes for r in recs)
+            agg_s = simulated_agg_time(nb, len(recs))
+            payload = VirtualPayload(nb, tag=f"relay:{node}:v{version}")
+        self._send_partial(node, payload, weight, version, count,
+                           now + agg_s, 0)
 
     def _on_hub_arrival(self, now: float):
         """Drain the hub's endpoint: the relay partial decodes by its
@@ -568,6 +728,7 @@ def make_strategy(cfg, num_clients: Optional[int] = None,
         overrides.setdefault("region_quorum",
                              getattr(cfg, "region_quorum", 0.5))
         overrides.setdefault("relay_conns", getattr(cfg, "relay_conns", 8))
+        overrides.setdefault("relay_depth", getattr(cfg, "relay_depth", 1))
         return HierarchicalStrategy(
             staleness_exponent=cfg.staleness_exponent, **overrides)
     raise KeyError(f"unknown scheduler mode '{mode}' "

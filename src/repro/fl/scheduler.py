@@ -82,11 +82,102 @@ class AsyncRunReport:
     n_late_refetches: int = 0
 
 
-class EventLoop:
-    """Deterministic discrete-event loop: (time, seq)-ordered heap."""
+class _CalendarQueue:
+    """Calendar-queue bucket structure over ``(time, seq, ...)`` entries.
 
-    def __init__(self):
-        self._q: list = []
+    Events land in fixed-width time slots keyed ``int(t // width)``; a
+    small heap of slot keys (lazy-created, dropped once drained) finds
+    the next non-empty slot. ``EventLoop.call_at`` clamps times to
+    >= now, so no insert can land before the slot currently draining and
+    the cursor advances monotonically. A slot's list is heapified once
+    when it becomes current; same-slot inserts after that heap-push.
+
+    Pop order is exactly the flat heap's global ``(time, seq)`` order:
+    slots partition the time axis and within a slot the heap orders by
+    ``(time, seq)`` — so the two queue disciplines produce bit-identical
+    traces (tested, and asserted by benchmarks/fig11_scale.py).
+
+    The win over one big heap is batch behaviour at fleet scale: a
+    broadcast wave inserts thousands of arrivals into a handful of
+    future slots as plain appends (O(1) each, no sift through the events
+    of every other slot), and only the slot being drained pays heap
+    discipline.
+    """
+
+    def __init__(self, width: float = 1.0):
+        self.width = float(width)
+        self._buckets: dict = {}  # slot key -> event list (heap if current)
+        self._keys: list = []  # min-heap of pending slot keys
+        self._cur: Optional[int] = None  # slot currently draining
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def push(self, item) -> None:
+        key = int(item[0] // self.width)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = []
+            heapq.heappush(self._keys, key)
+        if key == self._cur:
+            heapq.heappush(bucket, item)
+        else:
+            bucket.append(item)
+        self._n += 1
+
+    def _front(self):
+        """The current slot's heap, advancing past drained slots."""
+        while True:
+            if self._cur is not None:
+                bucket = self._buckets.get(self._cur)
+                if bucket and self._keys and self._keys[0] < self._cur:
+                    # an earlier slot appeared (a push after a bounded
+                    # run(until) clamped to an older now): re-queue the
+                    # current slot and re-select the true minimum
+                    heapq.heappush(self._keys, self._cur)
+                    self._cur = None
+                    continue
+                if bucket:
+                    return bucket
+                self._buckets.pop(self._cur, None)
+                self._cur = None
+            if not self._keys:
+                return None
+            key = heapq.heappop(self._keys)
+            bucket = self._buckets.get(key)
+            if not bucket:
+                self._buckets.pop(key, None)
+                continue
+            heapq.heapify(bucket)
+            self._cur = key
+            return bucket
+
+    def peek(self):
+        bucket = self._front()
+        return bucket[0] if bucket else None
+
+    def pop(self):
+        item = heapq.heappop(self._front())
+        self._n -= 1
+        return item
+
+
+class EventLoop:
+    """Deterministic discrete-event loop, (time, seq)-ordered.
+
+    ``queue`` selects the event structure: ``"calendar"`` (default) is
+    the bucketed calendar queue the fleet-scale engine runs on;
+    ``"heap"`` is the original flat ``heapq`` — kept verbatim as the
+    un-vectorized baseline fig11 measures against. Both produce
+    bit-identical traces (ties resolve by insertion seq either way)."""
+
+    def __init__(self, queue: str = "calendar"):
+        if queue not in ("calendar", "heap"):
+            raise ValueError(f"unknown event queue '{queue}' "
+                             "(use 'calendar' or 'heap')")
+        self.queue = queue
+        self._q = [] if queue == "heap" else _CalendarQueue()
         self._seq = 0
         self.now = 0.0
         self.stopped = False
@@ -94,19 +185,39 @@ class EventLoop:
 
     def call_at(self, t: float, name: str, fn: Callable, **kw):
         """Schedule ``fn(now, **kw)``; never earlier than the current time."""
-        heapq.heappush(self._q, (max(float(t), self.now), self._seq, name,
-                                 fn, kw))
+        item = (max(float(t), self.now), self._seq, name, fn, kw)
         self._seq += 1
+        if self.queue == "heap":
+            heapq.heappush(self._q, item)
+        else:
+            self._q.push(item)
+
+    def call_at_many(self, events: Sequence[tuple]):
+        """Batched insertion of ``(t, name, fn, kw)`` tuples — one call
+        per broadcast wave instead of one per client (the calendar queue
+        turns these into plain appends on future slots)."""
+        for t, name, fn, kw in events:
+            self.call_at(t, name, fn, **kw)
 
     def stop(self):
         self.stopped = True
 
     def run(self, until: float = math.inf) -> float:
-        while self._q and not self.stopped:
-            t, _, name, fn, kw = self._q[0]
-            if t > until:
+        if self.queue == "heap":
+            while self._q and not self.stopped:
+                t, _, name, fn, kw = self._q[0]
+                if t > until:
+                    break
+                heapq.heappop(self._q)
+                self.now = t
+                self.trace.append((round(t, 9), name))
+                fn(t, **kw)
+            return self.now
+        while not self.stopped:
+            head = self._q.peek()
+            if head is None or head[0] > until:
                 break
-            heapq.heappop(self._q)
+            t, _, name, fn, kw = self._q.pop()
             self.now = t
             self.trace.append((round(t, 9), name))
             fn(t, **kw)
@@ -118,14 +229,16 @@ class FLScheduler:
 
     def __init__(self, backend, clients: Sequence[FLClient], strategy, *,
                  local_steps: int = 10, server_lr: float = 1.0,
-                 availability=None, redispatch_backoff_s: float = 30.0):
+                 availability=None, redispatch_backoff_s: float = 30.0,
+                 event_queue: str = "calendar", cohort_k: int = 0,
+                 cohort_seed: int = 0, streaming_hub: bool = False):
         self.backend = backend  # server-side CommBackend (or AUTO)
         self.clients = list(clients)
         self.strategy = strategy
         self.local_steps = local_steps
         self.server_lr = server_lr
         self.env = backend.env
-        self.loop = EventLoop()
+        self.loop = EventLoop(queue=event_queue)
         self.version = 0
         self.global_payload = None
         self.global_params = None  # real pytree in live mode
@@ -153,6 +266,26 @@ class FLScheduler:
         self.rejoins = 0
         self.transfer_failures = 0
         self.late_refetches = 0
+        # fleet-scale client table: O(1) id lookup plus flat NumPy arrays
+        # for the per-client flags the hot path filters on (a 10k-client
+        # dispatch wave is one boolean mask, not 10k attribute walks)
+        self._by_id = {c.client_id: c for c in self.clients}
+        self._index = {c.client_id: i for i, c in enumerate(self.clients)}
+        n = len(self.clients)
+        self._up = np.ones(n, dtype=bool)
+        self._busy = np.zeros(n, dtype=bool)  # dispatched, not yet resolved
+        self._in_cohort = np.ones(n, dtype=bool)
+        # cohort sampling (cross-device regime): 0 < K < N samples K
+        # clients per aggregation round; K = 0 or K >= N is the full
+        # fleet, bit-for-bit today's behaviour (no mask ever consulted)
+        self.cohort_k = int(cohort_k)
+        self._cohort_rng = np.random.default_rng(cohort_seed)
+        # streaming hub: fold arriving updates into an O(model)
+        # accumulator instead of buffering O(clients) payloads
+        self.streaming_hub = bool(streaming_hub)
+        self._acc = None  # fl/aggregator.StreamingAccumulator, lazily
+        self._acc_charged = False  # accumulator memory charged once
+        self._charged: Dict[int, int] = {}  # id(rec) -> buffered bytes
 
     # -- plumbing ----------------------------------------------------------
     def _resolved(self, msg: FLMessage):
@@ -161,6 +294,48 @@ class FLScheduler:
 
     def is_up(self, client_id: str) -> bool:
         return client_id in self.available
+
+    # -- cohort sampling ---------------------------------------------------
+    @property
+    def cohort_active(self) -> bool:
+        return 0 < self.cohort_k < len(self.clients)
+
+    def _sample_cohort(self):
+        """Seeded sample-K-of-N, drawn once before the run starts and
+        re-drawn at each aggregation (version bump)."""
+        self._in_cohort[:] = False
+        picks = self._cohort_rng.choice(len(self.clients),
+                                        size=self.cohort_k, replace=False)
+        self._in_cohort[picks] = True
+
+    def eligible_count(self) -> int:
+        """Live clients a quorum may count on: the sampled cohort's live
+        members under cohort sampling, the whole live fleet otherwise."""
+        if not self.cohort_active:
+            return len(self.available)
+        return int(np.count_nonzero(self._up & self._in_cohort))
+
+    def _cohort_blocked(self, client_id: str) -> bool:
+        """Outside the current cohort, or its previous dispatch is still
+        unresolved (busy pipelines ride across cohort boundaries)."""
+        if not self.cohort_active:
+            return False
+        i = self._index[client_id]
+        return bool(not self._in_cohort[i] or self._busy[i])
+
+    def _mark_busy(self, client_id: str, busy: bool):
+        i = self._index.get(client_id)
+        if i is not None:
+            self._busy[i] = busy
+
+    def _cohort_dispatch(self, now: float):
+        """Top up the freshly sampled cohort: dispatch its idle members.
+        Busy members keep their in-flight pipelines; their reporters
+        re-enter through the strategy's own re-dispatch, which
+        ``dispatch`` filters against the new cohort."""
+        mask = self._in_cohort & self._up & ~self._busy
+        self.dispatch_many([self.clients[i] for i in np.nonzero(mask)[0]],
+                           now)
 
     def timer(self, t: float, name: str, fn: Callable, **kw):
         """Schedule a strategy callback ``fn(scheduler, now, **kw)``."""
@@ -192,11 +367,15 @@ class FLScheduler:
         bounded so a fully dead link cannot spin the loop forever."""
         if not self.is_up(client.client_id):
             return
+        if _attempt == 0 and self._cohort_blocked(client.client_id):
+            return  # not sampled this round (or its pipeline is live)
+        self._mark_busy(client.client_id, True)
         h = self.backend.isend(self._model_msg(client), now)
         if not self._track(h, f"model>{client.client_id}",
                            self._on_client_recv, client=client,
                            gen=self._gen[client.client_id]):
             if _attempt >= 25:
+                self._mark_busy(client.client_id, False)
                 return  # link is dead: treat the client as unreachable
             # re-issue once the sender has causally *detected* the
             # failure (h.start = give-up time) plus a backoff
@@ -210,16 +389,21 @@ class FLScheduler:
         contention-aware concurrent broadcast — the same fluid model the
         sync server charges — instead of independent analytic isends."""
         clients = [c for c in clients if self.is_up(c.client_id)]
+        if self.cohort_active:
+            clients = [c for c in clients
+                       if not self._cohort_blocked(c.client_id)]
         if len(clients) <= 1:
             for c in clients:
                 self.dispatch(c, now)
             return
+        for c in clients:
+            self._mark_busy(c.client_id, True)
         msgs = [self._model_msg(c) for c in clients]
         _, arrives = self.backend.broadcast(msgs, now)
-        for c, arrive in zip(clients, arrives):
-            self.loop.call_at(arrive, f"model>{c.client_id}",
-                              self._on_client_recv, client=c,
-                              gen=self._gen[c.client_id])
+        self.loop.call_at_many(
+            [(arrive, f"model>{c.client_id}", self._on_client_recv,
+              dict(client=c, gen=self._gen[c.client_id]))
+             for c, arrive in zip(clients, arrives)])
 
     def rejoin(self, client: FLClient, now: float):
         """Late-join re-fetch: over grpc+s3 the dispatch rides the
@@ -236,17 +420,19 @@ class FLScheduler:
         self.dispatch(client, now)
 
     def _on_availability(self, now: float, ev):
-        client = next((c for c in self.clients
-                       if c.client_id == ev.client_id), None)
+        client = self._by_id.get(ev.client_id)
         if client is None:
             return
         if ev.kind == "leave" and self.is_up(ev.client_id):
             self.available.discard(ev.client_id)
+            self._up[self._index[ev.client_id]] = False
+            self._mark_busy(ev.client_id, False)  # pipeline dies with it
             self._gen[ev.client_id] += 1  # invalidate in-flight dispatches
             self.departures += 1
             self.strategy.on_leave(self, client, now)
         elif ev.kind == "join" and not self.is_up(ev.client_id):
             self.available.add(ev.client_id)
+            self._up[self._index[ev.client_id]] = True
             self.rejoins += 1
             self.strategy.on_join(self, client, now)
 
@@ -286,11 +472,13 @@ class FLScheduler:
                 client=client, update=update, attempt=attempt + 1)
         else:
             self.discarded += 1
+            self._mark_busy(client.client_id, False)
 
     def _retry_update(self, now: float, client: FLClient,
                       update: FLMessage, attempt: int):
         if not self.is_up(client.client_id):
             self.discarded += 1  # departed before the retry could fire
+            self._mark_busy(client.client_id, False)
             return
         self._isend_update(client, update, now, attempt)
 
@@ -302,6 +490,7 @@ class FLScheduler:
                               msg=msg)
 
     def _on_apply(self, now: float, msg: FLMessage):
+        self._mark_busy(msg.sender, False)  # dispatch resolved either way
         gen = msg.metadata.get("_gen")
         if not self.is_up(msg.sender) or (
                 gen is not None and gen != self._gen.get(msg.sender)):
@@ -310,8 +499,7 @@ class FLScheduler:
             # dynamic-participation semantics say it is not counted
             self.discarded += 1
             return
-        client = next((c for c in self.clients
-                       if c.client_id == msg.sender), None)
+        client = self._by_id.get(msg.sender)
         version = int(msg.metadata.get("version", msg.round))
         staleness = self.version - version
         rec = UpdateRecord(client=client, payload=msg.payload,
@@ -321,6 +509,42 @@ class FLScheduler:
         self.strategy.on_update(self, rec, now)
 
     # -- aggregation -------------------------------------------------------
+    def hub_fold(self, rec: UpdateRecord, now: float) -> UpdateRecord:
+        """Admit one update into the hub's merge buffer.
+
+        Dense mode (default): charges the buffered payload against the
+        server endpoint's memory meter (freed when the buffer merges)
+        and returns the record unchanged — O(clients) hub memory,
+        today's math bit-for-bit.
+
+        Streaming mode (``streaming_hub=True``): folds the eff-weighted
+        update into an O(model) accumulator on the fedavg_reduce
+        streaming-accumulate kernel and strips the record's payload to a
+        size-only placeholder, so hub memory stays O(model) at any fleet
+        size. Virtual payloads fold as counts only and the merge timing
+        is identical to the dense path; the staleness discount is taken
+        at fold time (same as merge time for the fixed polynomial —
+        adaptive-percentile weighting sees a slightly younger window).
+        """
+        mem = self.backend.endpoint.memory
+        if not self.streaming_hub:
+            self._charged[id(rec)] = rec.payload.nbytes
+            mem.alloc(rec.payload.nbytes, now)
+            return rec
+        if self._acc is None:
+            from repro.fl.aggregator import StreamingAccumulator
+            self._acc = StreamingAccumulator()
+        if not self._acc_charged:
+            mem.alloc(self.global_payload.nbytes, now)
+            self._acc_charged = True
+        alpha = self.strategy.staleness_weight(rec.staleness)
+        self._acc.fold(rec, alpha)
+        if isinstance(rec.payload, TensorPayload):
+            rec = dataclasses.replace(
+                rec, payload=VirtualPayload(rec.payload.nbytes,
+                                            tag="hub-folded"))
+        return rec
+
     def aggregate(self, records: Sequence[UpdateRecord], now: float) -> float:
         """Staleness-weighted buffered aggregate; bumps the global version.
         Returns the simulated completion time."""
@@ -331,9 +555,26 @@ class FLScheduler:
                   for r in records]
         eff = [r.weight * a for r, a in zip(records, alphas)]
         nbytes = self.global_payload.nbytes
+        acc = self._acc if self.streaming_hub else None
         trees = [r.payload.tree for r in records
                  if isinstance(r.payload, TensorPayload)]
-        if len(trees) == len(records) and sum(eff) > 0:
+        if acc is not None and acc.count:
+            # streaming hub: the buffer is already folded into the
+            # accumulator; merge = one divide + damped server update
+            merged, stream_agg_s = acc.merged()
+            if merged is not None and acc.sum_eff > 0:
+                agg_s = stream_agg_s
+                lam = self.server_lr * (acc.sum_eff /
+                                        max(acc.sum_weight, 1e-12))
+                self.global_params = merge_global(self.global_params,
+                                                  merged, lam)
+                self.global_payload = TensorPayload(self.global_params)
+            else:
+                agg_s = simulated_agg_time(nbytes, len(records))
+                self.global_payload = VirtualPayload(
+                    nbytes, tag=f"model:v{self.version + 1}")
+            acc.reset()
+        elif len(trees) == len(records) and sum(eff) > 0:
             merged, agg_s = fedavg(trees, eff)
             lam = self.server_lr * (sum(eff) /
                                     max(sum(r.weight for r in records), 1e-12))
@@ -349,6 +590,17 @@ class FLScheduler:
         done = max(now, self._agg_busy_until) + mig_s + agg_s
         self._agg_busy_until = done
         self.version += 1
+        mem = self.backend.endpoint.memory
+        for r in records:
+            nb = self._charged.pop(id(r), None)
+            if nb is not None:
+                mem.free(nb, done)
+        if self.cohort_active:
+            # re-draw the cohort for the new version; idle members of the
+            # fresh sample get their model at merge completion
+            self._sample_cohort()
+            self.loop.call_at(done, f"cohort-dispatch#v{self.version}",
+                              self._cohort_dispatch)
         self.n_aggregations += 1
         self.n_updates_applied += sum(r.count for r in records)
         self.effective_updates += sum(a * r.count
@@ -390,6 +642,8 @@ class FLScheduler:
                 self.loop.call_at(ev.time,
                                   f"avail-{ev.kind}:{ev.client_id}",
                                   self._on_availability, ev=ev)
+        if self.cohort_active:
+            self._sample_cohort()  # round-0 cohort, before the bootstrap
         self.strategy.start(self, self.loop.now)
         self.loop.run(until=until)
         return self.report()

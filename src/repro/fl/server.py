@@ -251,16 +251,21 @@ class FLServer:
 
     # ------------------------------------------------------------------
     def run_async(self, global_payload, strategy, *, availability=None,
-                  **limits):
+                  cohort_k: int = 0, cohort_seed: int = 0,
+                  streaming_hub: bool = False, **limits):
         """Event-driven execution of this deployment (fl/scheduler.py):
         same backend + clients, but the strategy decides when to merge.
         ``availability``: optional fl/fault.AvailabilityTrace replayed as
-        join/leave loop events. Returns (AsyncRunReport, FLScheduler)."""
+        join/leave loop events; ``cohort_k``/``streaming_hub``: the
+        fleet-scale knobs, passed through to the scheduler.
+        Returns (AsyncRunReport, FLScheduler)."""
         from repro.fl.scheduler import FLScheduler
         sched = FLScheduler(self.backend, self.clients, strategy,
                             local_steps=self.local_steps,
                             server_lr=self.server_lr,
-                            availability=availability)
+                            availability=availability,
+                            cohort_k=cohort_k, cohort_seed=cohort_seed,
+                            streaming_hub=streaming_hub)
         report = sched.run(global_payload, **limits)
         if sched.global_params is not None:
             self.global_params = sched.global_params

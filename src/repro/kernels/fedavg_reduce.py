@@ -7,6 +7,10 @@ stacked flat updates. Two variants:
 * ``fedavg_reduce_q8`` — int8 inputs + per-(client, block) scales, fusing
   dequantisation into the reduction so the dequantised f32 copies are never
   materialised in HBM (N x T x 4 bytes saved vs dequant-then-sum).
+* ``fedavg_accumulate`` — the streaming form: fold ONE weighted update
+  into a running accumulator, ``acc + w * x``. The fleet-scale hub calls
+  this once per arriving update, so server memory is O(model) instead of
+  the O(clients x model) stacked buffer the batch reduction needs.
 
 Tiling: grid over T in COL_TILE lanes; each step holds an (N, COL_TILE)
 tile in VMEM (N <= ~64 clients keeps tiles < 1 MB).
@@ -44,6 +48,34 @@ def fedavg_reduce(updates, weights, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((1, t), jnp.float32),
         interpret=interpret,
     )(updates, weights.reshape(n, 1))
+    return out[0]
+
+
+def _accum_kernel(a_ref, x_ref, w_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)  # (1, C)
+    x = x_ref[...].astype(jnp.float32)  # (1, C)
+    w = w_ref[...].astype(jnp.float32)  # (1, 1)
+    o_ref[...] = a + w * x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_accumulate(acc, x, w, *, interpret: bool = True):
+    """acc, x: (T,) float; w: scalar -> (T,) f32 ``acc + w * x``.
+    T must be a multiple of COL_TILE (ops.py pads)."""
+    t = acc.shape[0]
+    assert t % COL_TILE == 0, t
+    grid = (t // COL_TILE,)
+    w = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, COL_TILE), lambda i: (0, i)),
+                  pl.BlockSpec((1, COL_TILE), lambda i: (0, i)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, COL_TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, t), jnp.float32),
+        interpret=interpret,
+    )(acc.reshape(1, t), x.reshape(1, t), w)
     return out[0]
 
 

@@ -16,6 +16,7 @@ import numpy as np
 from repro.kernels import fedavg_reduce as fr
 from repro.kernels import quantize as qz
 from repro.kernels import ref as kref
+from repro.kernels import topk as tk
 
 
 def _default_interpret() -> bool:
@@ -148,6 +149,66 @@ def dequantize_flat_batch(packed_list: Sequence[dict], *,
         out.append(x[row:row + rows].reshape(-1)[: p["orig_len"]])
         row += rows
     return out
+
+
+# ---------------------------------------------------------------------------
+# batched top-k selection (the TopkCodec's fused encode path)
+# ---------------------------------------------------------------------------
+
+_jit_topk_ref = jax.jit(kref.topk_rows_ref, static_argnames=("k",))
+
+
+def _topk_rows(rows_x, k, interpret):
+    """(B, T) -> (idx, vals) through the fastest bit-exact path (same
+    dispatch rule as ``_quantize_rows``)."""
+    if interpret is True:
+        return tk.topk_rows(rows_x, k, interpret=True)
+    if interpret is False or not _default_interpret():
+        return tk.topk_rows(rows_x, k, interpret=False)
+    return _jit_topk_ref(rows_x, k=k)
+
+
+def topk_flat_batch(flats: Sequence, *, k_frac: float = 0.05,
+                    interpret=None):
+    """[x_i] -> [{idx, vals, n}], the top-k sparse wire form, batched.
+
+    Items are grouped by (length, k) — k is ``max(1, int(size *
+    k_frac))``, a per-length wire constant — and each group runs as ONE
+    stacked kernel dispatch. No padding is ever applied: padding would
+    change k and the selection set, so unequal lengths simply land in
+    different groups. Per-item results are bit-identical to the
+    per-message ``top_k(|flat|)`` + gather path (same tie rule)."""
+    if not flats:
+        return []
+    arrs = [np.asarray(x, np.float32).reshape(-1) for x in flats]
+    groups: dict = {}
+    for i, a in enumerate(arrs):
+        k = max(1, int(a.size * k_frac))
+        groups.setdefault((a.size, k), []).append(i)
+    out = [None] * len(arrs)
+    for (size, k), idxs in groups.items():
+        stacked = jnp.asarray(np.stack([arrs[i] for i in idxs]))
+        gi, gv = _topk_rows(stacked, k, interpret)
+        gi, gv = np.asarray(gi), np.asarray(gv)
+        for row, i in enumerate(idxs):
+            out[i] = {"idx": gi[row], "vals": gv[row], "n": size}
+    return out
+
+
+_jit_accumulate_ref = jax.jit(kref.fedavg_accumulate_ref)
+
+
+def fedavg_accumulate_flat(acc, x, w, *, interpret=None):
+    """One streaming fold ``acc + w * x`` over flat (T,) vectors via the
+    fedavg_reduce accumulate kernel (CPU default: the jitted XLA
+    reference — same dispatch rule as the quantize wrappers)."""
+    if interpret is None and _default_interpret():
+        return _jit_accumulate_ref(jnp.asarray(acc, jnp.float32),
+                                   jnp.asarray(x, jnp.float32), w)
+    accp, orig = _pad_to(jnp.asarray(acc, jnp.float32), fr.COL_TILE)
+    xp, _ = _pad_to(jnp.asarray(x, jnp.float32), fr.COL_TILE)
+    return fr.fedavg_accumulate(accp, xp, w,
+                                interpret=bool(interpret))[:orig]
 
 
 # ---------------------------------------------------------------------------

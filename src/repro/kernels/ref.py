@@ -3,6 +3,7 @@ plus the pure-NumPy legacy codec (the pre-batching per-message baseline the
 perf trajectory and the bit-exactness parity tests compare against)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -44,6 +45,21 @@ def fedavg_reduce_ref(updates, weights):
     """updates (N, T), weights (N,) -> (T,) f32."""
     return jnp.sum(updates.astype(jnp.float32)
                    * weights.astype(jnp.float32)[:, None], axis=0)
+
+
+def fedavg_accumulate_ref(acc, x, w):
+    """acc, x (T,), w scalar -> (T,) f32 ``acc + w * x``."""
+    return acc.astype(jnp.float32) + jnp.float32(w) * x.astype(jnp.float32)
+
+
+def topk_rows_ref(x, k: int):
+    """x: (B, T) -> (idx (B, k) i32, vals (B, k) f32): the k largest-|.|
+    entries per row, |value|-descending, ties broken toward the lower
+    index (jax.lax.top_k's order — and the per-message codec's)."""
+    vals_abs, idx = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), k)
+    del vals_abs
+    vals = jnp.take_along_axis(x.astype(jnp.float32), idx, axis=-1)
+    return idx.astype(jnp.int32), vals
 
 
 def fedavg_reduce_q8_ref(q, scales, weights, block: int = 256):

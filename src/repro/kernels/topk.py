@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: batched magnitude top-k selection (sparsification).
+
+One grid step per row: iterative first-index argmax over |x| — k rounds
+of (max, select, mask) — emitting the k largest-magnitude entries per
+row as (index, signed value) pairs. The selection order is |value|
+descending with ties broken toward the lower index, which is exactly
+``jax.lax.top_k``'s rule, so the sparse wire form is bit-identical to
+the per-message ``top_k(|flat|)`` + gather codec path this kernel fuses
+(compression/topk.py).
+
+``k`` is static (a wire-format constant per message length), so the
+fori_loop unrolls to a fixed trip count at trace time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(x_ref, idx_ref, val_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)  # (1, T)
+    t = x.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    def step(j, carry):
+        a_cur, idxs, vals = carry
+        m = jnp.max(a_cur)
+        # first index attaining the max: |value| desc, lower index first
+        sel = jnp.min(jnp.where(a_cur == m, iota, t))
+        val = jnp.sum(jnp.where(iota == sel, x, jnp.float32(0.0)))
+        idxs = jax.lax.dynamic_update_slice(idxs, sel.reshape(1, 1), (0, j))
+        vals = jax.lax.dynamic_update_slice(vals, val.reshape(1, 1), (0, j))
+        # mask the winner below any |x| (all >= 0) so it never re-wins
+        a_cur = jnp.where(iota == sel, jnp.float32(-1.0), a_cur)
+        return a_cur, idxs, vals
+
+    _, idxs, vals = jax.lax.fori_loop(
+        0, k, step,
+        (jnp.abs(x), jnp.zeros((1, k), jnp.int32),
+         jnp.zeros((1, k), jnp.float32)))
+    idx_ref[...] = idxs
+    val_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_rows(x, k: int, *, interpret: bool = True):
+    """x: (B, T) float -> (idx (B, k) i32, vals (B, k) f32) per row."""
+    b, t = x.shape
+    idx, vals = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.int32),
+                   jax.ShapeDtypeStruct((b, k), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return idx, vals

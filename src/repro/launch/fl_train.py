@@ -135,6 +135,9 @@ def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
         horizon_s=scenario.faults.trace_horizon_s, seed=fl_cfg.seed)
     report, sched = server.run_async(TensorPayload(params), strategy,
                                      availability=availability,
+                                     cohort_k=fl_cfg.cohort_k,
+                                     cohort_seed=fl_cfg.seed,
+                                     streaming_hub=fl_cfg.streaming_hub,
                                      max_aggregations=fl_cfg.rounds)
     print(f"[fl:{report.mode}] backend={report.backend} "
           f"sim_time={report.sim_time:.2f}s "
@@ -230,6 +233,16 @@ def _parser() -> argparse.ArgumentParser:
                     help="hier mode: min live fraction for a region to "
                          "participate in a round (below it the region is "
                          "skipped, folded back in on rejoin)")
+    ap.add_argument("--cohort-k", type=int, default=None,
+                    help="fedbuff/semisync: seeded K-of-N cohort sampled "
+                         "per round (0 = whole fleet; K=N is bit-for-bit "
+                         "the full-fleet run)")
+    ap.add_argument("--streaming-hub", action="store_true", default=None,
+                    help="fold updates into one O(model) accumulator at "
+                         "the hub instead of buffering O(clients) records")
+    ap.add_argument("--relay-depth", type=int, default=None,
+                    help="hier mode: relay-tree levels (1 = the "
+                         "single-tier relay)")
     return ap
 
 
@@ -259,6 +272,9 @@ def resolve_scenario(args, ap: argparse.ArgumentParser) -> Scenario:
             "faults.availability_trace": args.availability_trace,
             "faults.trace_horizon_s": args.trace_horizon,
             "strategy.region_quorum": args.region_quorum,
+            "fleet.cohort_k": args.cohort_k,
+            "strategy.streaming_hub": args.streaming_hub,
+            "topology.relay_depth": args.relay_depth,
         })
         # a byte-domain --compression spec is really the wire codec;
         # split_codecs owns the rule (and rejects two different wire

@@ -103,6 +103,10 @@ class TopologySpec:
     # (Table I's seven regions for the WAN presets)
     regions: Tuple[str, ...] = ()
     edges: Tuple[EdgeSpec, ...] = ()
+    # upload-side reduction-tree depth for hier mode: 1 = region relays
+    # ship straight to the hub (the historical shape, bit-for-bit);
+    # D > 1 inserts D-1 tiers of super-relays between them and the hub
+    relay_depth: int = 1
 
     @classmethod
     def preset(cls, name: str, num_clients: int = 7) -> "TopologySpec":
@@ -146,6 +150,8 @@ class TopologySpec:
                 f"from {list(TOPOLOGY_PRESETS)}")
         if self.num_clients < 1:
             raise ScenarioError("topology.num_clients must be >= 1")
+        if self.relay_depth < 1:
+            raise ScenarioError("topology.relay_depth must be >= 1")
         self.client_regions()  # validates region names
         known = {"server"} | {f"client{i}" for i in range(self.num_clients)}
         for i, e in enumerate(self.edges):
@@ -178,19 +184,30 @@ class TopologySpec:
                         f"contradicts symmetric=False (declare two "
                         f"one-way edges instead)")
 
+    # above this fleet size the dense presets switch to a lazy edge map:
+    # the O(n^2) pair loop below would materialise 10^8 Link objects at
+    # 10k clients, while _RuleLinks generates the identical edge on
+    # first lookup (star/ring build O(n) maps and stay dense at any n)
+    LAZY_LINKS_MIN = 65
+
     def build(self) -> Environment:
         """Materialise the full directed edge map (the explicit graph the
         backends consume instead of the old implicit region-pair rule)."""
         self.check()
         server, clients = self._hosts()
         hosts = [server] + list(clients)
-        links: Dict[tuple, Link] = {}
+        lazy = (self.num_clients >= self.LAZY_LINKS_MIN
+                and self.kind not in ("star", "ring"))
+        links: Dict[tuple, Link] = _RuleLinks(
+            self.kind, {h.host_id: h for h in hosts}) if lazy else {}
 
         def put(a: Host, b: Host, region: Region, lan_class=False):
             links[(a.host_id, b.host_id)] = Link(a.host_id, b.host_id,
                                                  region, lan_class=lan_class)
 
-        if self.kind == "lan":
+        if lazy:
+            pass  # the rule map generates the preset edges on demand
+        elif self.kind == "lan":
             for a in hosts:
                 for b in hosts:
                     if a is not b:
@@ -273,11 +290,63 @@ def _bottleneck_region(a: Region, b: Region) -> Region:
                   min(a.bw_multi, b.bw_multi), a.latency + b.latency)
 
 
+class _RuleLinks(dict):
+    """Lazy edge map for the dense presets at fleet scale.
+
+    ``get`` generates an edge on first lookup by the exact rule the
+    dense ``build`` loop applies for the same preset (bit-identical
+    Link values), then caches it, so a 10k-client topology never
+    materialises its 10^8 host pairs. Explicit EdgeSpec overrides are
+    stored eagerly through ``__setitem__`` and shadow the rule. Pairs
+    the preset declares no edge for (e.g. cross-region client pairs in
+    ``multi_hub``) return ``default`` — the same implicit-rule fallback
+    ``Environment.link`` applies to a dense map without that key."""
+
+    def __init__(self, kind: str, hosts: Dict[str, Host]):
+        super().__init__()
+        self._kind = kind
+        self._hosts = hosts
+
+    def __bool__(self):  # an empty cache still answers for every edge
+        return True
+
+    def get(self, key, default=None):
+        hit = super().get(key)
+        if hit is not None:
+            return hit
+        src_id, dst_id = key
+        a = self._hosts.get(src_id)
+        b = self._hosts.get(dst_id)
+        if a is None or b is None or src_id == dst_id:
+            return default
+        if self._kind == "lan":
+            edge = Link(src_id, dst_id, LAN_TCP, lan_class=True)
+        elif self._kind in ("geo_proximal", "geo_distributed"):
+            edge = Link(src_id, dst_id,
+                        b.region if b.region.name != "ncal" else a.region)
+        elif self._kind == "multi_hub":
+            if "server" in (src_id, dst_id):
+                spoke = b if src_id == "server" else a
+                edge = Link(src_id, dst_id, spoke.region)
+            elif a.region.name == b.region.name:
+                edge = Link(src_id, dst_id, LAN_TCP)
+            else:
+                return default  # cross-region client pair: no edge
+        else:
+            return default
+        self[key] = edge
+        return edge
+
+
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
     """Who trains: the model tier + local work per dispatch."""
     tier: str = "small"
     local_steps: int = 4
+    # cohort sampling (the cross-device regime at fleet scale): each
+    # aggregation round draws a seeded K-of-N client sample; 0 (or
+    # K >= N) keeps the whole fleet in play, bit-for-bit today's runs
+    cohort_k: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -329,6 +398,9 @@ class StrategySpec:
     round_deadline_s: float = 0.0
     region_quorum: float = 0.5
     relay_conns: int = 8
+    # fold arriving updates into an O(model) streaming accumulator at
+    # the hub instead of buffering O(clients) payloads (fedbuff/semisync)
+    streaming_hub: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -368,6 +440,17 @@ class Scenario:
             raise ScenarioError("faults.link_loss must be in [0, 1)")
         if not 0.0 < self.strategy.quorum_fraction <= 1.0:
             raise ScenarioError("strategy.quorum_fraction must be in (0, 1]")
+        if self.fleet.cohort_k < 0:
+            raise ScenarioError("fleet.cohort_k must be >= 0")
+        if self.fleet.cohort_k > self.topology.num_clients:
+            raise ScenarioError(
+                f"fleet.cohort_k ({self.fleet.cohort_k}) exceeds "
+                f"topology.num_clients ({self.topology.num_clients})")
+        if 0 < self.fleet.cohort_k < self.topology.num_clients and \
+                self.strategy.mode not in ("fedbuff", "semisync"):
+            raise ScenarioError(
+                "fleet.cohort_k: cohort sampling applies to the event-"
+                "driven fedbuff/semisync modes only")
         self.topology.check()  # bad preset/regions/edges, without building
         hosts = {"server"} | {f"client{i}"
                               for i in range(self.topology.num_clients)}
@@ -419,8 +502,11 @@ class Scenario:
         return cls(
             name=f"fl:{cfg.mode}", seed=cfg.seed,
             topology=TopologySpec(kind=cfg.environment,
-                                  num_clients=cfg.num_clients),
-            fleet=FleetSpec(tier=tier, local_steps=local_steps),
+                                  num_clients=cfg.num_clients,
+                                  relay_depth=getattr(cfg, "relay_depth",
+                                                      1)),
+            fleet=FleetSpec(tier=tier, local_steps=local_steps,
+                            cohort_k=getattr(cfg, "cohort_k", 0)),
             channel=ChannelSpec(backend=cfg.backend,
                                 compression=cfg.compression,
                                 wire_codec=getattr(cfg, "wire_codec",
@@ -437,7 +523,8 @@ class Scenario:
                 quorum_fraction=cfg.quorum_fraction,
                 round_deadline_s=cfg.round_deadline_s,
                 region_quorum=cfg.region_quorum,
-                relay_conns=getattr(cfg, "relay_conns", 8)))
+                relay_conns=getattr(cfg, "relay_conns", 8),
+                streaming_hub=getattr(cfg, "streaming_hub", False)))
 
     # -- the bridge to the runtime config ----------------------------------
     def fl_config(self):
@@ -462,7 +549,10 @@ class Scenario:
             availability_trace=self.faults.availability_trace,
             link_loss_rate=self.faults.link_loss,
             region_quorum=self.strategy.region_quorum,
-            relay_conns=self.strategy.relay_conns)
+            relay_conns=self.strategy.relay_conns,
+            relay_depth=self.topology.relay_depth,
+            cohort_k=self.fleet.cohort_k,
+            streaming_hub=self.strategy.streaming_hub)
 
 
 # ---------------------------------------------------------------------------

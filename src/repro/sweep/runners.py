@@ -100,7 +100,10 @@ def run_scenario(scenario: Scenario, *,
     sched = FLScheduler(rt.make_backend("server", compression="none"),
                         clients, strategy,
                         local_steps=scenario.fleet.local_steps,
-                        availability=availability)
+                        availability=availability,
+                        cohort_k=scenario.fleet.cohort_k,
+                        cohort_seed=scenario.seed,
+                        streaming_hub=scenario.strategy.streaming_hub)
     rep = sched.run(VirtualPayload(tier.payload_bytes, tag="sweep"),
                     max_aggregations=rounds)
     reports = [{"version": e.version, "time": e.time,

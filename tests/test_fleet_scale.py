@@ -1,0 +1,446 @@
+"""Fleet-scale engine: the PR-7 equivalence contracts.
+
+Every scale-path optimisation here is gated on producing the *same
+simulation* as the paper-scale reference it replaces:
+
+* calendar event queue == heapq trace, bit for bit;
+* cohort sampling with K = N == the full-fleet run, bit for bit;
+* streaming hub accumulator == dense aggregation within float tolerance
+  (and trace-identical on virtual payloads);
+* nested relay tree with depth=1 == the single-tier hier event set,
+  depth=2 == the same numerics;
+* vectorised fluid solver == the scalar reference solver;
+* the linear-scan baseline switches (fig11) == the indexed fast paths;
+* AUTO fused broadcast / fused topk batch == the per-message wire bytes.
+"""
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Fabric, ObjectStore, TensorPayload, VirtualPayload,
+                        make_backend)
+from repro.core.netsim import (NCAL, Transfer, linear_host_lookup,
+                               scalar_transfers, simulate_transfers)
+from repro.core.transport import linear_inbox
+from repro.fl import (FedBuffStrategy, FLClient, FLScheduler,
+                      HierarchicalStrategy)
+from repro.fl.scheduler import EventLoop
+from repro.scenario import TopologySpec
+
+from test_scheduler import _deployment, _init_params
+
+
+def _virtual_sched(n=14, *, queue="heap", cohort_k=0, streaming=False,
+                   buffer_k=3, max_agg=5, env_name="geo_distributed"):
+    sb, clients = _deployment("grpc+s3", env_name, n, live=False,
+                              straggle={f"client{n-1}": 3.0})
+    sched = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=buffer_k,
+                                        staleness_exponent=0.5),
+                        local_steps=1, event_queue=queue,
+                        cohort_k=cohort_k, streaming_hub=streaming)
+    sched.run(VirtualPayload(32 << 20, tag="scale"),
+              max_aggregations=max_agg)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# calendar queue == heapq
+# ---------------------------------------------------------------------------
+
+def test_calendar_queue_trace_identical_at_paper_scale():
+    heap = _virtual_sched(14, queue="heap")
+    cal = _virtual_sched(14, queue="calendar")
+    assert cal.loop.trace == heap.loop.trace
+    assert [(e.time, e.version, e.n_updates) for e in cal.agg_log] == \
+           [(e.time, e.version, e.n_updates) for e in heap.agg_log]
+
+
+def test_calendar_queue_random_insertion_property():
+    rng = np.random.default_rng(7)
+    times = rng.uniform(0.0, 50.0, size=400).round(3)
+
+    def drive(queue):
+        loop = EventLoop(queue=queue)
+        seen = []
+
+        def handler(now, delay=0.0):
+            seen.append((now, delay))
+            # re-entrant pushes, including into the past (clamped) and
+            # into the current bucket — the calendar's hazard cases
+            if len(seen) < len(times) + 120:
+                loop.call_at(now + delay % 3.0, f"re{len(seen)}",
+                             handler, delay=0.5)
+                loop.call_at(now - 1.0, f"past{len(seen)}", handler)
+        for i, t in enumerate(times):
+            loop.call_at(float(t), f"e{i}", handler, delay=float(t))
+        loop.run(until=60.0)
+        return loop.trace
+
+    assert drive("calendar") == drive("heap")
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling
+# ---------------------------------------------------------------------------
+
+def test_cohort_k_equals_n_is_bit_identical():
+    full = _virtual_sched(8, cohort_k=0)
+    kn = _virtual_sched(8, cohort_k=8)
+    assert kn.loop.trace == full.loop.trace
+    assert kn.update_log == full.update_log
+
+
+def test_cohort_subsample_limits_participation():
+    sched = _virtual_sched(8, cohort_k=3, max_agg=4)
+    assert sched.n_aggregations == 4
+    assert int(sched._in_cohort.sum()) == 3
+    # every update came from a sampled client, never the whole fleet at
+    # once: in-flight dispatches are capped by the cohort size
+    assert sched.n_updates_applied >= 4 * 3 - 3  # buffer_k=3 per round
+
+
+def test_cohort_resample_is_seeded():
+    a = _virtual_sched(8, cohort_k=3)
+    b = _virtual_sched(8, cohort_k=3)
+    assert a.loop.trace == b.loop.trace
+    assert np.array_equal(a._in_cohort, b._in_cohort)
+
+
+# ---------------------------------------------------------------------------
+# streaming hub
+# ---------------------------------------------------------------------------
+
+def test_streaming_hub_matches_dense_numerics():
+    n = 4
+    sb, clients = _deployment("grpc", "lan", n, live=True)
+    dense = FLScheduler(sb, clients,
+                        FedBuffStrategy(buffer_k=n, staleness_exponent=0.5),
+                        local_steps=2)
+    dense.run(TensorPayload(_init_params()), max_aggregations=2)
+
+    sb2, clients2 = _deployment("grpc", "lan", n, live=True)
+    stream = FLScheduler(sb2, clients2,
+                         FedBuffStrategy(buffer_k=n, staleness_exponent=0.5),
+                         local_steps=2, streaming_hub=True)
+    stream.run(TensorPayload(_init_params()), max_aggregations=2)
+    for k in dense.global_params:
+        np.testing.assert_allclose(np.asarray(stream.global_params[k]),
+                                   np.asarray(dense.global_params[k]),
+                                   atol=1e-5)
+
+
+def test_streaming_hub_virtual_trace_identical_and_peak_lower():
+    dense = _virtual_sched(14, streaming=False, buffer_k=14, max_agg=2)
+    stream = _virtual_sched(14, streaming=True, buffer_k=14, max_agg=2)
+    assert stream.loop.trace == dense.loop.trace
+    # dense buffers one record per client at the hub; streaming folds
+    # into one O(model) accumulator
+    assert stream.backend.endpoint.memory.peak \
+        < dense.backend.endpoint.memory.peak
+
+
+# ---------------------------------------------------------------------------
+# nested relay trees
+# ---------------------------------------------------------------------------
+
+def _hier_sched(n, depth, *, live, max_agg=2, local_steps=2):
+    sb, clients = _deployment("grpc", "geo_distributed", n, live=live)
+    sched = FLScheduler(
+        sb, clients,
+        HierarchicalStrategy(staleness_exponent=0.0, relay_depth=depth),
+        local_steps=local_steps)
+    payload = TensorPayload(_init_params()) if live \
+        else VirtualPayload(32 << 20, tag="hier")
+    sched.run(payload, max_aggregations=max_agg)
+    return sched
+
+
+def test_relay_depth1_keeps_single_tier_event_set():
+    sched = _hier_sched(8, 1, live=False)
+    names = {name for _, name in sched.loop.trace}
+    assert any(n.startswith("hier-hub<") for n in names)
+    assert not any(n.startswith("hier-tier<") for n in names)
+    assert not any(n.startswith("hier-fold<") for n in names)
+
+
+def test_relay_depth2_routes_through_tier_nodes():
+    sched = _hier_sched(8, 2, live=False)
+    names = {name for _, name in sched.loop.trace}
+    assert any(n.startswith("hier-tier<") for n in names)
+    assert sched.n_aggregations == 2
+
+
+def test_relay_depth2_matches_depth1_numerics():
+    d1 = _hier_sched(8, 1, live=True)
+    d2 = _hier_sched(8, 2, live=True)
+    for k in d1.global_params:
+        np.testing.assert_allclose(np.asarray(d2.global_params[k]),
+                                   np.asarray(d1.global_params[k]),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# vectorised fluid solver
+# ---------------------------------------------------------------------------
+
+def _clone(transfers):
+    return [Transfer(start=t.start, src=t.src, dst=t.dst, nbytes=t.nbytes,
+                     conns=t.conns, link_region=t.link_region, tag=t.tag)
+            for t in transfers]
+
+
+def _solve_both(transfers):
+    vec = _clone(transfers)
+    simulate_transfers(vec)  # >= SIM_VECTORIZE_MIN engages the NumPy path
+    ref = _clone(transfers)
+    with scalar_transfers():
+        simulate_transfers(ref)
+    return [t.finish for t in vec], [t.finish for t in ref]
+
+
+def test_vectorized_solver_matches_scalar_fanout_and_mesh():
+    env = TopologySpec.preset("geo_distributed", num_clients=80).build()
+    # identical-start fan-out (the collapsed-flow fast path)
+    fan = [Transfer(start=0.0, src=env.server, dst=c, nbytes=8 << 20,
+                    conns=1,
+                    link_region=env.link("server", c.host_id).region,
+                    tag=f"f{i}")
+           for i, c in enumerate(env.clients)]
+    vec, ref = _solve_both(fan)
+    np.testing.assert_allclose(vec, ref, rtol=1e-9)
+
+    # staggered fan-in + cross-client mesh (no collapsing)
+    rng = np.random.default_rng(3)
+    mesh = [Transfer(start=float(rng.uniform(0, 2)), src=c,
+                     dst=env.server, nbytes=int(rng.integers(1, 64)) << 20,
+                     conns=1,
+                     link_region=env.link(c.host_id, "server").region,
+                     tag=f"m{i}")
+            for i, c in enumerate(env.clients)]
+    mesh += [Transfer(start=float(rng.uniform(0, 2)), src=env.clients[i],
+                      dst=env.clients[i + 40], nbytes=4 << 20, conns=1,
+                      link_region=env.link(env.clients[i].host_id,
+                                           env.clients[i + 40].host_id
+                                           ).region,
+                      tag=f"x{i}")
+             for i in range(12)]
+    vec, ref = _solve_both(mesh)
+    np.testing.assert_allclose(vec, ref, rtol=1e-9)
+
+
+def test_linear_baseline_switches_are_result_identical():
+    fast = _virtual_sched(14, queue="calendar", streaming=True)
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(scalar_transfers())
+        stack.enter_context(linear_inbox())
+        stack.enter_context(linear_host_lookup())
+        slow = _virtual_sched(14, queue="calendar", streaming=True)
+    assert slow.loop.trace == fast.loop.trace
+    assert slow.update_log == fast.update_log
+
+
+# ---------------------------------------------------------------------------
+# lazy rule-generated link maps
+# ---------------------------------------------------------------------------
+
+def test_rule_links_match_dense_build():
+    for kind in ("lan", "geo_distributed", "multi_hub"):
+        spec = TopologySpec(kind=kind,
+                            num_clients=TopologySpec.LAZY_LINKS_MIN)
+        lazy = spec.build()
+        assert type(lazy.links).__name__ == "_RuleLinks"
+        old = TopologySpec.LAZY_LINKS_MIN
+        try:
+            TopologySpec.LAZY_LINKS_MIN = 1 << 30
+            dense = spec.build()
+        finally:
+            TopologySpec.LAZY_LINKS_MIN = old
+        assert type(dense.links) is dict and dense.links
+        for key, edge in dense.links.items():
+            got = lazy.links.get(key)
+            assert got is not None, (kind, key)
+            assert (got.src, got.dst, got.lan_class,
+                    got.region.name) == (edge.src, edge.dst,
+                                         edge.lan_class, edge.region.name)
+        assert lazy.links.get(("nope", "nope2")) is None
+
+
+# ---------------------------------------------------------------------------
+# AUTO fused broadcast
+# ---------------------------------------------------------------------------
+
+def _auto_deployment(compression):
+    from repro.core.message import FLMessage
+    env = TopologySpec.preset("geo_distributed", num_clients=6).build()
+    fabric = Fabric(env)
+    store = ObjectStore(NCAL)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    be = make_backend("auto", env, fabric, "server", store=store,
+                      compression=compression)
+    # mixed wave: metadata-only + small tensors (grpc) + a large virtual
+    # model (grpc+s3) — exercises every routing branch of the fused path
+    params = {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6)}
+    msgs = []
+    for i, c in enumerate(env.clients):
+        if i % 3 == 0:
+            payload = None
+        elif i % 3 == 1:
+            payload = TensorPayload(jax.tree.map(lambda a: a + i, params))
+        else:
+            payload = VirtualPayload(64 << 20, tag=f"big{i}")
+        msgs.append(FLMessage("m", "server", c.host_id, payload=payload))
+    return env, fabric, be, msgs
+
+
+def _old_subset_broadcast(be, msgs, now):
+    """The pre-fusion AUTO path: each routed subset encodes on its own
+    backend (no shared ``encode_many`` dispatch)."""
+    routed = {}
+    for i, msg in enumerate(msgs):
+        routed.setdefault(id(be._route(msg)), []).append(i)
+    backends = {id(b): b for b in (be.grpc, be.membuff, be.s3)
+                if b is not None}
+    sender_done, arrives = now, [0.0] * len(msgs)
+    for bid, idxs in routed.items():
+        done, arr = backends[bid].broadcast([msgs[i] for i in idxs], now)
+        sender_done = max(sender_done, done)
+        for i, a in zip(idxs, arr):
+            arrives[i] = a
+    return sender_done, arrives
+
+
+@pytest.mark.parametrize("compression", [None, "qsgd", "topk:0.25"])
+def test_auto_fused_broadcast_bit_identical(compression):
+    env, fabric, be, msgs = _auto_deployment(compression)
+    done, arrives = be.broadcast(msgs, 1.0)
+
+    env2, fabric2, be2, msgs2 = _auto_deployment(compression)
+    done2, arrives2 = _old_subset_broadcast(be2, msgs2, 1.0)
+
+    assert done == done2 and arrives == arrives2
+    for c in env.clients:
+        a = [(d.arrive_time, d.wire.nbytes if d.wire else None)
+             for d in fabric.endpoints[c.host_id].inbox]
+        b = [(d.arrive_time, d.wire.nbytes if d.wire else None)
+             for d in fabric2.endpoints[c.host_id].inbox]
+        assert a == b, c.host_id
+
+
+# ---------------------------------------------------------------------------
+# fused topk batch + streaming accumulate kernel
+# ---------------------------------------------------------------------------
+
+def test_topk_batch_matches_per_message_with_ties():
+    from repro.compression.topk import (topk_compress,
+                                        topk_compress_flat_batch)
+    rng = np.random.default_rng(11)
+    flats = [rng.normal(size=64).astype(np.float32) for _ in range(3)]
+    # |value| ties, same sign and opposite sign, plus a short message
+    flats.append(np.array([1.0, -1.0, 0.5, 0.5, 2.0, -2.0, 0.0, 0.25],
+                          np.float32))
+    states = [None] * len(flats)
+    batch, bstates = topk_compress_flat_batch(flats, states, k_frac=0.25)
+    for f, p in zip(flats, batch):
+        single, _, _ = topk_compress({"x": jnp.asarray(f)}, 0.25)
+        assert np.array_equal(np.asarray(p["idx"]),
+                              np.asarray(single["idx"]))
+        assert np.array_equal(np.asarray(p["vals"]),
+                              np.asarray(single["vals"]))
+
+
+def test_topk_error_feedback_transitions_match():
+    from repro.compression.qsgd import QuantState
+    from repro.compression.topk import (topk_compress,
+                                        topk_compress_flat_batch)
+    rng = np.random.default_rng(5)
+    flats = [rng.normal(size=48).astype(np.float32) for _ in range(4)]
+    states = [QuantState(error=np.zeros(48, np.float32))
+              for _ in flats]
+    for _ in range(2):  # two EF rounds: residuals feed the next pick
+        batch, states = topk_compress_flat_batch(
+            flats, states, k_frac=0.2)
+    singles = [QuantState(error=np.zeros(48, np.float32))
+               for _ in flats]
+    payloads = []
+    for _ in range(2):
+        payloads = []
+        for i, f in enumerate(flats):
+            p, singles[i], _ = topk_compress({"x": jnp.asarray(f)}, 0.2,
+                                             singles[i])
+            payloads.append(p)
+    for p, b, ss, bs in zip(payloads, batch, singles, states):
+        assert np.array_equal(np.asarray(p["idx"]), np.asarray(b["idx"]))
+        assert np.array_equal(np.asarray(p["vals"]), np.asarray(b["vals"]))
+        np.testing.assert_allclose(np.asarray(ss.error),
+                                   np.asarray(bs.error), atol=0)
+
+
+def test_topk_codec_encode_batch_matches_per_message():
+    from repro.compression.stages import TopkCodec
+    rng = np.random.default_rng(9)
+    trees = [{"w": jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=8).astype(np.float32))}
+             for _ in range(3)]
+    payloads = [TensorPayload(t) for t in trees]
+    payloads.append(VirtualPayload(1 << 20, tag="v"))
+
+    batch = TopkCodec(0.25).encode_batch(payloads, [None] * len(payloads))
+    per_msg = [TopkCodec(0.25).compress(p, None) for p in payloads]
+    for (bp, _, bi), (sp, _, si) in zip(batch, per_msg):
+        assert bi == si or (bi["codec"] == si["codec"]
+                            and bi["orig_nbytes"] == si["orig_nbytes"])
+        if hasattr(bp, "packed"):
+            for k in bp.packed:
+                assert np.array_equal(np.asarray(bp.packed[k]),
+                                      np.asarray(sp.packed[k]))
+        else:
+            assert bp.nbytes == sp.nbytes
+
+
+def test_fedavg_accumulate_kernel_matches_ref():
+    from repro.kernels import ops
+    from repro.kernels.ops import _jit_accumulate_ref
+    rng = np.random.default_rng(2)
+    acc = rng.normal(size=1000).astype(np.float32)
+    x = rng.normal(size=1000).astype(np.float32)
+    got = ops.fedavg_accumulate_flat(acc, x, 0.37, interpret=True)
+    want = _jit_accumulate_ref(jnp.asarray(acc), jnp.asarray(x), 0.37)
+    # 1-ulp FMA-contraction differences between the Pallas interpret
+    # path and the compiled XLA reference are within the streaming-hub
+    # float-tolerance contract
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip for the new knobs
+# ---------------------------------------------------------------------------
+
+def test_fl_config_round_trips_scale_knobs():
+    from repro.configs.base import FLConfig
+    cfg = FLConfig(num_clients=200, mode="fedbuff", cohort_k=50,
+                   streaming_hub=True, relay_depth=3)
+    sc = cfg.to_scenario()
+    assert sc.fleet.cohort_k == 50
+    assert sc.strategy.streaming_hub is True
+    assert sc.topology.relay_depth == 3
+    back = sc.fl_config()
+    assert back.cohort_k == 50
+    assert back.streaming_hub is True
+    assert back.relay_depth == 3
+
+
+def test_cohort_validation_rejects_bad_specs():
+    from repro.scenario.spec import ScenarioError
+    from repro.configs.base import FLConfig
+    with pytest.raises(ScenarioError):
+        FLConfig(num_clients=10, mode="fedbuff",
+                 cohort_k=11).to_scenario().validate()
+    with pytest.raises(ScenarioError):
+        FLConfig(num_clients=10, mode="sync",
+                 cohort_k=5).to_scenario().validate()
