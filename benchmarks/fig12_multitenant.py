@@ -1,0 +1,357 @@
+"""Fig 12: multi-tenant fabric — co-located FL jobs on shared WAN links.
+
+Three studies over one deployment family (a geo star whose declared
+server<->client edges are the contended pipes), all driven through
+``MultiScenario`` / ``run_multi`` on one shared EventLoop + Fabric:
+
+* **Co-location** (fifo): two churned big-tier fedbuff jobs on thin
+  8 MB/s uplinks each run slower than solo, but the links stay busy —
+  aggregate round throughput holds >= 0.9x the solo sum.
+* **Priority admission**: the same pair under ``policy="priority"``
+  keeps the foreground job within 1.25x its solo round time (the
+  background tenant absorbs the contention).
+* **Decision flip**: the fig10-style solo decision table (winner
+  backend per tier, comm-exposed semisync rounds) is recomputed with a
+  checkpoint-sync traffic generator co-located on the same links. A
+  foreground flow queues behind the hog's 1.2 GB residual no matter how
+  small its own payload is, while grpc+s3's store legs ride the object
+  store instead of the contended pipes — so at least one tier's winner
+  flips from a fabric backend to grpc+s3 under contention.
+
+Gates (the PR's acceptance criteria, re-checked on every bench run):
+
+* single-tenant bit-identity: one job driven through the whole tenancy
+  machinery (job namespace, MultiScheduler bootstrap, shared_links off)
+  must replay the exact solo event trace and wire stats — the refactor's
+  safety net, gated the way fig11 gates the fleet engine.
+* co-located jobs each slower than solo, aggregate throughput >= 0.9x.
+* priority keeps the foreground within 1.25x its solo round time.
+* >= 1 tier flips its winner backend vs the solo decision table.
+
+Writes ``benchmarks/out/fig12_multitenant.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+BENCH_NAME = "fig12"
+BENCH_ORDER = 111  # right after fig11, before the trajectory gate
+BENCH_IN_QUICK = True
+
+_OUT = os.path.join(os.path.dirname(__file__), "out",
+                    "fig12_multitenant.json")
+
+# -- the contended deployment family ----------------------------------------
+N_CLIENTS = 4
+LATENCY_MS = 40.0
+# co-location cells: thin shared uplinks, availability churn to break
+# the deterministic convoy (phase-locked identical tenants never meet)
+COLO_BW_MB = 8.0
+COLO_CHURN = "auto:400/40"
+COLO_HORIZON_S = 2000.0
+COLO_ROUNDS = 5
+FG_START_S = 13.0
+MIN_AGG_THROUGHPUT = 0.9
+MAX_PRIORITY_SLOWDOWN = 1.25
+# decision-flip cells: mid-bandwidth uplinks where a fabric backend
+# wins solo, + a near-continuous large-tier traffic generator
+FLIP_BW_MB = 300.0
+FLIP_TIERS_FULL = ("small", "medium", "big")
+FLIP_TIERS_QUICK = ("small", "big")
+FLIP_BACKENDS = ("mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc",
+                 "grpc+s3")
+FLIP_ROUNDS = 3
+HOG_ROUNDS = 150
+
+
+def _topo(bw_mb: float):
+    from repro.scenario import EdgeSpec, TopologySpec
+    edges = tuple(EdgeSpec(src="server", dst=f"client{i}",
+                           bw_single_mb=bw_mb, bw_multi_mb=bw_mb,
+                           latency_ms=LATENCY_MS)
+                  for i in range(N_CLIENTS))
+    return TopologySpec(kind="geo_distributed", num_clients=N_CLIENTS,
+                        edges=edges)
+
+
+def _colo_scenario(name: str, seed: int):
+    from repro.scenario import (ChannelSpec, FaultSpec, FleetSpec, Scenario,
+                                StrategySpec)
+    return Scenario(name=name, seed=seed, topology=_topo(COLO_BW_MB),
+                    fleet=FleetSpec(tier="big"),
+                    channel=ChannelSpec(backend="grpc"),
+                    faults=FaultSpec(availability_trace=COLO_CHURN,
+                                     trace_horizon_s=COLO_HORIZON_S),
+                    strategy=StrategySpec(mode="fedbuff", rounds=COLO_ROUNDS,
+                                          buffer_k=2))
+
+
+def _flip_fg(tier: str, backend: str):
+    from repro.scenario import (ChannelSpec, FleetSpec, Scenario,
+                                StrategySpec)
+    return Scenario(name=f"fig12-flip-{tier}-{backend}", seed=0,
+                    topology=_topo(FLIP_BW_MB),
+                    fleet=FleetSpec(tier=tier),
+                    channel=ChannelSpec(backend=backend),
+                    strategy=StrategySpec(mode="semisync", rounds=FLIP_ROUNDS,
+                                          quorum_fraction=1.0))
+
+
+def _flip_hog():
+    """Checkpoint-sync tenant: all wire, no training gaps (train_s
+    override) — near-continuous 1.2 GB flows on every shared edge."""
+    from repro.scenario import (ChannelSpec, FleetSpec, Scenario,
+                                StrategySpec)
+    return Scenario(name="fig12-hog", seed=1, topology=_topo(FLIP_BW_MB),
+                    fleet=FleetSpec(tier="large", train_s=0.1),
+                    channel=ChannelSpec(backend="mpi_mem_buff"),
+                    strategy=StrategySpec(mode="fedbuff", rounds=HOG_ROUNDS,
+                                          buffer_k=1))
+
+
+def _pair(policy: str):
+    from repro.scenario import FabricSpec, JobSpec, MultiScenario
+    return MultiScenario(
+        name=f"fig12-pair-{policy}",
+        fabric=FabricSpec(policy=policy, shared_links=True),
+        jobs=(JobSpec("fg", _colo_scenario("fig12-fg", 0), priority=1,
+                      start_s=FG_START_S),
+              JobSpec("bg", _colo_scenario("fig12-bg", 1))))
+
+
+# -- gate 1: single-tenant bit-identity -------------------------------------
+
+def _solo_trace(sc, tag: str):
+    """Plain pre-tenancy solo run: build_runtime + FLScheduler."""
+    from repro.configs.paper_tiers import TIERS
+    from repro.core.message import VirtualPayload
+    from repro.fl import make_strategy
+    from repro.fl.fault import make_availability
+    from repro.fl.scheduler import FLScheduler
+    from repro.scenario import build_runtime
+    from repro.sweep.runners import make_clients
+    rt = build_runtime(sc)
+    clients = make_clients(rt, compression=sc.channel.compression)
+    strategy = make_strategy(sc.fl_config(), sc.topology.num_clients)
+    availability = make_availability(
+        sc.faults.availability_trace, [c.client_id for c in clients],
+        horizon_s=sc.faults.trace_horizon_s, seed=sc.seed)
+    sched = FLScheduler(rt.make_backend("server", compression="none"),
+                        clients, strategy,
+                        local_steps=sc.fleet.local_steps,
+                        availability=availability,
+                        cohort_k=sc.fleet.cohort_k, cohort_seed=sc.seed,
+                        streaming_hub=sc.strategy.streaming_hub)
+    tier = TIERS[sc.fleet.tier]
+    rep = sched.run(VirtualPayload(tier.payload_bytes, tag=tag),
+                    max_aggregations=sc.strategy.rounds)
+    return rep, list(sched.loop.trace), rt.fabric
+
+
+def _tenant_trace(sc, job_name: str):
+    """The same scenario through the full tenancy machinery: namespaced
+    job on a FabricSpec'd fabric, bootstrapped by MultiScheduler on a
+    shared loop (shared_links off = the single-tenant safety net)."""
+    from repro.configs.paper_tiers import TIERS
+    from repro.core.backends import make_backend
+    from repro.core.message import VirtualPayload
+    from repro.core.netsim import NCAL
+    from repro.core.objectstore import ObjectStore
+    from repro.core.transport import Fabric, FabricSpec
+    from repro.fl import make_strategy
+    from repro.fl.client import FLClient
+    from repro.fl.fault import make_availability
+    from repro.fl.multijob import MultiScheduler
+    from repro.fl.scheduler import EventLoop, FLScheduler
+    from repro.scenario import fault_model_for
+    env = sc.topology.build()
+    fabric = Fabric(env, fault_model=fault_model_for(sc),
+                    spec=FabricSpec(policy="fifo", shared_links=False))
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    handle = fabric.job(job_name)
+    store = ObjectStore(NCAL, fail_rate=sc.faults.store_fail_rate)
+    tier = TIERS[sc.fleet.tier]
+
+    def mk(host_id, compression):
+        return make_backend(sc.channel.backend, env, fabric, host_id,
+                            store=store,
+                            compression=None if compression in ("", "none")
+                            else compression,
+                            wire_codec=sc.channel.wire_codec,
+                            chunk_mb=sc.channel.chunk_mb, job=handle)
+
+    loop = EventLoop()
+    clients = [FLClient(h.host_id, mk(h.host_id, sc.channel.compression),
+                        sim_train_s=tier.train_s(sc.topology.kind))
+               for h in env.clients]
+    strategy = make_strategy(sc.fl_config(), sc.topology.num_clients)
+    availability = make_availability(
+        sc.faults.availability_trace, [c.client_id for c in clients],
+        horizon_s=sc.faults.trace_horizon_s, seed=sc.seed)
+    sched = FLScheduler(mk("server", "none"), clients, strategy,
+                        local_steps=sc.fleet.local_steps,
+                        availability=availability,
+                        cohort_k=sc.fleet.cohort_k, cohort_seed=sc.seed,
+                        streaming_hub=sc.strategy.streaming_hub, loop=loop)
+    multi = MultiScheduler(loop)
+    multi.add_job(job_name, sched,
+                  VirtualPayload(tier.payload_bytes, tag=f"multi-{job_name}"),
+                  max_aggregations=sc.strategy.rounds)
+    rep = multi.run()[job_name]
+    return rep, list(loop.trace), fabric, handle
+
+
+def _identity_gate():
+    sc = _colo_scenario("fig12-ident", 0)
+    sc.validate()
+    # the solo payload tag must match the multi driver's job-derived tag
+    rep_s, trace_s, fab_s = _solo_trace(sc, tag="multi-solo")
+    rep_m, trace_m, fab_m, handle = _tenant_trace(sc, "solo")
+    # the only multi-only event is the bootstrap marker
+    trace_m = [e for e in trace_m if not e[1].startswith("job-start:")]
+    identical = trace_s == trace_m
+    assert identical, (
+        "fig12: single-tenant trace diverged through the tenancy "
+        "machinery (job namespace + MultiScheduler + FabricSpec)")
+    assert rep_s.sim_time == rep_m.sim_time
+    stats_s = {k: fab_s.stats[k] for k in ("messages", "bytes")}
+    stats_m = {k: fab_m.stats[k] for k in ("messages", "bytes")}
+    stats_j = {k: fab_m.stats_for(handle.name)[k]
+               for k in ("messages", "bytes")}
+    assert stats_s == stats_m == stats_j, (
+        f"fig12: single-tenant wire stats diverged: solo {stats_s}, "
+        f"multi global {stats_m}, multi per-job {stats_j}")
+    return {"trace_identical": identical, "events": len(trace_s),
+            "sim_time_s": rep_s.sim_time, **stats_s}
+
+
+# -- gates 2+3: co-location and priority admission --------------------------
+
+def _colocation_gates():
+    from repro.sweep.runners import run_multi, run_scenario
+    solo = {name: run_scenario(_colo_scenario(f"fig12-{name}", seed))
+            for name, seed in (("fg", 0), ("bg", 1))}
+    out = {"solo": {n: {"round_s": r["round_s"]} for n, r in solo.items()}}
+
+    fifo = run_multi(_pair("fifo"))
+    ratios = {n: fifo["jobs"][n]["round_s"] / solo[n]["round_s"]
+              for n in ("fg", "bg")}
+    agg = (sum(1.0 / fifo["jobs"][n]["round_s"] for n in ("fg", "bg"))
+           / sum(1.0 / solo[n]["round_s"] for n in ("fg", "bg")))
+    for n, r in ratios.items():
+        assert r > 1.0, (
+            f"fig12: co-located job '{n}' was not slower than solo "
+            f"({r:.3f}x) — the shared uplink shows no contention")
+    assert agg >= MIN_AGG_THROUGHPUT, (
+        f"fig12: aggregate round throughput {agg:.3f}x solo < "
+        f"{MIN_AGG_THROUGHPUT}x — co-location is pathological, not shared")
+    out["fifo"] = {"slowdown": ratios, "aggregate_throughput": agg}
+
+    prio = run_multi(_pair("priority"))
+    fg_ratio = prio["jobs"]["fg"]["round_s"] / solo["fg"]["round_s"]
+    assert fg_ratio <= MAX_PRIORITY_SLOWDOWN, (
+        f"fig12: priority admission left the foreground at {fg_ratio:.3f}x "
+        f"solo (bound {MAX_PRIORITY_SLOWDOWN}x)")
+    out["priority"] = {
+        "fg_slowdown": fg_ratio,
+        "bg_slowdown": prio["jobs"]["bg"]["round_s"] / solo["bg"]["round_s"]}
+    return out
+
+
+# -- gate 4: the decision table flips under contention -----------------------
+
+def _decision_table(tiers):
+    from repro.scenario import FabricSpec, JobSpec, MultiScenario
+    from repro.sweep.runners import run_multi, run_scenario
+    hog = _flip_hog()
+    table = {}
+    for tier in tiers:
+        cells = {}
+        for backend in FLIP_BACKENDS:
+            fg = _flip_fg(tier, backend)
+            solo = run_scenario(fg)["round_s"]
+            ms = MultiScenario(
+                name=f"fig12-flip-{tier}-{backend}",
+                fabric=FabricSpec(policy="fifo", shared_links=True),
+                jobs=(JobSpec("fg", fg, start_s=7.0, rounds=FLIP_ROUNDS),
+                      JobSpec("bg", hog, rounds=HOG_ROUNDS)))
+            contended = run_multi(ms)["jobs"]["fg"]["round_s"]
+            cells[backend] = {"solo_round_s": solo,
+                              "contended_round_s": contended}
+        solo_winner = min(cells, key=lambda b: cells[b]["solo_round_s"])
+        cont_winner = min(cells, key=lambda b: cells[b]["contended_round_s"])
+        table[tier] = {"cells": cells, "solo_winner": solo_winner,
+                       "contended_winner": cont_winner,
+                       "flipped": solo_winner != cont_winner}
+    flips = [t for t, row in table.items() if row["flipped"]]
+    assert flips, (
+        "fig12: no (backend, tier) cell flipped its winner under "
+        "contention — the solo decision table survived co-location")
+    return table, flips
+
+
+def run(verbose: bool = True, quick: bool = False):
+    tiers = FLIP_TIERS_QUICK if quick else FLIP_TIERS_FULL
+    identity = _identity_gate()
+    colo = _colocation_gates()
+    table, flips = _decision_table(tiers)
+
+    result = {
+        "bench": "fig12_multitenant",
+        "deployment": {"clients": N_CLIENTS, "latency_ms": LATENCY_MS,
+                       "colo_bw_mb": COLO_BW_MB, "flip_bw_mb": FLIP_BW_MB,
+                       "churn": COLO_CHURN, "fg_start_s": FG_START_S},
+        "single_tenant_identity": identity,
+        "colocation": colo,
+        "decision_table": table,
+        "flipped_tiers": flips,
+    }
+    os.makedirs(os.path.dirname(_OUT), exist_ok=True)
+    with open(_OUT, "w") as f:
+        json.dump(result, f, indent=2)
+
+    rows = [{"name": "fig12/identity",
+             "trace_identical": identity["trace_identical"]},
+            {"name": "fig12/fifo",
+             "fg_slowdown": colo["fifo"]["slowdown"]["fg"],
+             "bg_slowdown": colo["fifo"]["slowdown"]["bg"],
+             "aggregate_throughput": colo["fifo"]["aggregate_throughput"]},
+            {"name": "fig12/priority",
+             "fg_slowdown": colo["priority"]["fg_slowdown"]}]
+    rows += [{"name": f"fig12/flip/{t}",
+              "solo_winner": row["solo_winner"],
+              "contended_winner": row["contended_winner"]}
+             for t, row in table.items()]
+
+    if verbose:
+        print("\n== Fig 12: multi-tenant fabric (shared links, admission "
+              "policies, decision flip) ==")
+        print(f"single-tenant identity: trace of {identity['events']} "
+              f"events + wire stats bit-identical through the tenancy "
+              f"machinery")
+        f_ = colo["fifo"]
+        print(f"fifo co-location: fg {f_['slowdown']['fg']:.3f}x / "
+              f"bg {f_['slowdown']['bg']:.3f}x solo round time, aggregate "
+              f"throughput {f_['aggregate_throughput']:.3f}x "
+              f"(gate >= {MIN_AGG_THROUGHPUT}x)")
+        print(f"priority admission: fg {colo['priority']['fg_slowdown']:.3f}x"
+              f" solo (gate <= {MAX_PRIORITY_SLOWDOWN}x), bg absorbs at "
+              f"{colo['priority']['bg_slowdown']:.3f}x")
+        print(f"{'tier':>8s} {'solo winner':>14s} {'contended':>14s}")
+        for t, row in table.items():
+            mark = "  << FLIP" if row["flipped"] else ""
+            print(f"{t:>8s} {row['solo_winner']:>14s} "
+                  f"{row['contended_winner']:>14s}{mark}")
+        print(f"[fig12] record -> {_OUT}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="decision table over 2 tiers instead of 3")
+    args = ap.parse_args()
+    run(quick=args.quick)

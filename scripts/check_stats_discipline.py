@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Lint: all wire-stat mutations must flow through Fabric.account.
+
+The multi-tenant fabric keeps one global ledger plus a per-job view and
+guarantees the views sum to the global exactly. That invariant lives in
+ONE method — ``Fabric.account`` — so any code that writes
+``fabric.stats[...] += ...`` (or pokes a ``stats_for(...)`` /
+``job_stats[...]`` view) directly will silently desynchronise the
+per-job decomposition. This script fails CI on any such write outside
+the Fabric class in src/repro/core/transport.py.
+
+Usage: python scripts/check_stats_discipline.py [root ...]
+Exits 1 and prints file:line for every violation.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_ROOTS = ("src", "benchmarks", "examples", "scripts")
+ALLOWED = REPO / "src" / "repro" / "core" / "transport.py"
+STAT_NAMES = {"stats", "job_stats"}
+
+
+def _is_stats_store(node: ast.expr) -> bool:
+    """True for stats writes through a *foreign* object:
+    ``<x>.stats[...]``, ``<x>.job_stats[...]``,
+    ``<x>.stats_for(...)[...]``. A class mutating its own ledger
+    (``self.stats[...]``) is its own business; reaching into another
+    object's ledger bypasses that object's accounting invariants."""
+    if not isinstance(node, ast.Subscript):
+        return False
+    base = node.value
+    if isinstance(base, ast.Attribute) and base.attr in STAT_NAMES:
+        owner = base.value
+        return not (isinstance(owner, ast.Name) and owner.id == "self")
+    if (isinstance(base, ast.Call)
+            and isinstance(base.func, ast.Attribute)
+            and base.func.attr == "stats_for"):
+        owner = base.func.value
+        return not (isinstance(owner, ast.Name) and owner.id == "self")
+    return False
+
+
+def _violations(path: Path) -> list[int]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as exc:  # a broken file is its own CI failure
+        print(f"{path}: unparseable ({exc})", file=sys.stderr)
+        return [exc.lineno or 0]
+    lines = []
+    for node in ast.walk(tree):
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        elif isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        for tgt in targets:
+            if _is_stats_store(tgt):
+                lines.append(node.lineno)
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] or [REPO / r for r in DEFAULT_ROOTS]
+    bad = []
+    for root in roots:
+        if not root.exists():
+            continue
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            if f.resolve() == ALLOWED:
+                continue  # Fabric.account and friends live here
+            for ln in _violations(f):
+                try:
+                    rel = f.relative_to(REPO)
+                except ValueError:
+                    rel = f
+                bad.append(f"{rel}:{ln}")
+    if bad:
+        print("stats-discipline violations (mutate wire stats only via "
+              "Fabric.account):", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print("stats discipline OK: no direct stats mutations outside "
+          "Fabric.account")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

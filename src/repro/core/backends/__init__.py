@@ -48,12 +48,14 @@ BACKEND_NAMES = ["mpi_generic", "mpi_mem_buff", "grpc", "torch_rpc",
 
 def make_backend(name: str, env: Environment, fabric: Fabric, host_id: str,
                  store=None, *, compression=None, wire_codec=None,
-                 chunk_mb: float = 0.0, **kw):
+                 chunk_mb: float = 0.0, job=None, **kw):
     """``compression``/``wire_codec``/``chunk_mb`` configure the
     backend's wire stack (core/channel.py): 'qsgd[:block]' /
     'topk[:frac]' insert a payload CompressStage, 'zlib[:level]' a
     byte-domain WireCompressStage, chunk_mb > 0 a ChunkStage. Defaults
-    reproduce the plain [SerializeStage] stack bit-for-bit."""
+    reproduce the plain [SerializeStage] stack bit-for-bit. ``job`` (a
+    ``transport.JobHandle``) binds the backend to one tenant of a
+    multi-tenant fabric; None is the default single-job tenant."""
     from repro.compression.stages import split_codecs
     # one shared rule: a byte codec named via `compression` moves to the
     # wire-domain slot; naming two different wire codecs is an error
@@ -61,16 +63,16 @@ def make_backend(name: str, env: Environment, fabric: Fabric, host_id: str,
     if name == "grpc+s3":
         return GrpcS3Backend(env, fabric, host_id, store,
                              compression=compression, wire_codec=wire_codec,
-                             chunk_mb=chunk_mb, **kw)
+                             chunk_mb=chunk_mb, job=job, **kw)
     if name == "auto":
         from repro.core.backends.auto import AutoBackend
         return AutoBackend(env, fabric, host_id, store,
                            compression=compression, wire_codec=wire_codec,
-                           chunk_mb=chunk_mb, **kw)
+                           chunk_mb=chunk_mb, job=job, **kw)
     if name in POLICIES:
         return CommBackend(POLICIES[name], env, fabric, host_id, store,
                            compression=compression, wire_codec=wire_codec,
-                           chunk_mb=chunk_mb)
+                           chunk_mb=chunk_mb, job=job)
     raise KeyError(f"unknown backend '{name}'; options: {BACKEND_NAMES}")
 
 

@@ -27,24 +27,28 @@ class AutoBackend:
 
     def __init__(self, env, fabric, host_id, store=None, *,
                  compression=None, wire_codec=None, chunk_mb: float = 0.0,
-                 **kw):
+                 job=None, **kw):
         from repro.core.backends import POLICIES
         self.env = env
         self.fabric = fabric
         self.host_id = host_id
         self.store = store
+        self.job = job
+        self.job_name = job.name if job is not None else ""
         # every routed backend carries the same wire-stack configuration;
         # decode follows the wire's recorded stages, so mixed routes stay
-        # coherent
+        # coherent — and the same tenant (one shared namespaced endpoint)
         self.grpc = CommBackend(POLICIES["grpc"], env, fabric, host_id,
                                 compression=compression,
-                                wire_codec=wire_codec, chunk_mb=chunk_mb)
+                                wire_codec=wire_codec, chunk_mb=chunk_mb,
+                                job=job)
         self.membuff = CommBackend(POLICIES["mpi_mem_buff"], env, fabric,
                                    host_id, compression=compression,
-                                   wire_codec=wire_codec, chunk_mb=chunk_mb)
+                                   wire_codec=wire_codec, chunk_mb=chunk_mb,
+                                   job=job)
         self.s3 = (GrpcS3Backend(env, fabric, host_id, store,
                                  compression=compression,
-                                 wire_codec=wire_codec, **kw)
+                                 wire_codec=wire_codec, job=job, **kw)
                    if store is not None and env.name != "lan" else None)
         from repro.compression.stages import split_codecs
         self._codec, self._wire_codec = split_codecs(compression, wire_codec)

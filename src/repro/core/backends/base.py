@@ -82,13 +82,20 @@ class CommBackend:
     def __init__(self, policy: BackendPolicy, env: Environment,
                  fabric: Fabric, host_id: str, store=None, *,
                  compression=None, wire_codec=None, chunk_mb: float = 0.0,
-                 error_feedback: bool = True):
+                 error_feedback: bool = True, job=None):
         self.policy = policy
         self.env = env
         self.fabric = fabric
         self.host_id = host_id
         self.store = store
-        self.endpoint = fabric.endpoints.get(host_id) or fabric.register(host_id)
+        # tenancy: a transport.JobHandle namespaces this backend's
+        # endpoint, transfer ids and stats; None = the default tenant
+        # (plain host_id keys — the exact legacy fabric surface)
+        self.job = job
+        self.job_name = job.name if job is not None else ""
+        self.job_prio = job.priority if job is not None else 0
+        self.endpoint = fabric.endpoint_for(host_id, self.job_name) \
+            or fabric.register(host_id, job=self.job_name)
         self.serializer = SERIALIZERS[policy.serializer]
         # the wire pipeline every send/recv path drives (core/channel.py);
         # default stack = [SerializeStage] -> pre-stack behaviour, exactly
@@ -165,14 +172,22 @@ class CommBackend:
         NACK turnaround on ``edge`` before the retransmit. Returns
         ``(finish, give_up_t)`` — ``finish`` is None when the bounded
         retries are exhausted, with ``give_up_t`` the moment the sender
-        abandons the transfer. With no fault model installed this is
-        exactly ``depart + nbytes/rate``."""
-        fm = self.fabric.fault_model
-        tx = nbytes / rate
+        abandons the transfer. Each transmission rides the fabric's
+        shared edge pipe (``link_transmit``) — with ``shared_links`` off
+        and no fault model this is exactly ``depart + nbytes/rate``."""
+        fab = self.fabric
+
+        def tx_done(t0: float) -> float:
+            return fab.link_transmit(self.host_id, dst_id, t0, nbytes, rate,
+                                     capacity=edge.region.bw_multi,
+                                     job=self.job_name, prio=self.job_prio)
+
+        fm = fab.fault_model
         if fm is None:
-            return depart + tx, depart + tx
+            fin = tx_done(depart)
+            return fin, fin
         if xid is None:
-            xid = self.fabric.next_transfer_id()
+            xid = fab.next_transfer_id(self.job_name)
         hosts = (self.host_id, dst_id)
         t = fm.delay(hosts, depart)
         n = fm.attempts(self.host_id, dst_id, xid, chunk_index)
@@ -180,13 +195,14 @@ class CommBackend:
         # turnaround; retransmits are the transmissions beyond the original
         lost_tx = (fm.max_retries + 1) if n is None else (n - 1)
         for _ in range(lost_tx):
-            t = fm.delay(hosts, t + tx + fm.detect_delay(edge))
+            t = fm.delay(hosts, tx_done(t) + fm.detect_delay(edge))
         if n is None:
-            self.fabric.stats["retransmits"] += fm.max_retries
-            self.fabric.stats["transfers_failed"] += 1
+            fab.account(0.0, 0, retransmits=fm.max_retries,
+                        transfers_failed=1, job=self.job_name)
             return None, t
-        self.fabric.stats["retransmits"] += lost_tx
-        return t + tx, t + tx
+        fab.account(0.0, 0, retransmits=lost_tx, job=self.job_name)
+        fin = tx_done(t)
+        return fin, fin
 
     # ------------------------------------------------------------------
     def isend(self, msg: FLMessage, now: float) -> SendHandle:
@@ -210,7 +226,7 @@ class CommBackend:
         if enc.chunks:
             # pipelined chunks: chunk i's transfer starts once it is
             # encoded AND the link is free (overlaps encode with network)
-            xid = self.fabric.next_transfer_id()
+            xid = self.fabric.next_transfer_id(self.job_name)
             link_free, arrivals = ser_start, []
             for i, (nb, ready_off) in enumerate(enc.chunks):
                 dep = max(ser_start + ready_off, link_free)
@@ -223,7 +239,8 @@ class CommBackend:
                 arrivals.append(base + fin)
             if failed_at is None:
                 arrive = self.fabric.deliver_chunked(msg, enc.wire, arrivals,
-                                                     xid=xid)
+                                                     xid=xid,
+                                                     job=self.job_name)
         else:
             fin, give_up = self._link_schedule(msg.receiver, start,
                                                enc.wire.nbytes, rate, edge,
@@ -232,7 +249,8 @@ class CommBackend:
                 failed_at = give_up
             else:
                 arrive = self.fabric.deliver(msg, enc.wire, start,
-                                             base + fin - start)
+                                             base + fin - start,
+                                             job=self.job_name)
         if failed_at is not None:
             # bounded retries exhausted: nothing is delivered; the sender
             # frees its buffers when it gives up and surfaces the failure.
@@ -293,13 +311,22 @@ class CommBackend:
             # first-chunk-ready could finish a transfer before its encode
             # completes — broadcasts keep whole-wire (encode-complete)
             # dispatch
-            transfers.append(Transfer(
+            tr = Transfer(
                 start=start,
                 src=src,
                 dst=self.env.host(msg.receiver),
                 nbytes=enc.wire.nbytes,
                 conns=self.policy.conns_per_transfer,
-                link_region=eff_region, tag=f"msg{msg.msg_id}"))
+                link_region=eff_region, tag=f"msg{msg.msg_id}")
+            if self.fabric.spec.shared_links:
+                # shared-bottleneck edge: this wave's flows through the
+                # (src, dst) pipe split whatever other tenants left free
+                tr.edge_key = (self.host_id, msg.receiver)
+                tr.edge_cap = self.fabric.link_headroom(
+                    self.host_id, msg.receiver, start + eff_region.latency,
+                    capacity=eff_region.bw_multi, job=self.job_name,
+                    prio=self.job_prio, nbytes=tr.nbytes)
+            transfers.append(tr)
         return encs, transfers
 
     def broadcast(self, msgs: Sequence[FLMessage], now: float, _encs=None):
@@ -327,7 +354,7 @@ class CommBackend:
                 # lost chunks are retransmitted serially after the fluid
                 # transfer (capped at max_retries, always delivered —
                 # bounded-failure semantics live on the isend path)
-                xid = self.fabric.next_transfer_id()
+                xid = self.fabric.next_transfer_id(self.job_name)
                 n = fm.attempts(self.host_id, msg.receiver, xid, 0,
                                 forced=True)
                 if n > 1:
@@ -335,12 +362,22 @@ class CommBackend:
                     rate = edge.conn_cap(self.policy.conns_per_transfer)
                     finish += (n - 1) * (enc.wire.nbytes / rate
                                          + fm.detect_delay(edge))
-                    self.fabric.stats["retransmits"] += n - 1
-            self.fabric.endpoints[msg.receiver].inbox.append(
+                    self.fabric.account(0.0, 0, retransmits=n - 1,
+                                        job=self.job_name)
+            if self.fabric.spec.shared_links:
+                # publish this flow's occupancy so later tenants contend
+                begin = tr.start + tr.latency()
+                if tr.finish > begin:
+                    self.fabric.link_reserve(
+                        self.host_id, msg.receiver, begin, tr.finish,
+                        tr.nbytes / (tr.finish - begin),
+                        capacity=self._link_region(msg.receiver).bw_multi,
+                        job=self.job_name, prio=self.job_prio)
+            self.fabric._ep(msg.receiver, self.job_name).inbox.append(
                 _delivery(msg, enc.wire, finish))
             # broadcast bypasses Fabric.deliver (the fluid solver already
             # owns the timing) — keep the wire accounting consistent
-            self.fabric.account(enc.wire.nbytes)
+            self.fabric.account(enc.wire.nbytes, job=self.job_name)
             mem.free(a, finish)
             arrives.append(finish)
         return max(e[1] for e in encs), arrives

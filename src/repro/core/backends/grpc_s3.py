@@ -38,7 +38,8 @@ GRPC_S3_POLICY = BackendPolicy(
 class GrpcS3Backend(CommBackend):
     def __init__(self, env, fabric, host_id, store: ObjectStore,
                  parts: int = S3_MAX_PARTS, presign: bool = True,
-                 compression=None, wire_codec=None, chunk_mb: float = 0.0):
+                 compression=None, wire_codec=None, chunk_mb: float = 0.0,
+                 job=None):
         # chunk_mb accepted for interface parity but not stacked:
         # multipart PUT/GET *is* this backend's chunk pipelining.
         # Error feedback is off: the content-addressed cache re-serves a
@@ -47,7 +48,7 @@ class GrpcS3Backend(CommBackend):
         # cache hits while other backends kept refining)
         super().__init__(GRPC_S3_POLICY, env, fabric, host_id, store,
                          compression=compression, wire_codec=wire_codec,
-                         error_feedback=False)
+                         error_feedback=False, job=job)
         assert store is not None, "grpc+s3 requires an object store"
         self.parts = parts
         self.presign = presign
@@ -67,7 +68,7 @@ class GrpcS3Backend(CommBackend):
         fp = self._fingerprint(msg)
         if fp in self._key_cache and self.store.has(self._key_cache[fp][0]):
             key, done = self._key_cache[fp]
-            self.store.stats["cache_hits"] += 1
+            self.store.note_cache_hit()
             # the cached upload may still be in flight (concurrent isends
             # of the same model): readers wait for it to land
             return key, max(now, done)
@@ -131,7 +132,8 @@ class GrpcS3Backend(CommBackend):
                               nbytes=self.store.size(key), failed=True)
         arrive_meta = self.fabric.deliver(
             meta, WireData(nbytes=256), up_done,
-            self._overhead(region) + region.latency + fin - up_done)
+            self._overhead(region) + region.latency + fin - up_done,
+            job=self.job_name)
         # receiver pulls from S3 after metadata arrives; what moves is the
         # stored (post-stack, possibly compressed) wire, not the payload
         wire_nbytes = self.store.size(key)
@@ -140,7 +142,7 @@ class GrpcS3Backend(CommBackend):
         # the GET leg rides the store, not Fabric.deliver (which counted
         # only the 256 B meta record): account the payload bytes so
         # bytes_on_wire is comparable across backends and modes
-        self.fabric.account(wire_nbytes, messages=0)
+        self.fabric.account(wire_nbytes, messages=0, job=self.job_name)
         return SendHandle(msg=msg, issued=now, start=up_done,
                           inbox_t=arrive_meta, arrive=arrive_meta + get_t,
                           nbytes=wire_nbytes)
@@ -164,12 +166,13 @@ class GrpcS3Backend(CommBackend):
                 # departure + forced (reliable-stream) retransmits
                 dep = fm.delay((self.host_id, msg.receiver), up_done)
                 n = fm.attempts(self.host_id, msg.receiver,
-                                self.fabric.next_transfer_id(), 0,
-                                forced=True)
+                                self.fabric.next_transfer_id(self.job_name),
+                                0, forced=True)
                 meta_arrive = dep - up_done + meta_arrive + (n - 1) * (
                     256 / region.bw_single + fm.detect_delay(edge))
                 if n > 1:
-                    self.fabric.stats["retransmits"] += n - 1
+                    self.fabric.account(0.0, 0, retransmits=n - 1,
+                                        job=self.job_name)
             dst = self.env.host(msg.receiver)
             tr = self.store.get_transfer(key, dst, meta_arrive, self.parts)
             transfers.append(tr)
@@ -180,11 +183,11 @@ class GrpcS3Backend(CommBackend):
             d_t = (self.channel.decode_time(obj.wire)
                    if obj.wire is not None
                    else self.serializer.deser_time(obj.nbytes))
-            self.fabric.endpoints[msg.receiver].inbox.append(
+            self.fabric._ep(msg.receiver, self.job_name).inbox.append(
                 _delivery(msg, obj.wire, tr.finish))
             # as on the direct-backend broadcast path: the store GET
             # bypasses Fabric.deliver, so count the wire bytes here
-            self.fabric.account(obj.nbytes)
+            self.fabric.account(obj.nbytes, job=self.job_name)
             arrives.append(tr.finish + d_t)
         return up_done, arrives
 

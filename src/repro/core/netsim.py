@@ -203,6 +203,14 @@ class Transfer:
     conns: int = 1
     link_region: Optional[Region] = None  # defaults to the non-hub region
     tag: str = ""
+    # aggregate link modeling (multi-tenant fabric): transfers that stamp
+    # the same ``edge_key`` share ONE contended pipe of ``edge_cap``
+    # bytes/s on top of their per-transfer caps and host NIC budgets —
+    # the shared-bottleneck semantics of Marfoq et al.'s capacity model.
+    # ``None`` (the default) declares no shared edge and leaves every
+    # solver code path bit-identical to the pre-tenancy behaviour.
+    edge_key: Optional[tuple] = None
+    edge_cap: float = 0.0
     # filled by simulate():
     finish: float = math.inf
 
@@ -218,14 +226,22 @@ class Transfer:
 
 
 def _fair_rates(active: Sequence[Transfer]) -> dict:
-    """Max-min fair allocation under per-transfer caps + host NIC budgets."""
+    """Max-min fair allocation under per-transfer caps + host NIC budgets
+    + (when declared) per-edge aggregate pipe budgets: transfers stamping
+    the same ``edge_key`` progressive-fill against one shared ``edge_cap``
+    pool exactly the way they share a host NIC budget. With no edge keys
+    in the active set the extra terms never execute — bit-identical to
+    the pre-tenancy solver."""
     rates = {id(t): 0.0 for t in active}
     caps = {id(t): t.rate_cap() for t in active}
     up = {}
     down = {}
+    edge = {}  # edge_key -> remaining aggregate pipe budget
     for t in active:
         up.setdefault(t.src.host_id, t.src.uplink)
         down.setdefault(t.dst.host_id, t.dst.downlink)
+        if t.edge_key is not None:
+            edge.setdefault(t.edge_key, t.edge_cap)
     unfrozen = set(rates)
     # progressive filling
     for _ in range(len(active) + 2):
@@ -242,6 +258,10 @@ def _fair_rates(active: Sequence[Transfer]) -> dict:
                        and u.dst.host_id == t.dst.host_id)
             share = min(up[t.src.host_id] / n_up, down[t.dst.host_id] / n_dn,
                         caps[id(t)] - rates[id(t)])
+            if t.edge_key is not None:
+                n_e = sum(1 for u in active if id(u) in unfrozen
+                          and u.edge_key == t.edge_key)
+                share = min(share, edge[t.edge_key] / n_e)
             increments[id(t)] = max(share, 0.0)
         if not increments:
             break
@@ -253,6 +273,8 @@ def _fair_rates(active: Sequence[Transfer]) -> dict:
             rates[id(t)] += increments[id(t)]
             up[t.src.host_id] -= increments[id(t)]
             down[t.dst.host_id] -= increments[id(t)]
+            if t.edge_key is not None:
+                edge[t.edge_key] -= increments[id(t)]
             if rates[id(t)] >= caps[id(t)] - 1e-9 or increments[id(t)] <= 1e-9:
                 newly_frozen.add(id(t))
         unfrozen -= newly_frozen
@@ -343,7 +365,7 @@ def _simulate_transfers_scalar(transfers: Sequence[Transfer]) -> Sequence[Transf
     return transfers
 
 
-def _fair_rates_np(caps, src, dst, w, up, dn):
+def _fair_rates_np(caps, src, dst, w, up, dn, ekey=None, ebud=None):
     """Vectorised max-min water-filling over weighted flows.
 
     Mirrors ``_fair_rates`` exactly: each filling iteration computes
@@ -356,7 +378,11 @@ def _fair_rates_np(caps, src, dst, w, up, dn):
     the m members would have done one by one.
 
     caps/src/dst/w are per-flow; up/dn are per-host budget arrays
-    (mutated). Returns per-flow member rates (not multiplied by w)."""
+    (mutated). ``ekey``/``ebud`` carry the aggregate-link pools: per-flow
+    edge index (-1 = no shared edge) and per-edge budget array (mutated)
+    — same progressive-filling treatment as the host budgets, matching
+    the scalar solver's ``edge_key`` terms. Returns per-flow member
+    rates (not multiplied by w)."""
     m = caps.size
     rates = np.zeros(m)
     unfrozen = np.ones(m, bool)
@@ -370,9 +396,21 @@ def _fair_rates_np(caps, src, dst, w, up, dn):
         share = np.minimum(np.minimum(up[src[act]] / wu[src[act]],
                                       dn[dst[act]] / wd[dst[act]]),
                            caps[act] - rates[act])
+        if ebud is not None:
+            ek = ekey[act]
+            on = ek >= 0
+            if on.any():
+                we = np.bincount(ek[on], weights=w[act][on],
+                                 minlength=ebud.size)
+                ek0 = np.maximum(ek, 0)
+                eshare = np.where(on, ebud[ek0] / np.maximum(we[ek0], 1e-300),
+                                  np.inf)
+                share = np.minimum(share, eshare)
         share = np.maximum(share, 0.0)
         np.subtract.at(up, src[act], share * w[act])
         np.subtract.at(dn, dst[act], share * w[act])
+        if ebud is not None and on.any():
+            np.subtract.at(ebud, ek[on], (share * w[act])[on])
         rates[act] += share
         newly = (rates[act] >= caps[act] - 1e-9) | (share <= 1e-9)
         if not newly.any():
@@ -422,6 +460,21 @@ def _simulate_transfers_np(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
     begin = np.fromiter((t.start + t.latency() for t in transfers), float, n)
     sizes = np.fromiter((float(t.nbytes) for t in transfers), float, n)
 
+    # aggregate link pools (shared-bottleneck edges): edge_key -> index
+    e_ix: dict = {}
+    e_bud: list = []
+
+    def eid(t):
+        if t.edge_key is None:
+            return -1
+        i = e_ix.get(t.edge_key)
+        if i is None:
+            i = e_ix[t.edge_key] = len(e_bud)
+            e_bud.append(float(t.edge_cap))
+        return i
+
+    ekey = np.fromiter((eid(t) for t in transfers), np.int64, n)
+
     # ---- collapse singleton-end groups into weighted flows ------------
     # a host is "singleton" when it appears in exactly one transfer: its
     # budget is private to that transfer, so two transfers sharing the
@@ -436,10 +489,10 @@ def _simulate_transfers_np(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
         si, di = src[i], dst[i]
         if occur[di] == 1:  # fan-out: shared src, private dst
             key = ("out", si, caps[i], begin[i], sizes[i],
-                   up_b[di], dn_b[di])
+                   up_b[di], dn_b[di], ekey[i])
         elif occur[si] == 1:  # fan-in: private src, shared dst
             key = ("in", di, caps[i], begin[i], sizes[i],
-                   up_b[si], dn_b[si])
+                   up_b[si], dn_b[si], ekey[i])
         else:
             key = ("solo", i)
         fi = f_key.get(key)
@@ -477,8 +530,10 @@ def _simulate_transfers_np(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
     fcaps = caps[first]
     fbegin = begin[first]
     fsizes = sizes[first]
+    fekey = ekey[first]
     up0 = np.asarray(up_b, float)
     dn0 = np.asarray(dn_b, float)
+    eb0 = np.asarray(e_bud, float) if e_bud else None
 
     # ---- event loop (same structure as the scalar path) ---------------
     remaining = fsizes.copy()
@@ -497,7 +552,9 @@ def _simulate_transfers_np(transfers: Sequence[Transfer]) -> Sequence[Transfer]:
             now = sb[pi]
             continue
         rates = _fair_rates_np(fcaps[act], fsrc[act], fdst[act], fw[act],
-                               up0.copy(), dn0.copy())
+                               up0.copy(), dn0.copy(),
+                               fekey[act] if eb0 is not None else None,
+                               eb0.copy() if eb0 is not None else None)
         t_fin = np.min(remaining[act] / np.maximum(rates, 1e-9))
         t_next = sb[pi] - now if pi < nf else math.inf
         dt = min(t_fin, t_next)

@@ -74,6 +74,12 @@ class ObjectStore:
         """Stored wire bytes (a HEAD request — no data-plane stats)."""
         return self._objects[key].nbytes
 
+    def note_cache_hit(self):
+        """A caller reused a content-addressed key instead of re-PUTting.
+        Callers must not poke ``store.stats`` directly (see
+        scripts/check_stats_discipline.py)."""
+        self.stats["cache_hits"] += 1
+
     # -- data plane ------------------------------------------------------
     def _maybe_fail(self) -> bool:
         # deterministic pseudo-randomness (no wall clock)

@@ -5,6 +5,14 @@ true byte movement, checksums and reconstruction) while charging *simulated*
 time from the netsim model. ``MemoryMeter`` tracks logical sender-side
 buffer allocations — exact for real payloads, identical accounting for
 virtual ones — reproducing Fig 2 (bottom) and Fig 4c.
+
+Multi-tenancy: the fabric is a shared substrate for N concurrent FL jobs.
+``FabricSpec`` declares the admission policy and whether declared edges
+are shared contended pipes; ``Fabric.job`` hands out ``JobHandle`` tenant
+ids that namespace endpoints, transfer-id allocation and stats. The
+default (anonymous) tenant plus ``FabricSpec()`` is bit-identical to the
+historical single-job fabric — every legacy call site keeps its exact
+keys, ids and timing.
 """
 from __future__ import annotations
 
@@ -12,12 +20,21 @@ import contextlib
 import dataclasses
 import heapq
 import itertools
+import math
 from collections import OrderedDict, defaultdict
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.message import FLMessage
 from repro.core.netsim import Environment, Transfer, simulate_transfers
 from repro.core.serialization import WireData
+
+# Control-plane accounting rule: a metadata-only delivery (no wire)
+# still moves a compact record — ~256 B, the same figure the fluid path
+# and the backends' meta encodings have always used. Both ``deliver``
+# and ``deliver_concurrent`` charge it (historically ``deliver`` charged
+# 0 while ``deliver_concurrent`` *timed* 256 but charged 0 — one rule
+# now, regression-tested in tests/test_multitenant.py).
+CTRL_BYTES = 256
 
 # ``Endpoint.pop_ready`` baseline switch, mirroring
 # ``netsim.scalar_transfers``: >0 forces the historical full-inbox scan
@@ -209,92 +226,380 @@ class Endpoint:
         return times
 
 
-class Fabric:
-    """Shared in-proc fabric; one per FL deployment."""
+_POLICIES = ("fifo", "priority", "fair-share")
 
-    def __init__(self, env: Environment, fault_model=None):
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """How a multi-tenant fabric arbitrates its shared substrate.
+
+    ``policy`` decides whose transfers get capacity when a shared edge
+    saturates (all three are work-conserving fluid approximations over
+    the edge's reservation ledger):
+
+    * ``fifo``       — first-come-first-served: earlier reservations
+      hold their rate; later arrivals take what is left.
+    * ``priority``   — strict priority: a transfer contends only with
+      its own job's traffic and foreign traffic of >= its job's
+      priority. Already-granted lower-priority reservations keep their
+      promised times (no revocation), so a saturated edge can briefly
+      overcommit when a high-priority job bursts in — the documented
+      fluid approximation.
+    * ``fair-share`` — each of the k jobs present on the edge is
+      guaranteed capacity/k; spare capacity from idle jobs is usable
+      (work-conserving).
+
+    ``shared_links=False`` (the default) disables the pipe ledger
+    entirely: every dispatch path computes the exact pre-tenancy
+    arithmetic, which is what keeps single-tenant runs bit-identical."""
+    policy: str = "fifo"
+    shared_links: bool = False
+
+    def __post_init__(self):
+        if self.policy not in _POLICIES:
+            raise ValueError(f"FabricSpec.policy: unknown policy "
+                             f"'{self.policy}'; choose from {_POLICIES}")
+
+
+@dataclasses.dataclass
+class JobHandle:
+    """One tenant of a multi-tenant fabric.
+
+    Threading this through a backend namespaces its endpoints, transfer
+    ids and stats under ``name``. ``priority`` matters only under the
+    ``priority`` admission policy (higher = more important)."""
+    fabric: "Fabric"
+    name: str
+    priority: int = 0
+
+    @property
+    def stats(self) -> defaultdict:
+        """This job's wire-accounting view (sums across jobs — including
+        the default tenant's — equal the fabric's legacy globals)."""
+        return self.fabric.stats_for(self.name)
+
+
+class _EdgePipe:
+    """Reservation ledger for one directed shared edge.
+
+    Transfers from *different* fluid calls (different jobs, different
+    event times) contend here: each granted transmission appends
+    ``(t0, t1, rate, prio, job)`` segments, and later requests walk the
+    piecewise-constant residual capacity under the fabric's admission
+    policy. This is what makes co-located jobs actually share a
+    bottleneck — without it every simulate call rides its own private
+    copy of the edge."""
+
+    def __init__(self, capacity: float, policy: str):
+        self.capacity = float(capacity)
+        self.policy = policy
+        self.resv: List[Tuple[float, float, float, int, str]] = []
+
+    # -- queries ---------------------------------------------------------
+    def available(self, t: float, prio: int = 0, job: str = "") -> float:
+        """Rate grantable to a (prio, job) request at time ``t``."""
+        cap = self.capacity
+        total = own = visible = 0.0
+        others = set()
+        for (a, b, r, p, j) in self.resv:
+            if a <= t < b:
+                total += r
+                if j == job:
+                    own += r
+                else:
+                    others.add(j)
+                    if p >= prio:
+                        visible += r
+        if self.policy == "priority":
+            return max(cap - visible - own, 0.0)
+        if self.policy == "fair-share":
+            k = 1 + len(others)
+            return max(cap - total, cap / k - own, 0.0)
+        return max(cap - total, 0.0)  # fifo
+
+    def _next_boundary(self, t: float) -> float:
+        nxt = math.inf
+        for (a, b, _, _, _) in self.resv:
+            if a > t + 1e-12:
+                nxt = min(nxt, a)
+            elif b > t + 1e-12:
+                nxt = min(nxt, b)
+        return nxt
+
+    # -- mutations -------------------------------------------------------
+    def reserve(self, t0: float, t1: float, rate: float, prio: int,
+                job: str):
+        if t1 > t0 and rate > 0.0:
+            self.resv.append((float(t0), float(t1), float(rate),
+                              int(prio), job))
+
+    def transmit(self, depart: float, nbytes: float, want: float,
+                 prio: int, job: str) -> float:
+        """Drain ``nbytes`` at up to ``want`` bytes/s starting at
+        ``depart``, taking whatever the policy grants per segment;
+        returns the finish time and records the granted segments."""
+        return self._walk(depart, nbytes, want, prio, job, record=True)
+
+    def drain_rate(self, t: float, nbytes: float, want: float,
+                   prio: int, job: str) -> float:
+        """Equivalent average rate a queued drain of ``nbytes`` would
+        achieve starting at ``t`` — the walk without recording. This is
+        what the fluid path hands the solver as the edge's aggregate
+        budget: a wave arriving behind another tenant's reservation
+        *queues* (finishes when the drain would), it is never starved to
+        a zero instantaneous-headroom rate."""
+        if nbytes <= 0.0:
+            return want
+        fin = self._walk(t, nbytes, want, prio, job, record=False)
+        return nbytes / max(fin - t, 1e-12)
+
+    def _walk(self, depart: float, nbytes: float, want: float,
+              prio: int, job: str, record: bool) -> float:
+        t = float(depart)
+        remaining = float(nbytes)
+        segs: List[Tuple[float, float, float]] = []
+        while remaining > 1e-9:
+            rate = min(want, self.available(t, prio, job))
+            nxt = self._next_boundary(t)
+            if rate <= 1e-9:
+                if math.isinf(nxt):  # nothing ever frees up: take want
+                    rate = want      # (defensive; ledgers are finite)
+                else:
+                    t = nxt
+                    continue
+            if math.isinf(nxt) or t + remaining / rate <= nxt + 1e-12:
+                dt = remaining / rate
+                segs.append((t, t + dt, rate))
+                t += dt
+                remaining = 0.0
+            else:
+                segs.append((t, nxt, rate))
+                remaining -= rate * (nxt - t)
+                t = nxt
+        if record:
+            for (a, b, r) in segs:
+                self.reserve(a, b, r, prio, job)
+            # bounded ledger: reservations a sim-hour older than this
+            # departure cannot intersect any later walk of consequence
+            if len(self.resv) > 512:
+                cut = depart - 3600.0
+                self.resv = [rv for rv in self.resv if rv[1] > cut]
+        return t
+
+
+class Fabric:
+    """Shared in-proc fabric; one per deployment, N tenant jobs."""
+
+    def __init__(self, env: Environment, fault_model=None,
+                 spec: Optional[FabricSpec] = None):
         self.env = env
+        self.spec = spec or FabricSpec()
         self.endpoints: Dict[str, Endpoint] = {}
         self.clock = 0.0
         self.stats = defaultdict(float)
+        self.job_stats: Dict[str, defaultdict] = {}
+        self.jobs: Dict[str, JobHandle] = {}
         self._chunk_xfer_ids = itertools.count()
+        # per-job transfer-id counters: each tenant's ids start at 0, so
+        # a job's counter-based fault draws are identical whether it
+        # runs solo or co-scheduled (the "" entry *is* the legacy
+        # counter — default-tenant ids are bit-identical)
+        self._xids: Dict[str, itertools.count] = {"": self._chunk_xfer_ids}
+        self._pipes: Dict[Tuple[str, str], _EdgePipe] = {}
         # optional netsim.LinkFaultModel; None = the exact fault-free
         # timing every benchmark/test has always seen (bit-for-bit)
         self.fault_model = fault_model
 
-    def next_transfer_id(self) -> int:
+    # -- tenancy ------------------------------------------------------------
+    def job(self, name: str, priority: int = 0) -> JobHandle:
+        """Register (or fetch) a tenant. Job names namespace endpoint
+        keys as ``{name}::{host_id}``; the empty name is the implicit
+        default tenant every legacy call site already uses."""
+        if "::" in name:
+            raise ValueError(f"job name {name!r} may not contain '::'")
+        h = self.jobs.get(name)
+        if h is None:
+            h = self.jobs[name] = JobHandle(self, name, priority)
+            self.stats_for(name)  # the per-job stats view exists from birth
+        return h
+
+    def stats_for(self, job: str = "") -> defaultdict:
+        js = self.job_stats.get(job)
+        if js is None:
+            js = self.job_stats[job] = defaultdict(float)
+        return js
+
+    @staticmethod
+    def endpoint_key(host_id: str, job: str = "") -> str:
+        return host_id if not job else f"{job}::{host_id}"
+
+    def endpoint_for(self, host_id: str, job: str = "") -> Optional[Endpoint]:
+        return self.endpoints.get(self.endpoint_key(host_id, job))
+
+    def _ep(self, host_id: str, job: str = "") -> Endpoint:
+        """Delivery-side endpoint lookup. The default tenant keeps the
+        historical strict ``endpoints[host_id]`` (KeyError on unknown
+        hosts); named tenants lazily register — a relay channel spun up
+        mid-run by a strategy must not crash its job."""
+        if not job:
+            return self.endpoints[host_id]
+        ep = self.endpoints.get(f"{job}::{host_id}")
+        return ep if ep is not None else self.register(host_id, job=job)
+
+    def next_transfer_id(self, job: str = "") -> int:
         """Transfer-id allocator: backends take an id up front so the
         fault model's counter-based draws and the endpoint's reassembly
-        groups key on the same identity."""
-        return next(self._chunk_xfer_ids)
+        groups key on the same identity. Per-job counters — a tenant's
+        id stream does not depend on who it is co-scheduled with."""
+        c = self._xids.get(job)
+        if c is None:
+            c = self._xids[job] = itertools.count()
+        return next(c)
 
-    def register(self, host_id: str) -> Endpoint:
+    def register(self, host_id: str, job: str = "") -> Endpoint:
         ep = Endpoint(host_id)
-        self.endpoints[host_id] = ep
+        self.endpoints[self.endpoint_key(host_id, job)] = ep
         return ep
 
     def advance_to(self, t: float):
         self.clock = max(self.clock, t)
 
+    # -- shared-bottleneck pipes (FabricSpec.shared_links) -------------------
+    def _pipe(self, src_id: str, dst_id: str, capacity: float) -> _EdgePipe:
+        key = (src_id, dst_id)
+        p = self._pipes.get(key)
+        if p is None:
+            p = self._pipes[key] = _EdgePipe(capacity, self.spec.policy)
+        return p
+
+    def link_transmit(self, src_id: str, dst_id: str, depart: float,
+                      nbytes: float, rate: float, *,
+                      capacity: Optional[float] = None, job: str = "",
+                      prio: int = 0) -> float:
+        """One analytic transmission through the (src, dst) pipe: the
+        finish time under whatever other tenants have already reserved.
+        With ``shared_links`` off this is exactly ``depart + nbytes /
+        rate`` — the pre-tenancy arithmetic, bit for bit."""
+        if not self.spec.shared_links:
+            return depart + nbytes / rate
+        pipe = self._pipe(src_id, dst_id,
+                          rate if capacity is None else capacity)
+        return pipe.transmit(depart, nbytes, rate, prio, job)
+
+    def link_headroom(self, src_id: str, dst_id: str, t: float, *,
+                      capacity: float, job: str = "", prio: int = 0,
+                      nbytes: float = 0.0) -> float:
+        """Aggregate edge capacity a fluid wave may assume at ``t``
+        (full capacity when pipes are off). With ``nbytes`` the answer
+        is the *queueing-equivalent* average rate over the drain of that
+        many bytes — a flow behind another tenant's reservation waits
+        its turn rather than being starved by the instantaneous
+        residual; without it, the instantaneous policy headroom."""
+        if not self.spec.shared_links:
+            return capacity
+        pipe = self._pipe(src_id, dst_id, capacity)
+        if nbytes > 0.0:
+            return min(pipe.drain_rate(t, nbytes, capacity, prio, job),
+                       capacity)
+        return min(pipe.available(t, prio, job), capacity)
+
+    def link_reserve(self, src_id: str, dst_id: str, t0: float, t1: float,
+                     rate: float, *, capacity: float, job: str = "",
+                     prio: int = 0) -> None:
+        """Publish a fluid-solved transfer's occupancy so later tenants
+        see it. No-op when pipes are off."""
+        if self.spec.shared_links:
+            self._pipe(src_id, dst_id, capacity).reserve(t0, t1, rate,
+                                                         prio, job)
+
     # -- point-to-point -----------------------------------------------------
-    def account(self, nbytes: float, messages: int = 1) -> None:
-        """Wire accounting for delivery paths that bypass ``deliver``
-        (concurrent broadcasts, the sync server's gather phase, store
-        GET legs): one place owns the stat names, so a new bypassing
-        call site cannot silently invent its own."""
-        self.stats["messages"] += messages
-        self.stats["bytes"] += nbytes
+    def account(self, nbytes: float = 0.0, messages: int = 1, *,
+                chunks: int = 0, retransmits: int = 0,
+                transfers_failed: int = 0, job: str = "") -> None:
+        """Wire accounting — the ONLY place fabric stats are mutated
+        (scripts/check_stats_discipline.py enforces this): delivery
+        paths, bypassing call sites (concurrent broadcasts, the sync
+        server's gather phase, store GET legs) and the backends' fault
+        counters all come through here, so per-job views stay an exact
+        decomposition of the legacy globals."""
+        for target in (self.stats, self.stats_for(job)):
+            target["messages"] += messages
+            target["bytes"] += nbytes
+            if chunks:
+                target["chunks"] += chunks
+            if retransmits:
+                target["retransmits"] += retransmits
+            if transfers_failed:
+                target["transfers_failed"] += transfers_failed
 
     def deliver(self, msg: FLMessage, wire: Optional[WireData],
-                start: float, duration: float):
+                start: float, duration: float, *, job: str = ""):
         """Schedule arrival of a message whose transfer takes ``duration``
         starting at ``start`` (already computed by backend/netsim)."""
         arrive = start + duration
-        self.endpoints[msg.receiver].inbox.append(Delivery(msg, wire, arrive))
-        self.account(wire.nbytes if wire else 0)
+        self._ep(msg.receiver, job).inbox.append(Delivery(msg, wire, arrive))
+        self.account(wire.nbytes if wire else CTRL_BYTES, job=job)
         return arrive
 
     def deliver_chunked(self, msg: FLMessage, wire: WireData,
                         chunk_arrivals: Sequence[float],
-                        xid: Optional[int] = None):
+                        xid: Optional[int] = None, *, job: str = ""):
         """Chunk-granular delivery of one wire (ChunkStage): each chunk
         lands independently; the receiving endpoint reassembles and
         releases the message at the last chunk's arrival. Returns it."""
-        inbox = self.endpoints[msg.receiver].inbox
+        inbox = self._ep(msg.receiver, job).inbox
         n = len(chunk_arrivals)
         if xid is None:
-            xid = self.next_transfer_id()
+            xid = self.next_transfer_id(job)
         for i, t in enumerate(chunk_arrivals):
             inbox.append(Delivery(msg, wire if i == n - 1 else None, t,
                                   chunk=(i, n, xid)))
-        self.stats["messages"] += 1
-        self.stats["chunks"] += n
-        self.stats["bytes"] += wire.nbytes
+        self.account(wire.nbytes, chunks=n, job=job)
         return max(chunk_arrivals)
 
     # -- batched concurrent transfers (fluid model) ---------------------
-    def deliver_concurrent(self, sends):
+    def deliver_concurrent(self, sends, *, job: str = "", prio: int = 0):
         """sends: list of (msg, wire, start, conns). Contention-aware finish
         times via the fluid solver; delivers each on completion. Returns the
         list of finish times. Transfers ride the topology graph's edge for
         each (sender, receiver) pair (LAN-class edges at their declared
         capacity — policy-level IB-vs-TCP resolution lives in the
-        backends, which pass explicit ``link_region``s instead)."""
+        backends, which pass explicit ``link_region``s instead). Under
+        ``shared_links`` each transfer is clamped to its edge pipe's
+        residual capacity and its occupancy is published for later
+        tenants."""
+        shared = self.spec.shared_links
         transfers = []
         for msg, wire, start, conns in sends:
             src = self.env.host(msg.sender)
             dst = self.env.host(msg.receiver)
             edge = self.env.link(msg.sender, msg.receiver)
-            transfers.append(Transfer(start=start, src=src, dst=dst,
-                                      nbytes=wire.nbytes if wire else 256,
-                                      conns=conns, link_region=edge.region,
-                                      tag=f"msg{msg.msg_id}"))
+            tr = Transfer(start=start, src=src, dst=dst,
+                          nbytes=wire.nbytes if wire else CTRL_BYTES,
+                          conns=conns, link_region=edge.region,
+                          tag=f"msg{msg.msg_id}")
+            if shared:
+                cap = edge.region.bw_multi
+                tr.edge_key = (msg.sender, msg.receiver)
+                tr.edge_cap = self.link_headroom(
+                    msg.sender, msg.receiver, start + edge.region.latency,
+                    capacity=cap, job=job, prio=prio, nbytes=tr.nbytes)
+            transfers.append(tr)
         simulate_transfers(transfers)
         finishes = []
         for (msg, wire, start, conns), tr in zip(sends, transfers):
-            self.endpoints[msg.receiver].inbox.append(
+            self._ep(msg.receiver, job).inbox.append(
                 Delivery(msg, wire, tr.finish))
-            self.stats["messages"] += 1
-            self.stats["bytes"] += wire.nbytes if wire else 0
+            self.account(wire.nbytes if wire else CTRL_BYTES, job=job)
+            if shared:
+                begin = tr.start + tr.latency()
+                span = tr.finish - begin
+                if span > 0:
+                    self.link_reserve(
+                        msg.sender, msg.receiver, begin, tr.finish,
+                        tr.nbytes / span,
+                        capacity=self.env.link(
+                            msg.sender, msg.receiver).region.bw_multi,
+                        job=job, prio=prio)
             finishes.append(tr.finish)
         return finishes

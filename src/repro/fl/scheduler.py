@@ -231,14 +231,25 @@ class FLScheduler:
                  local_steps: int = 10, server_lr: float = 1.0,
                  availability=None, redispatch_backoff_s: float = 30.0,
                  event_queue: str = "calendar", cohort_k: int = 0,
-                 cohort_seed: int = 0, streaming_hub: bool = False):
+                 cohort_seed: int = 0, streaming_hub: bool = False,
+                 loop: Optional[EventLoop] = None):
         self.backend = backend  # server-side CommBackend (or AUTO)
         self.clients = list(clients)
         self.strategy = strategy
         self.local_steps = local_steps
         self.server_lr = server_lr
         self.env = backend.env
-        self.loop = EventLoop(queue=event_queue)
+        # ``loop``: a shared clock injected by the multi-job driver
+        # (fl/multijob.MultiScheduler). Standalone schedulers own a
+        # private loop and stop it at their cap — the exact legacy path;
+        # co-scheduled jobs must NOT stop the shared clock, so they
+        # quiesce through ``finished`` instead and notify ``on_finished``
+        self.loop = EventLoop(queue=event_queue) if loop is None else loop
+        self._shared_loop = loop is not None
+        self.finished = False
+        self.finished_at: Optional[float] = None
+        self.on_finished: Optional[Callable] = None
+        self._start_s = 0.0
         self.version = 0
         self.global_payload = None
         self.global_params = None  # real pytree in live mode
@@ -338,7 +349,12 @@ class FLScheduler:
                            now)
 
     def timer(self, t: float, name: str, fn: Callable, **kw):
-        """Schedule a strategy callback ``fn(scheduler, now, **kw)``."""
+        """Schedule a strategy callback ``fn(scheduler, now, **kw)``.
+        A finished co-scheduled job stops rescheduling itself — its
+        strategy's round timers must not spin the shared clock forever
+        (standalone runs never reach here finished: the loop stopped)."""
+        if self.finished:
+            return
         self.loop.call_at(t, name, lambda now, **k: fn(self, now, **k), **kw)
 
     def _track(self, h, name: str, fn: Callable, **kw) -> bool:
@@ -365,7 +381,7 @@ class FLScheduler:
         Departed clients are skipped; a fault-failed transfer is re-issued
         after a backoff (the model distribution must survive chunk loss),
         bounded so a fully dead link cannot spin the loop forever."""
-        if not self.is_up(client.client_id):
+        if self.finished or not self.is_up(client.client_id):
             return
         if _attempt == 0 and self._cohort_blocked(client.client_id):
             return  # not sampled this round (or its pipeline is live)
@@ -388,6 +404,8 @@ class FLScheduler:
         """Burst dispatch (round start / round close): rides the backend's
         contention-aware concurrent broadcast — the same fluid model the
         sync server charges — instead of independent analytic isends."""
+        if self.finished:
+            return
         clients = [c for c in clients if self.is_up(c.client_id)]
         if self.cohort_active:
             clients = [c for c in clients
@@ -549,7 +567,7 @@ class FLScheduler:
         """Staleness-weighted buffered aggregate; bumps the global version.
         Returns the simulated completion time."""
         records = list(records)
-        if not records:
+        if self.finished or not records:
             return now
         alphas = [self.strategy.staleness_weight(r.staleness)
                   for r in records]
@@ -621,10 +639,44 @@ class FLScheduler:
         reached_cap = (self._max_agg is not None
                        and self.n_aggregations >= self._max_agg)
         if reached_target or reached_cap:
-            self.loop.stop()
+            self.finished = True
+            self.finished_at = done
+            if self._shared_loop:
+                # co-scheduled job: quiesce (dispatch/timer no-op from
+                # here) and tell the driver — the shared clock keeps
+                # running for the other tenants
+                if self.on_finished is not None:
+                    self.on_finished(self, done)
+            else:
+                self.loop.stop()
         return done
 
     # -- entry point -------------------------------------------------------
+    def prepare(self, global_payload, *,
+                max_aggregations: Optional[int] = None,
+                target_effective_updates: Optional[float] = None,
+                start_s: float = 0.0) -> None:
+        """Bootstrap this job onto its loop without running it: install
+        the payload and caps, schedule availability churn, draw the
+        round-0 cohort and fire ``strategy.start``. ``run`` is exactly
+        ``prepare`` + ``loop.run`` + ``report``; the multi-job driver
+        calls ``prepare`` once per co-scheduled job (with its ``start_s``
+        offset) and then runs the shared loop once."""
+        self.global_payload = global_payload
+        if isinstance(global_payload, TensorPayload):
+            self.global_params = global_payload.tree
+        self._max_agg = max_aggregations
+        self._target_eff = target_effective_updates
+        self._start_s = start_s
+        if self.availability is not None:
+            for ev in self.availability.events:
+                self.loop.call_at(ev.time + start_s,
+                                  f"avail-{ev.kind}:{ev.client_id}",
+                                  self._on_availability, ev=ev)
+        if self.cohort_active:
+            self._sample_cohort()  # round-0 cohort, before the bootstrap
+        self.strategy.start(self, max(self.loop.now, start_s))
+
     def run(self, global_payload, *, until: float = math.inf,
             max_aggregations: Optional[int] = None,
             target_effective_updates: Optional[float] = None) -> AsyncRunReport:
@@ -632,19 +684,8 @@ class FLScheduler:
                 and target_effective_updates is None):
             raise ValueError("unbounded run: pass until=, max_aggregations= "
                              "or target_effective_updates=")
-        self.global_payload = global_payload
-        if isinstance(global_payload, TensorPayload):
-            self.global_params = global_payload.tree
-        self._max_agg = max_aggregations
-        self._target_eff = target_effective_updates
-        if self.availability is not None:
-            for ev in self.availability.events:
-                self.loop.call_at(ev.time,
-                                  f"avail-{ev.kind}:{ev.client_id}",
-                                  self._on_availability, ev=ev)
-        if self.cohort_active:
-            self._sample_cohort()  # round-0 cohort, before the bootstrap
-        self.strategy.start(self, self.loop.now)
+        self.prepare(global_payload, max_aggregations=max_aggregations,
+                     target_effective_updates=target_effective_updates)
         self.loop.run(until=until)
         return self.report()
 
@@ -652,8 +693,16 @@ class FLScheduler:
         # the stop() that capped the run fires at the *triggering* event;
         # the final merge still runs to completion on the simulated clock
         span = self.loop.now
+        if self._shared_loop:
+            # on a shared clock loop.now spans every tenant: this job's
+            # span runs from its own start to its own finish (or its
+            # last aggregation, for until=-bounded runs)
+            end = self.finished_at
+            if end is None:
+                end = self.agg_log[-1].time if self.agg_log else self.loop.now
+            span = end - self._start_s
         if self.agg_log:
-            span = max(span, self.agg_log[-1].time)
+            span = max(span, self.agg_log[-1].time - self._start_s)
         stal = [s for (_, _, s) in self.update_log]
         losses = [e.loss for e in self.agg_log if e.loss is not None]
         return AsyncRunReport(

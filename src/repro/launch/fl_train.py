@@ -178,6 +178,15 @@ def _parser() -> argparse.ArgumentParser:
                          "run every cell through the generic scenario "
                          "runner instead of one training run (equivalent "
                          "to `python -m repro.sweep FILE`)")
+    ap.add_argument("--multi", default=None,
+                    help="multi-tenant scenario JSON (see examples/"
+                         "scenarios/multitenant_pair.json): co-schedule "
+                         "every job on one shared fabric + clock under "
+                         "the spec's admission policy")
+    ap.add_argument("--blackout-trace", default=None,
+                    help="JSONL link-outage replay (one {src,dst,t0,t1,"
+                         "symmetric} object per line) appended to the "
+                         "scenario's inline faults.blackouts")
     ap.add_argument("--sweep-fresh", action="store_true",
                     help="with --sweep: ignore the run store, re-run "
                          "every cell")
@@ -271,6 +280,7 @@ def resolve_scenario(args, ap: argparse.ArgumentParser) -> Scenario:
             "faults.link_loss": args.link_loss,
             "faults.availability_trace": args.availability_trace,
             "faults.trace_horizon_s": args.trace_horizon,
+            "faults.blackouts_file": args.blackout_trace,
             "strategy.region_quorum": args.region_quorum,
             "fleet.cohort_k": args.cohort_k,
             "strategy.streaming_hub": args.streaming_hub,
@@ -313,6 +323,26 @@ def main(argv=None):
                            fresh=args.sweep_fresh)
         except (ScenarioError, OSError, ValueError) as e:
             ap.error(str(e))
+        return 0
+    if args.multi:
+        # N co-scheduled tenant jobs on one fabric: the generic
+        # multi-tenant runner, not one training run
+        from repro.scenario import MultiScenario
+        from repro.sweep.runners import run_multi
+        try:
+            res = run_multi(MultiScenario.load(args.multi))
+        except (ScenarioError, OSError, ValueError) as e:
+            ap.error(str(e))
+        print(f"[multi] '{res['name']}': policy={res['policy']} "
+              f"shared_links={res['shared_links']} "
+              f"jobs={len(res['jobs'])} "
+              f"total_bytes={res['bytes_on_wire']:.3e}")
+        for name, j in res["jobs"].items():
+            print(f"    {name}: {j['n_rounds']} aggregations in "
+                  f"{j['sim_time_s']:.2f}s sim "
+                  f"({j['round_s']:.2f}s/round, "
+                  f"{j['n_client_updates']} client updates, "
+                  f"{j['bytes_on_wire']:.3e} B on wire)")
         return 0
     sc = resolve_scenario(args, ap)
 

@@ -1,12 +1,17 @@
 """Declarative scenario API: topology-as-a-graph, one spec from CLI to
 fabric (see spec.py for the schema, build.py for the runtime)."""
+from repro.core.transport import FabricSpec
 from repro.scenario.build import Runtime, build_runtime, fault_model_for
 from repro.scenario.spec import (MODES, TOPOLOGY_PRESETS, BlackoutSpec,
                                  ChannelSpec, EdgeSpec, FaultSpec,
-                                 FleetSpec, Scenario, ScenarioError,
-                                 StrategySpec, TopologySpec, with_overrides)
+                                 FleetSpec, JobSpec, MultiScenario,
+                                 Scenario, ScenarioError, StrategySpec,
+                                 TopologySpec, load_blackouts_file,
+                                 with_overrides)
 
 __all__ = ["Scenario", "TopologySpec", "FleetSpec", "ChannelSpec",
            "FaultSpec", "StrategySpec", "EdgeSpec", "BlackoutSpec",
-           "ScenarioError", "TOPOLOGY_PRESETS", "MODES", "with_overrides",
-           "Runtime", "build_runtime", "fault_model_for"]
+           "FabricSpec", "JobSpec", "MultiScenario", "ScenarioError",
+           "TOPOLOGY_PRESETS", "MODES", "with_overrides",
+           "load_blackouts_file", "Runtime", "build_runtime",
+           "fault_model_for"]

@@ -45,7 +45,7 @@ def fault_model_for(scenario: Scenario) -> Optional[LinkFaultModel]:
     f = scenario.faults
     host_bo: Dict[str, list] = {}
     edge_bo: Dict[tuple, list] = {}
-    for b in f.blackouts:
+    for b in f.all_blackouts():
         window = (float(b.t0), float(b.t1))
         if b.dst == "*":
             # per-host form: every link touching src goes dark — this is

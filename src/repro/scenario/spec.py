@@ -31,10 +31,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Dict, Tuple
 
 from repro.core.netsim import (GB, GEO_REGIONS, LAN_TCP, MB, NCAL, REGIONS,
                                Environment, Host, Link, Region)
+from repro.core.transport import FabricSpec
 
 TOPOLOGY_PRESETS = ("lan", "geo_proximal", "geo_distributed",
                     "star", "ring", "multi_hub")
@@ -347,6 +349,11 @@ class FleetSpec:
     # aggregation round draws a seeded K-of-N client sample; 0 (or
     # K >= N) keeps the whole fleet in play, bit-for-bit today's runs
     cohort_k: int = 0
+    # per-dispatch simulated compute seconds; 0.0 = the tier's
+    # calibrated train time. A near-zero override turns a job into a
+    # traffic generator (checkpoint sync / dataset replication tenants
+    # in the multi-job studies: all wire, no training gaps)
+    train_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -383,6 +390,45 @@ class FaultSpec:
     availability_trace: str = ""  # fl/fault.AvailabilityTrace spec
     trace_horizon_s: float = 3600.0
     blackouts: Tuple[BlackoutSpec, ...] = ()  # per-edge/-host outages
+    # JSONL outage replay: one {"src", "dst", "t0", "t1", "symmetric"}
+    # object per line, parsed into BlackoutSpecs and appended to the
+    # inline list ("" = none). Relative paths resolve against the
+    # scenario file's directory at Scenario.load time.
+    blackouts_file: str = ""
+
+    def all_blackouts(self) -> Tuple[BlackoutSpec, ...]:
+        """Inline blackouts + the parsed trace file (in that order)."""
+        if not self.blackouts_file:
+            return self.blackouts
+        return self.blackouts + load_blackouts_file(self.blackouts_file)
+
+
+def load_blackouts_file(path: str) -> Tuple[BlackoutSpec, ...]:
+    """Parse a JSONL blackout trace into BlackoutSpecs.
+
+    One JSON object per line; blank lines and ``#`` comment lines are
+    skipped. Every malformed line is a loud ``ScenarioError`` carrying
+    ``path:lineno`` — an outage replay that silently drops windows would
+    invalidate the whole study."""
+    try:
+        f = open(path)
+    except OSError as e:
+        raise ScenarioError(
+            f"faults.blackouts_file: cannot read '{path}' "
+            f"({e.strerror or e})") from None
+    out = []
+    with f:
+        for ln, raw in enumerate(f, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            try:
+                data = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ScenarioError(
+                    f"{path}:{ln}: not valid JSON ({e.msg})") from None
+            out.append(_from_dict(BlackoutSpec, data, f"{path}:{ln}"))
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -442,6 +488,8 @@ class Scenario:
             raise ScenarioError("strategy.quorum_fraction must be in (0, 1]")
         if self.fleet.cohort_k < 0:
             raise ScenarioError("fleet.cohort_k must be >= 0")
+        if self.fleet.train_s < 0:
+            raise ScenarioError("fleet.train_s must be >= 0 (0 = tier default)")
         if self.fleet.cohort_k > self.topology.num_clients:
             raise ScenarioError(
                 f"fleet.cohort_k ({self.fleet.cohort_k}) exceeds "
@@ -454,20 +502,26 @@ class Scenario:
         self.topology.check()  # bad preset/regions/edges, without building
         hosts = {"server"} | {f"client{i}"
                               for i in range(self.topology.num_clients)}
-        for i, b in enumerate(self.faults.blackouts):
+        n_inline = len(self.faults.blackouts)
+        for i, b in enumerate(self.faults.all_blackouts()):
+            # file-sourced windows validate by the same rules; label them
+            # by their position in the trace so errors stay actionable
+            where = (f"faults.blackouts[{i}]" if i < n_inline else
+                     f"faults.blackouts_file entry {i - n_inline + 1} "
+                     f"('{self.faults.blackouts_file}')")
             if b.t1 < b.t0 or b.t0 < 0:
                 raise ScenarioError(
-                    f"faults.blackouts[{i}]: need 0 <= t0 <= t1 "
+                    f"{where}: need 0 <= t0 <= t1 "
                     f"(got [{b.t0}, {b.t1}))")
             for end, name in ((b.src, "src"), (b.dst, "dst")):
                 if end != "*" and end not in hosts:
                     raise ScenarioError(
-                        f"faults.blackouts[{i}].{name}: '{end}' names no "
+                        f"{where}.{name}: '{end}' names no "
                         f"host in this topology (hosts: server, client0.."
                         f"client{self.topology.num_clients - 1}, or '*')")
             if b.src == "*":
                 raise ScenarioError(
-                    f"faults.blackouts[{i}].src must name a host "
+                    f"{where}.src must name a host "
                     f"(use dst='*' for the per-host form)")
         return self
 
@@ -490,7 +544,8 @@ class Scenario:
     @classmethod
     def load(cls, path: str) -> "Scenario":
         with open(path) as f:
-            return cls.from_dict(json.load(f))
+            sc = cls.from_dict(json.load(f))
+        return _anchor_blackouts_file(sc, path)
 
     @classmethod
     def from_fl_config(cls, cfg, *, tier: str = "small",
@@ -556,6 +611,110 @@ class Scenario:
 
 
 # ---------------------------------------------------------------------------
+# multi-tenant scenarios: N jobs on one fabric
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One tenant job of a multi-tenant deployment: a full Scenario plus
+    its co-scheduling knobs. ``priority`` feeds the fabric's admission
+    policy (higher preempts under ``policy="priority"``); ``start_s``
+    offsets the job's bootstrap on the shared clock; ``rounds`` caps the
+    job's aggregations (0 = the scenario's own ``strategy.rounds``)."""
+    name: str
+    scenario: Scenario = Scenario()
+    priority: int = 0
+    start_s: float = 0.0
+    rounds: int = 0
+
+    def cap(self) -> int:
+        return self.rounds or self.scenario.strategy.rounds
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiScenario:
+    """N co-scheduled jobs sharing one topology, one fabric, one clock.
+
+    Every job must declare the *same* topology — tenants contend for one
+    physical network, they don't each get their own. The fabric spec
+    defaults to fifo admission over shared links (contention on), since
+    a multi-tenant run with isolated links is just N solo runs."""
+    name: str = "multi"
+    fabric: FabricSpec = FabricSpec(policy="fifo", shared_links=True)
+    jobs: Tuple[JobSpec, ...] = ()
+
+    def validate(self) -> "MultiScenario":
+        if not self.jobs:
+            raise ScenarioError("jobs: a MultiScenario needs >= 1 job")
+        names = [j.name for j in self.jobs]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ScenarioError(f"jobs: duplicate job name(s) {dupes}")
+        base = self.jobs[0].scenario.topology
+        for i, j in enumerate(self.jobs):
+            where = f"jobs[{i}] ('{j.name}')"
+            if not j.name or "::" in j.name:
+                raise ScenarioError(
+                    f"{where}: job names must be non-empty and free of "
+                    f"'::' (the fabric's tenant separator)")
+            if j.cap() < 1:
+                raise ScenarioError(
+                    f"{where}: needs a positive aggregation cap "
+                    f"(rounds= or scenario.strategy.rounds)")
+            if j.scenario.strategy.mode not in ("fedbuff", "semisync"):
+                raise ScenarioError(
+                    f"{where}: co-scheduling drives the event-driven "
+                    f"fedbuff/semisync modes (got "
+                    f"'{j.scenario.strategy.mode}')")
+            if j.scenario.topology != base:
+                raise ScenarioError(
+                    f"{where}: topology differs from jobs[0]'s — tenants "
+                    f"share ONE physical network; declare the same "
+                    f"topology in every job")
+            try:
+                j.scenario.validate()
+            except ScenarioError as e:
+                raise ScenarioError(f"{where}: {e}") from None
+        return self
+
+    # -- (de)serialisation -------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "MultiScenario":
+        return _from_dict(cls, data, "multi")
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "MultiScenario":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path: str) -> "MultiScenario":
+        with open(path) as f:
+            ms = cls.from_dict(json.load(f))
+        jobs = tuple(dataclasses.replace(
+            j, scenario=_anchor_blackouts_file(j.scenario, path))
+            for j in ms.jobs)
+        return dataclasses.replace(ms, jobs=jobs)
+
+
+def _anchor_blackouts_file(sc: Scenario, spec_path: str) -> Scenario:
+    """Resolve a relative ``faults.blackouts_file`` against the spec
+    file's directory, so a scenario pack stays relocatable."""
+    bf = sc.faults.blackouts_file
+    if not bf or os.path.isabs(bf):
+        return sc
+    anchored = os.path.join(os.path.dirname(os.path.abspath(spec_path)), bf)
+    return dataclasses.replace(
+        sc, faults=dataclasses.replace(sc.faults, blackouts_file=anchored))
+
+
+# ---------------------------------------------------------------------------
 # strict recursive deserialisation
 # ---------------------------------------------------------------------------
 
@@ -590,13 +749,22 @@ def _from_dict(cls, data, path):
             kw[k] = tuple(_from_dict(BlackoutSpec, b,
                                      f"{path}.blackouts[{i}]")
                           for i, b in enumerate(v))
+        elif cls is MultiScenario and k == "jobs":
+            if not isinstance(v, (list, tuple)):
+                raise ScenarioError(f"{path}.jobs: expected a list")
+            kw[k] = tuple(_from_dict(JobSpec, j, f"{path}.jobs[{i}]")
+                          for i, j in enumerate(v))
+        elif cls is MultiScenario and k == "fabric":
+            kw[k] = _from_dict(FabricSpec, v, f"{path}.fabric")
+        elif cls is JobSpec and k == "scenario":
+            kw[k] = _from_dict(Scenario, v, f"{path}.scenario")
         elif isinstance(v, list):
             kw[k] = tuple(v)
         else:
             kw[k] = v
     try:
         return cls(**kw)
-    except TypeError as e:
+    except (TypeError, ValueError) as e:
         raise ScenarioError(f"{path}: {e}") from None
 
 

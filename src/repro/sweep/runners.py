@@ -17,14 +17,17 @@ from repro.core.message import VirtualPayload
 from repro.fl.client import FLClient
 from repro.fl.scheduler import FLScheduler
 from repro.fl.server import FLServer
-from repro.scenario import Runtime, Scenario, build_runtime
+from repro.scenario import MultiScenario, Runtime, Scenario, build_runtime
 
 
-def wire_stats(fabric, store=None) -> Dict[str, float]:
-    """The fabric's wire-level accounting in CellResult's field names."""
-    out = {"bytes_on_wire": float(fabric.stats["bytes"]),
-           "retransmits": float(fabric.stats["retransmits"]),
-           "transfers_failed": float(fabric.stats["transfers_failed"])}
+def wire_stats(fabric, store=None, job: str = "") -> Dict[str, float]:
+    """The fabric's wire-level accounting in CellResult's field names.
+    ``job`` selects one tenant's namespaced counters ("" = the global
+    view, which every per-job view sums to)."""
+    stats = fabric.stats if not job else fabric.stats_for(job)
+    out = {"bytes_on_wire": float(stats["bytes"]),
+           "retransmits": float(stats["retransmits"]),
+           "transfers_failed": float(stats["transfers_failed"])}
     if store is not None:
         out["s3_retries"] = float(store.stats["retries"])
     return out
@@ -35,7 +38,8 @@ def make_clients(rt: Runtime, *, train_s: Optional[float] = None,
     """Tier-calibrated simulated clients over the runtime's backends."""
     tier = TIERS[rt.scenario.fleet.tier]
     if train_s is None:
-        train_s = tier.train_s(rt.scenario.topology.kind)
+        train_s = rt.scenario.fleet.train_s \
+            or tier.train_s(rt.scenario.topology.kind)
     return [FLClient(h.host_id, rt.make_backend(h.host_id,
                                                 compression=compression),
                      sim_train_s=train_s)
@@ -127,3 +131,88 @@ def run_scenario_cell(cell) -> Dict[str, Any]:
     """``Study.cell`` adapter over ``run_scenario`` — module-level so a
     ``--workers`` process pool can pickle the ad-hoc sweep-file study."""
     return run_scenario(cell.scenario)
+
+
+def run_multi(mspec: MultiScenario) -> Dict[str, Any]:
+    """Co-schedule every job of a MultiScenario on one shared deployment.
+
+    One topology (jobs[0]'s — validation pins every job to it), ONE
+    fabric carrying ``mspec.fabric`` (admission policy + shared links),
+    one EventLoop clock. Each job gets its own tenant namespace
+    (``fabric.job``), its own object store, its own tier-calibrated
+    clients and its own FLScheduler; tenants interact only through the
+    contended links. The fault model is jobs[0]'s (one physical network
+    has one weather system). Returns per-job report blocks plus the
+    global wire totals the per-job views sum to."""
+    from repro.core.backends import make_backend
+    from repro.core.netsim import NCAL
+    from repro.core.objectstore import ObjectStore
+    from repro.core.transport import Fabric
+    from repro.fl import make_strategy
+    from repro.fl.fault import make_availability
+    from repro.fl.multijob import MultiScheduler
+    from repro.fl.scheduler import EventLoop
+    from repro.scenario import fault_model_for
+
+    mspec.validate()
+    base = mspec.jobs[0].scenario
+    env = base.topology.build()
+    fabric = Fabric(env, fault_model=fault_model_for(base),
+                    spec=mspec.fabric)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+
+    loop = EventLoop()
+    multi = MultiScheduler(loop)
+    stores: Dict[str, ObjectStore] = {}
+    for js in mspec.jobs:
+        sc = js.scenario
+        handle = fabric.job(js.name, priority=js.priority)
+        store = stores[js.name] = ObjectStore(
+            NCAL, fail_rate=sc.faults.store_fail_rate)
+        tier = TIERS[sc.fleet.tier]
+        ch = sc.channel
+
+        def mk(host_id, compression, *, _sc=sc, _store=store, _h=handle):
+            c = _sc.channel
+            return make_backend(
+                c.backend, env, fabric, host_id, store=_store,
+                compression=None if compression in ("", "none")
+                else compression,
+                wire_codec=c.wire_codec, chunk_mb=c.chunk_mb, job=_h)
+
+        client_comp = ch.compression  # fedbuff/semisync update path
+        train_s = sc.fleet.train_s or tier.train_s(sc.topology.kind)
+        clients = [FLClient(h.host_id, mk(h.host_id, client_comp),
+                            sim_train_s=train_s)
+                   for h in env.clients]
+        strategy = make_strategy(sc.fl_config(), sc.topology.num_clients)
+        availability = make_availability(
+            sc.faults.availability_trace, [c.client_id for c in clients],
+            horizon_s=sc.faults.trace_horizon_s, seed=sc.seed)
+        sched = FLScheduler(mk("server", "none"), clients, strategy,
+                            local_steps=sc.fleet.local_steps,
+                            availability=availability,
+                            cohort_k=sc.fleet.cohort_k,
+                            cohort_seed=sc.seed,
+                            streaming_hub=sc.strategy.streaming_hub,
+                            loop=loop)
+        multi.add_job(js.name, sched,
+                      VirtualPayload(tier.payload_bytes,
+                                     tag=f"multi-{js.name}"),
+                      max_aggregations=js.cap(), start_s=js.start_s)
+
+    reports = multi.run()
+    jobs_out: Dict[str, Any] = {}
+    for name, rep in reports.items():
+        jobs_out[name] = {
+            "sim_time_s": rep.sim_time, "n_rounds": rep.n_aggregations,
+            "round_s": rep.sim_time / max(rep.n_aggregations, 1),
+            "n_client_updates": rep.n_client_updates,
+            "mean_staleness": rep.mean_staleness,
+            **wire_stats(fabric, stores[name], job=name)}
+    return {"name": mspec.name,
+            "policy": mspec.fabric.policy,
+            "shared_links": mspec.fabric.shared_links,
+            "jobs": jobs_out,
+            **wire_stats(fabric)}

@@ -1,0 +1,432 @@
+"""Multi-tenant fabric: per-job namespaces and stats decomposition,
+single-tenant bit-identity through the tenancy machinery, the _EdgePipe
+admission policies, aggregate-link solver parity, control-message byte
+accounting, the JSONL blackout trace front end, and MultiScenario."""
+import json
+
+import pytest
+
+from repro.configs.paper_tiers import TIERS
+from repro.core.message import FLMessage, VirtualPayload
+from repro.core.netsim import MB, NCAL, Host, Transfer, scalar_transfers, \
+    simulate_transfers
+from repro.core.transport import CTRL_BYTES, Fabric, FabricSpec, _EdgePipe
+from repro.scenario import (ChannelSpec, EdgeSpec, FaultSpec, FleetSpec,
+                            JobSpec, MultiScenario, Scenario, ScenarioError,
+                            StrategySpec, TopologySpec, load_blackouts_file)
+from repro.scenario.spec import BlackoutSpec
+from repro.sweep.runners import run_multi, run_scenario, wire_stats
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures
+# ---------------------------------------------------------------------------
+
+def _tight_topo(bw_mb=8.0, n=4):
+    edges = tuple(EdgeSpec(src="server", dst=f"client{i}", bw_single_mb=bw_mb,
+                           bw_multi_mb=bw_mb, latency_ms=40.0)
+                  for i in range(n))
+    return TopologySpec(kind="geo_distributed", num_clients=n, edges=edges)
+
+
+def _job_scenario(name, seed, *, mode="fedbuff", tier="small", rounds=3,
+                  topo=None, backend="grpc"):
+    return Scenario(
+        name=name, seed=seed,
+        topology=topo or TopologySpec.preset("geo_distributed",
+                                             num_clients=4),
+        fleet=FleetSpec(tier=tier),
+        channel=ChannelSpec(backend=backend),
+        strategy=StrategySpec(mode=mode, rounds=rounds, buffer_k=2,
+                              quorum_fraction=1.0))
+
+
+def _mspec(jobs, policy="fifo", shared=True, name="mt"):
+    return MultiScenario(name=name,
+                         fabric=FabricSpec(policy=policy,
+                                           shared_links=shared),
+                         jobs=tuple(jobs))
+
+
+# ---------------------------------------------------------------------------
+# per-job stats namespaces
+# ---------------------------------------------------------------------------
+
+def test_per_job_stats_sum_to_globals():
+    jobs = (JobSpec("a", _job_scenario("a", 0), rounds=3),
+            JobSpec("b", _job_scenario("b", 1, mode="semisync"), rounds=3,
+                    start_s=11.0))
+    res = run_multi(_mspec(jobs))
+    for key in ("bytes_on_wire", "retransmits", "transfers_failed"):
+        per_job = sum(res["jobs"][n][key] for n in ("a", "b"))
+        assert per_job == pytest.approx(res[key]), (
+            f"{key}: per-job views {per_job} != global {res[key]}")
+    assert res["jobs"]["a"]["bytes_on_wire"] > 0
+    assert res["jobs"]["b"]["bytes_on_wire"] > 0
+
+
+def test_job_namespace_isolation():
+    env = TopologySpec.preset("geo_proximal", num_clients=2).build()
+    fabric = Fabric(env)
+    a, b = fabric.job("a"), fabric.job("b")
+    fabric.register("server", job="a")
+    fabric.register("server", job="b")
+    # transfer ids allocate independently per namespace
+    assert fabric.next_transfer_id("a") == fabric.next_transfer_id("b")
+    msg = FLMessage(msg_type="control", sender="client0", receiver="server")
+    fabric.deliver(msg, None, 0.0, 1.0, job="a")
+    assert len(fabric._ep("server", "a").inbox) == 1
+    assert len(fabric._ep("server", "b").inbox) == 0
+    assert fabric.stats_for("a")["bytes"] == CTRL_BYTES
+    assert fabric.stats_for("b")["bytes"] == 0
+    assert fabric.stats["bytes"] == CTRL_BYTES
+    assert a.name == "a" and b.name == "b"
+
+
+def test_job_registration_idempotent_and_name_checked():
+    env = TopologySpec.preset("geo_proximal", num_clients=2).build()
+    fabric = Fabric(env)
+    assert fabric.job("a") is fabric.job("a")  # register-or-fetch
+    with pytest.raises(ValueError):
+        fabric.job("a::b")  # '::' is the namespace separator
+
+
+# ---------------------------------------------------------------------------
+# control-message byte accounting (the deliver-vs-concurrent regression)
+# ---------------------------------------------------------------------------
+
+def test_control_messages_charge_ctrl_bytes_on_every_path():
+    env = TopologySpec.preset("geo_proximal", num_clients=2).build()
+    msg = FLMessage(msg_type="control", sender="server", receiver="client0")
+
+    fab_a = Fabric(env)
+    fab_a.register("client0")
+    fab_a.deliver(msg, None, 0.0, 1.0)
+
+    fab_b = Fabric(env)
+    fab_b.register("client0")
+    fab_b.deliver_concurrent([(msg, None, 0.0, 1)])
+
+    # historical bug: deliver() charged 0 for wire=None while
+    # deliver_concurrent charged CTRL_BYTES — the two paths must agree
+    assert fab_a.stats["bytes"] == CTRL_BYTES
+    assert fab_a.stats["bytes"] == fab_b.stats["bytes"]
+    assert fab_a.stats["messages"] == fab_b.stats["messages"] == 1
+
+
+# ---------------------------------------------------------------------------
+# _EdgePipe admission policies
+# ---------------------------------------------------------------------------
+
+C = 100.0 * MB
+
+
+def test_fifo_pipe_serializes_contending_tenants():
+    pipe = _EdgePipe(C, "fifo")
+    # tenant a holds the whole pipe for [0, 10)
+    fin_a = pipe.transmit(0.0, 10 * C, C, 0, "a")
+    assert fin_a == pytest.approx(10.0)
+    # tenant b departing mid-way drains only after a's reservation
+    fin_b = pipe.transmit(4.0, 2 * C, C, 0, "b")
+    assert fin_b == pytest.approx(12.0)
+
+
+def test_fifo_partial_residual_is_shared():
+    pipe = _EdgePipe(C, "fifo")
+    pipe.reserve(0.0, 10.0, 0.25 * C, 0, "a")
+    assert pipe.available(5.0, 0, "b") == pytest.approx(0.75 * C)
+    fin = pipe.transmit(0.0, 7.5 * C, C, 0, "b")
+    assert fin == pytest.approx(10.0)
+
+
+def test_priority_sees_through_lower_priority_reservations():
+    pipe = _EdgePipe(C, "priority")
+    pipe.reserve(0.0, 10.0, C, 0, "bg")  # low-prio tenant saturates
+    # a priority-1 job contends only with >= its own priority: full rate
+    # (the documented no-revocation overcommit approximation)
+    assert pipe.available(5.0, 1, "fg") == pytest.approx(C)
+    assert pipe.transmit(0.0, 5 * C, C, 1, "fg") == pytest.approx(5.0)
+    # equal-priority traffic still queues fifo-style
+    assert pipe.available(5.0, 0, "other") == pytest.approx(0.0)
+
+
+def test_fair_share_guarantees_capacity_over_k():
+    pipe = _EdgePipe(C, "fair-share")
+    pipe.reserve(0.0, 10.0, C, 0, "a")  # one tenant holding everything
+    # a second job is guaranteed C/2 even with zero fifo residual
+    assert pipe.available(5.0, 0, "b") == pytest.approx(C / 2)
+    # three distinct other tenants -> C/4 guarantee
+    pipe.reserve(0.0, 10.0, 0.1 * C, 0, "c")
+    pipe.reserve(0.0, 10.0, 0.1 * C, 0, "d")
+    assert pipe.available(5.0, 0, "b") == pytest.approx(C / 4)
+    # the holder itself is not double-guaranteed: work-conserving residual
+    assert pipe.available(5.0, 0, "a") == pytest.approx(0.0)
+
+
+def test_drain_rate_is_queueing_equivalent():
+    pipe = _EdgePipe(C, "fifo")
+    pipe.reserve(0.0, 6.0, C, 0, "a")
+    nbytes = 4 * C
+    rate = pipe.drain_rate(2.0, nbytes, C, 0, "b")
+    fin = pipe.transmit(2.0, nbytes, C, 0, "b")
+    # the average rate must reproduce the walked finish time exactly:
+    # depart + nbytes/rate == walk(depart, nbytes)
+    assert 2.0 + nbytes / rate == pytest.approx(fin)
+    assert fin == pytest.approx(10.0)  # 4s queue + 4s drain
+    # and a request for zero bytes degrades to the want rate
+    assert pipe.drain_rate(2.0, 0.0, C, 0, "b") == C
+
+
+# ---------------------------------------------------------------------------
+# aggregate-link solver parity (scalar vs vectorized)
+# ---------------------------------------------------------------------------
+
+def _edge_batch(n):
+    hub = Host("server", NCAL, NCAL.bw_multi, NCAL.bw_multi)
+    out = []
+    for i in range(n):
+        cl = Host(f"client{i % 8}", NCAL, NCAL.bw_multi, NCAL.bw_multi)
+        out.append(Transfer(start=0.1 * (i % 5), src=cl, dst=hub,
+                            nbytes=(1 + i % 7) * MB, conns=1,
+                            link_region=NCAL,
+                            edge_key=("e", i % 3),
+                            edge_cap=25.0 * MB))
+    return out
+
+
+def test_edge_pool_scalar_vs_vectorized_parity():
+    batch_a = _edge_batch(96)  # >= SIM_VECTORIZE_MIN -> numpy solver
+    simulate_transfers(batch_a)
+    batch_b = _edge_batch(96)
+    with scalar_transfers():
+        simulate_transfers(batch_b)
+    for a, b in zip(batch_a, batch_b):
+        assert a.finish == pytest.approx(b.finish, rel=1e-9), (
+            f"edge-pool divergence on {a.tag or a.nbytes}")
+
+
+def test_edge_pool_caps_aggregate_rate():
+    # 4 concurrent flows on one 10 MB/s edge pool: 40 MB total drains in
+    # >= 4s no matter how fat the hosts are
+    hub = Host("server", NCAL, NCAL.bw_multi, NCAL.bw_multi)
+    cl = Host("client0", NCAL, NCAL.bw_multi, NCAL.bw_multi)
+    ts = [Transfer(start=0.0, src=cl, dst=hub, nbytes=10 * MB, conns=1,
+                   link_region=NCAL, edge_key=("up",), edge_cap=10.0 * MB)
+          for _ in range(4)]
+    simulate_transfers(ts)
+    assert max(t.finish for t in ts) >= 4.0
+    # without the shared pool the same flows finish far faster
+    ts2 = [Transfer(start=0.0, src=cl, dst=hub, nbytes=10 * MB, conns=1,
+                    link_region=NCAL) for _ in range(4)]
+    simulate_transfers(ts2)
+    assert max(t.finish for t in ts2) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# single-tenant bit-identity (solo vs 1-job multi)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fedbuff", "semisync"])
+def test_single_job_multi_matches_solo(mode):
+    sc = _job_scenario("ident", 0, mode=mode, rounds=3)
+    solo = run_scenario(sc)
+    res = run_multi(_mspec(
+        (JobSpec("ident", sc, rounds=3),), shared=False))
+    job = res["jobs"]["ident"]
+    assert job["round_s"] == solo["round_s"]
+    assert job["sim_time_s"] == solo["sim_time_s"]
+    assert job["n_rounds"] == solo["n_rounds"]
+    assert job["bytes_on_wire"] == solo["bytes_on_wire"]
+    assert job["mean_staleness"] == solo["mean_staleness"]
+    # the global view of a one-job world IS the job's view
+    assert res["bytes_on_wire"] == job["bytes_on_wire"]
+
+
+def test_shared_links_off_is_inert_even_multi_job():
+    """Two tenants with shared_links=False interleave on the clock but
+    never contend: each matches its solo run exactly (fig2/5/6-style
+    traces stay bit-identical through the tenancy layers)."""
+    a = _job_scenario("a", 0, rounds=3, topo=_tight_topo())
+    b = _job_scenario("b", 1, mode="semisync", rounds=3, topo=_tight_topo())
+    res = run_multi(_mspec((JobSpec("a", a, rounds=3),
+                            JobSpec("b", b, rounds=3, start_s=5.0)),
+                           shared=False))
+    # job a starts at t=0: bit-identical. job b is offset by 5s, so its
+    # absolute event times shift and fp associativity allows 1-ulp drift.
+    assert res["jobs"]["a"]["round_s"] == run_scenario(a)["round_s"]
+    assert res["jobs"]["b"]["round_s"] == pytest.approx(
+        run_scenario(b)["round_s"], rel=1e-12)
+
+
+def test_shared_links_contention_and_priority_shield():
+    """On thin shared uplinks an offset tenant pair contends under fifo;
+    priority admission restores the foreground's solo round time."""
+    def job(name, seed):
+        sc = Scenario(
+            name=name, seed=seed, topology=_tight_topo(),
+            fleet=FleetSpec(tier="big"),
+            channel=ChannelSpec(backend="grpc"),
+            faults=FaultSpec(availability_trace="auto:400/40",
+                             trace_horizon_s=2000.0),
+            strategy=StrategySpec(mode="fedbuff", rounds=5, buffer_k=2))
+        return sc
+
+    fg_solo = run_scenario(job("fg", 0))["round_s"]
+    jobs = (JobSpec("fg", job("fg", 0), priority=1, start_s=13.0, rounds=5),
+            JobSpec("bg", job("bg", 1), rounds=5))
+    fifo = run_multi(_mspec(jobs, policy="fifo"))
+    prio = run_multi(_mspec(jobs, policy="priority"))
+    assert fifo["jobs"]["fg"]["round_s"] > fg_solo  # fifo makes fg pay
+    assert prio["jobs"]["fg"]["round_s"] == pytest.approx(fg_solo)
+
+
+# ---------------------------------------------------------------------------
+# JSONL blackout traces
+# ---------------------------------------------------------------------------
+
+def test_blackouts_file_roundtrip(tmp_path):
+    windows = (BlackoutSpec(src="client1", dst="server", t0=10.0, t1=20.0),
+               BlackoutSpec(src="client2", dst="*", t0=30.0, t1=40.0,
+                            symmetric=False))
+    p = tmp_path / "outages.jsonl"
+    p.write_text("# replay trace\n\n" + "\n".join(
+        json.dumps({"src": w.src, "dst": w.dst, "t0": w.t0, "t1": w.t1,
+                    "symmetric": w.symmetric}) for w in windows) + "\n")
+    assert load_blackouts_file(str(p)) == windows
+    # FaultSpec appends file windows after the inline ones
+    inline = BlackoutSpec(src="client0", t0=1.0, t1=2.0)
+    fs = FaultSpec(blackouts=(inline,), blackouts_file=str(p))
+    assert fs.all_blackouts() == (inline,) + windows
+
+
+def test_blackouts_file_malformed_line_is_loud(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"src": "client0", "t0": 0, "t1": 5}\nnot json\n')
+    with pytest.raises(ScenarioError, match=r"bad\.jsonl:2"):
+        load_blackouts_file(str(p))
+    p.write_text('{"src": "client0", "oops": 1}\n')
+    with pytest.raises(ScenarioError, match="oops"):
+        load_blackouts_file(str(p))
+    with pytest.raises(ScenarioError, match="cannot read"):
+        load_blackouts_file(str(tmp_path / "missing.jsonl"))
+
+
+def test_blackouts_file_resolves_relative_to_spec(tmp_path):
+    (tmp_path / "outages.jsonl").write_text(
+        '{"src": "client0", "dst": "server", "t0": 5.0, "t1": 9.0}\n')
+    sc = Scenario(name="bo",
+                  faults=FaultSpec(blackouts_file="outages.jsonl"))
+    spec_path = tmp_path / "scenario.json"
+    spec_path.write_text(sc.to_json())
+    loaded = Scenario.load(str(spec_path))
+    assert loaded.faults.blackouts_file == str(tmp_path / "outages.jsonl")
+    loaded.validate()
+    assert loaded.faults.all_blackouts()[0].t1 == 9.0
+
+
+def test_blackouts_file_validated_with_scenario(tmp_path):
+    p = tmp_path / "outages.jsonl"
+    p.write_text('{"src": "client99", "dst": "server", "t0": 0, "t1": 5}\n')
+    sc = Scenario(name="bo", faults=FaultSpec(blackouts_file=str(p)))
+    with pytest.raises(ScenarioError, match="client99"):
+        sc.validate()
+
+
+# ---------------------------------------------------------------------------
+# MultiScenario spec
+# ---------------------------------------------------------------------------
+
+def test_multiscenario_roundtrip():
+    ms = _mspec((JobSpec("a", _job_scenario("a", 0), priority=1,
+                         start_s=13.0, rounds=4),
+                 JobSpec("b", _job_scenario("b", 1, mode="semisync"))),
+                policy="priority")
+    assert MultiScenario.from_json(ms.to_json()) == ms
+    assert MultiScenario.from_dict(ms.to_dict()) == ms
+
+
+def test_multiscenario_load_anchors_blackout_files(tmp_path):
+    (tmp_path / "outages.jsonl").write_text(
+        '{"src": "client0", "t0": 0, "t1": 1}\n')
+    sc = _job_scenario("a", 0)
+    sc = Scenario(**{**sc.to_dict(),
+                     "topology": sc.topology, "fleet": sc.fleet,
+                     "channel": sc.channel, "strategy": sc.strategy,
+                     "faults": FaultSpec(blackouts_file="outages.jsonl")})
+    ms = _mspec((JobSpec("a", sc, rounds=3),))
+    p = tmp_path / "multi.json"
+    p.write_text(ms.to_json())
+    loaded = MultiScenario.load(str(p))
+    assert loaded.jobs[0].scenario.faults.blackouts_file == \
+        str(tmp_path / "outages.jsonl")
+    loaded.validate()
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda ms: _mspec(()), ">= 1 job"),
+    (lambda ms: _mspec((ms.jobs[0], ms.jobs[0])), "duplicate"),
+    (lambda ms: _mspec((JobSpec("x::y", ms.jobs[0].scenario, rounds=3),)),
+     "::"),
+])
+def test_multiscenario_validation_errors(mutate, msg):
+    ms = _mspec((JobSpec("a", _job_scenario("a", 0), rounds=3),))
+    with pytest.raises(ScenarioError, match=msg):
+        mutate(ms).validate()
+
+
+def test_multiscenario_rejects_sync_and_mismatched_topologies():
+    sync_sc = _job_scenario("a", 0, mode="sync")
+    with pytest.raises(ScenarioError, match="mode"):
+        _mspec((JobSpec("a", sync_sc, rounds=3),)).validate()
+    a = _job_scenario("a", 0)
+    b = _job_scenario("b", 1, topo=_tight_topo())
+    with pytest.raises(ScenarioError, match="topology"):
+        _mspec((JobSpec("a", a, rounds=3),
+                JobSpec("b", b, rounds=3))).validate()
+
+
+def test_multiscenario_requires_a_cap():
+    sc = Scenario(name="nocap",
+                  topology=TopologySpec.preset("geo_proximal",
+                                               num_clients=2),
+                  strategy=StrategySpec(mode="fedbuff", rounds=0,
+                                        buffer_k=1))
+    with pytest.raises(ScenarioError, match="cap|rounds"):
+        _mspec((JobSpec("a", sc),)).validate()
+
+
+def test_fleet_train_s_override():
+    sc = _job_scenario("t", 0)
+    fast = Scenario(**{**sc.to_dict(), "topology": sc.topology,
+                       "fleet": FleetSpec(tier="small", train_s=0.5),
+                       "channel": sc.channel, "faults": sc.faults,
+                       "strategy": sc.strategy})
+    assert run_scenario(fast)["round_s"] < run_scenario(sc)["round_s"]
+    with pytest.raises(ScenarioError, match="train_s"):
+        Scenario(**{**sc.to_dict(), "topology": sc.topology,
+                    "fleet": FleetSpec(tier="small", train_s=-1.0),
+                    "channel": sc.channel, "faults": sc.faults,
+                    "strategy": sc.strategy}).validate()
+
+
+# ---------------------------------------------------------------------------
+# run_multi end to end
+# ---------------------------------------------------------------------------
+
+def test_run_multi_smoke_reports_every_job():
+    jobs = (JobSpec("a", _job_scenario("a", 0), rounds=2),
+            JobSpec("b", _job_scenario("b", 1), rounds=2, start_s=3.0))
+    res = run_multi(_mspec(jobs, policy="fair-share"))
+    assert set(res["jobs"]) == {"a", "b"}
+    assert res["policy"] == "fair-share" and res["shared_links"] is True
+    for name in ("a", "b"):
+        job = res["jobs"][name]
+        assert job["n_rounds"] == 2
+        assert job["round_s"] > 0
+        assert job["n_client_updates"] >= 2
+
+
+def test_wire_stats_job_view(tmp_path):
+    jobs = (JobSpec("a", _job_scenario("a", 0), rounds=2),)
+    res = run_multi(_mspec(jobs))
+    assert res["jobs"]["a"]["bytes_on_wire"] == res["bytes_on_wire"]
