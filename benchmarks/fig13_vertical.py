@@ -1,0 +1,203 @@
+"""Fig 13: vertical / split FL — the workload that flips the fig10 table.
+
+Horizontal FL ships tier-sized model payloads a few times per round, so
+the big-tier geo-distributed cell belongs to gRPC+S3 (fig10's headline).
+Vertical FL inverts the traffic shape: every batch moves a small
+activation wire up and an equally small gradient wire back, so a round
+is dozens of latency-bound exchanges instead of one bandwidth-bound
+broadcast. Per-message store latency (PUT + presign + GET) is pure
+overhead at those sizes, and the decision table flips: pure gRPC beats
+gRPC+S3 *even at the big tier geo-distributed* — the exact cell gRPC+S3
+owns in fig10.
+
+Grid: backend x tier x cut depth over geo-distributed vertical-mode
+scenarios, every cell a full event-driven ``run_scenario`` run (the
+same path ``fl_train --mode vertical`` drives). Quick grid: 2 fixed
+backends x 2 tiers x 1 cut (+ AUTO, which is always swept so the
+routing assertions hold in CI).
+
+Validations (CI gate):
+1. split == unsplit numerics: a real model-zoo ResNet cut by
+   ``SplitPlan`` reproduces the unsplit loss and gradients within float
+   tolerance (the vertical path changes *where* compute happens, never
+   *what* is computed);
+2. the table flip: pure gRPC beats gRPC+S3 on vertical traffic at the
+   big tier geo-distributed, for every cut depth in the grid;
+3. AUTO routes per message — every sub-threshold activation/gradient
+   wire rides gRPC — and is never slower than the worst fixed backend
+   in any cell.
+
+The engine writes ``benchmarks/out/fig13_vertical.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import ENGINE, scenario_for
+from repro.scenario import SplitSpec
+from repro.sweep import Axis, Study, Sweep, run_scenario
+
+BENCH_ORDER = 95
+FIXED_BACKENDS = ("grpc", "grpc+s3")
+PARITY_TOL = 1e-5  # split-vs-unsplit numerics gate (measured: exact)
+
+
+def _tiers(quick):
+    return ("medium", "big") if quick else ("small", "medium", "big")
+
+
+def _cuts(quick):
+    return (2,) if quick else (1, 2, 4)
+
+
+def _sweeps(quick):
+    base = scenario_for("geo_distributed", mode="vertical",
+                        num_clients=4, name="fig13:geo_distributed")
+    base = dataclasses.replace(base, split=SplitSpec())
+    return (Sweep(
+        name="fig13:geo_distributed", base=base,
+        axes=(Axis("fleet.tier", values=_tiers(quick)),
+              Axis("split.cut_layer", values=_cuts(quick)),
+              Axis("channel.backend",
+                   values=FIXED_BACKENDS + ("auto",)))),)
+
+
+def _cell(cell):
+    return run_scenario(cell.scenario)
+
+
+def _name(cell):
+    return (f"fig13/{cell.scenario.fleet.tier}/"
+            f"cut{cell.scenario.split.cut_layer}/"
+            f"{cell.scenario.channel.backend}")
+
+
+def _split_parity():
+    """Gate 1: cut a real zoo model and check the split pipeline computes
+    the *same* loss and gradients as the unsplit one. Runs in-process on
+    a reduced ResNet (the same family ``fl_train --live`` deploys)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl.vertical import SplitPlan
+    from repro.models.vision import ResNet, ResNetConfig
+
+    model = ResNet(ResNetConfig(name="resnet-parity", widths=(8, 16),
+                                blocks_per_stage=2, num_classes=5,
+                                image_size=8))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1),
+                                         (4, 8, 8, 3)),
+             "labels": jnp.array([0, 1, 2, 3])}
+    plan = SplitPlan(model, cut_layer=2)
+
+    ref_loss, ref_g = jax.value_and_grad(
+        lambda p: model.loss(p, batch)[0])(params)
+    bottom, top = plan.split_params(params)
+    split_loss, (g_bottom, g_top) = jax.value_and_grad(
+        lambda b, t: plan.loss(b, t, batch)[0], argnums=(0, 1))(bottom, top)
+    split_g = plan.merge_params(g_bottom, g_top)
+    loss_diff = float(abs(ref_loss - split_loss))
+    grad_diff = max(float(jnp.max(jnp.abs(a - b)))
+                    for a, b in zip(jax.tree.leaves(ref_g),
+                                    jax.tree.leaves(split_g)))
+    return {"loss_diff": loss_diff, "grad_diff": grad_diff}
+
+
+def _finalize(results, quick, verbose):
+    cells: dict = {}
+    routing: dict = {}
+    for r in results:
+        _, tier, cut, backend = r.cell.split("/")
+        cells.setdefault((tier, cut), {})[backend] = \
+            r.metrics["round_s"]
+        if backend == "auto":
+            routing[(tier, cut)] = r.metrics.get("auto_decisions", {})
+    report = {"parity_tol": PARITY_TOL, "cells": []}
+    for (tier, cut), times in cells.items():
+        fixed = {b: t for b, t in times.items() if b != "auto"}
+        worst = max(fixed, key=fixed.get)
+        report["cells"].append({
+            "tier": tier, "cut": cut,
+            "round_s": dict(sorted(times.items(), key=lambda kv: kv[1])),
+            "fastest": min(fixed, key=fixed.get),
+            "worst_fixed": worst,
+            "s3_over_grpc": times["grpc+s3"] / times["grpc"],
+            "auto_over_best": times["auto"] / min(fixed.values()),
+            "auto_decisions": routing.get((tier, cut), {})})
+    if verbose:
+        print("\n== Fig 13: vertical FL — per-round time by backend ==")
+        print(f"{'tier':8s} {'cut':6s} {'grpc':>9s} {'grpc+s3':>9s} "
+              f"{'auto':>9s} {'s3/grpc':>8s}")
+        for e in report["cells"]:
+            t = e["round_s"]
+            print(f"{e['tier']:8s} {e['cut']:6s} {t['grpc']:9.2f} "
+                  f"{t['grpc+s3']:9.2f} {t['auto']:9.2f} "
+                  f"{e['s3_over_grpc']:8.3f}")
+    report["validation"] = _validate(report, quick, verbose)
+    return report, [r.row() for r in results]
+
+
+def _validate(report, quick, verbose):
+    # 1) split == unsplit numerics on a real zoo model
+    parity = _split_parity()
+    assert parity["loss_diff"] <= PARITY_TOL, (
+        f"fig13: split loss deviates from unsplit by "
+        f"{parity['loss_diff']:.2e} (tol {PARITY_TOL})")
+    assert parity["grad_diff"] <= PARITY_TOL, (
+        f"fig13: split gradients deviate from unsplit by "
+        f"{parity['grad_diff']:.2e} (tol {PARITY_TOL})")
+    # 2) the fig10 table flip: gRPC beats gRPC+S3 on vertical traffic at
+    #    the big tier geo-distributed, at every cut depth in the grid
+    big = [e for e in report["cells"] if e["tier"] == "big"]
+    assert big, "fig13: no big-tier cells in the grid"
+    for e in big:
+        assert e["round_s"]["grpc"] < e["round_s"]["grpc+s3"], (
+            f"fig13: expected the table flip (grpc < grpc+s3) for "
+            f"big/{e['cut']}, got grpc {e['round_s']['grpc']:.2f}s vs "
+            f"grpc+s3 {e['round_s']['grpc+s3']:.2f}s")
+    # 3) AUTO routes per message and is never slower than the worst
+    #    fixed backend anywhere
+    for e in report["cells"]:
+        worst = e["round_s"][e["worst_fixed"]]
+        auto = e["round_s"]["auto"]
+        assert auto <= worst * (1 + 1e-6), (
+            f"fig13: AUTO ({auto:.2f}s) slower than the worst fixed "
+            f"backend {e['worst_fixed']} ({worst:.2f}s) for "
+            f"{e['tier']}/{e['cut']}")
+        dec = e["auto_decisions"]
+        assert any(k.startswith("activation:") for k in dec), (
+            f"fig13: AUTO recorded no per-message activation routing "
+            f"decisions for {e['tier']}/{e['cut']}: {dec}")
+        for k in dec:
+            mt, _, chosen = k.partition(":")
+            if mt in ("activation", "grad"):
+                # every vertical wire in this grid is far below the
+                # 10 MB store threshold -> must ride pure gRPC
+                assert chosen == "grpc", (
+                    f"fig13: AUTO routed sub-threshold {mt} wire to "
+                    f"{chosen} for {e['tier']}/{e['cut']}")
+    flips = {(e["tier"], e["cut"]): e["s3_over_grpc"] for e in big}
+    if verbose:
+        worst_flip = min(flips.values())
+        print(f"[fig13] validation: split==unsplit (loss diff "
+              f"{parity['loss_diff']:.1e}, grad diff "
+              f"{parity['grad_diff']:.1e}); table flip holds at big/geo "
+              f"(grpc+s3 pays >= {worst_flip:.3f}x); AUTO routes every "
+              f"activation/grad wire to grpc and is never worst")
+    return {"parity": parity,
+            "flip_s3_over_grpc_big": {f"{t}/{c}": v
+                                      for (t, c), v in flips.items()},
+            "auto_never_worst": True,
+            "auto_routes_small_wires_to_grpc": True}
+
+
+STUDY = Study(
+    name="fig13", title="Fig 13: vertical/split FL — the table flip",
+    sweeps=_sweeps, cell=_cell, cell_name=_name, finalize=_finalize,
+    out="fig13_vertical.json", order=BENCH_ORDER)
+
+run = ENGINE.runner(STUDY)
+
+if __name__ == "__main__":
+    ENGINE.main(STUDY)

@@ -199,7 +199,7 @@ class FLConfig:
 
     # event-driven runtime (fl/scheduler.py; mode != "sync" selects a
     # strategy from fl/async_strategies.py)
-    mode: str = "sync"  # sync | fedbuff | semisync | hier
+    mode: str = "sync"  # sync | fedbuff | semisync | hier | vertical
     buffer_k: int = 0  # fedbuff merge buffer; 0 -> max(2, num_clients // 2)
     staleness_exponent: float = 0.5  # alpha in the (1+s)^-alpha discount
     max_staleness: int = 0  # discard updates staler than this; 0 = keep all
@@ -212,6 +212,13 @@ class FLConfig:
     # buffering O(clients) payloads at the server)
     cohort_k: int = 0
     streaming_hub: bool = False
+
+    # vertical / split FL (fl/vertical.py; mode == "vertical"): layer
+    # boundary of the bottom/top cut, per-batch exchanges per round, and
+    # the codec on the activation/gradient wires
+    cut_layer: int = 1
+    batches_per_round: int = 8
+    activation_codec: str = "none"
 
     # wire pipeline (core/channel.py): gradient compression on the client
     # update path — and, in hier mode, on the relay WAN hop only (the LAN

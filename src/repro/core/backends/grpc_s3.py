@@ -72,6 +72,20 @@ class GrpcS3Backend(CommBackend):
             # the cached upload may still be in flight (concurrent isends
             # of the same model): readers wait for it to land
             return key, max(now, done)
+        # bucket-wide content index: another sender — possibly another
+        # tenant — already PUT this exact (payload, stack) wire. Content
+        # identity is job-blind on purpose, so two jobs shipping the same
+        # base model share one stored object; a foreign-tenant hit is
+        # counted as a cross_job_hit in this job's wire stats
+        shared = self.store.content_lookup(fp)
+        if shared is not None:
+            key, up_job, done = shared
+            self.store.note_cache_hit()
+            if up_job != self.job_name:
+                self.fabric.account(0.0, messages=0, cross_job_hits=1,
+                                    job=self.job_name)
+            self._key_cache[fp] = (key, done)
+            return key, max(now, done)
         # one shared compression stream for the store (a single object
         # serves every receiver), hence peer="s3"
         enc = self.channel.encode(msg.payload, peer="s3")
@@ -85,6 +99,7 @@ class GrpcS3Backend(CommBackend):
         up_t = self.store.put_time(enc.wire.nbytes, src, self.parts)
         done = ser_start + ser_t + up_t
         self.store.put(key, enc.wire, enc.wire.nbytes, done)
+        self.store.note_content(fp, key, self.job_name, done)
         mem.free(alloc, done)
         self._key_cache[fp] = (key, done)
         return key, done

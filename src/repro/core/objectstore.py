@@ -60,6 +60,11 @@ class ObjectStore:
         self._rng_state = seed
         self.stats = {"puts": 0, "gets": 0, "retries": 0, "bytes_put": 0,
                       "bytes_get": 0, "cache_hits": 0}
+        # bucket-wide content index: (payload fingerprint, stack
+        # signature) -> (key, uploader job, upload-done time). Keyed
+        # WITHOUT a job namespace on purpose — two tenants shipping the
+        # same base model through the same wire stack share one PUT
+        self._content_index: Dict[Any, tuple] = {}
 
     # -- content-addressed keys ----------------------------------------
     @staticmethod
@@ -79,6 +84,24 @@ class ObjectStore:
         Callers must not poke ``store.stats`` directly (see
         scripts/check_stats_discipline.py)."""
         self.stats["cache_hits"] += 1
+
+    # -- bucket-wide content index -------------------------------------
+    def note_content(self, fingerprint, key: str, job: str = "",
+                     done: float = 0.0):
+        """Record that ``key`` holds the wire for ``fingerprint`` (a
+        (payload fingerprint, stack signature) pair), uploaded by tenant
+        ``job`` and durable from ``done`` on."""
+        self._content_index[fingerprint] = (key, job, done)
+
+    def content_lookup(self, fingerprint) -> Optional[tuple]:
+        """-> (key, uploader job, upload-done time) if an object with
+        this content identity is still stored, else None. This is the
+        cross-sender (and cross-job) half of the content-addressed
+        cache: senders consult it before encoding a fresh PUT."""
+        ent = self._content_index.get(fingerprint)
+        if ent is None or ent[0] not in self._objects:
+            return None
+        return ent
 
     # -- data plane ------------------------------------------------------
     def _maybe_fail(self) -> bool:

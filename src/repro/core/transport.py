@@ -245,8 +245,10 @@ class FabricSpec:
       promised times (no revocation), so a saturated edge can briefly
       overcommit when a high-priority job bursts in — the documented
       fluid approximation.
-    * ``fair-share`` — each of the k jobs present on the edge is
-      guaranteed capacity/k; spare capacity from idle jobs is usable
+    * ``fair-share`` — each job i present on the edge is guaranteed
+      ``capacity * w_i / Σw`` over the present jobs' admission weights
+      (``JobHandle.weight``; all weights 1.0 reduces to capacity/k,
+      bit-identically); spare capacity from idle jobs is usable
       (work-conserving).
 
     ``shared_links=False`` (the default) disables the pipe ledger
@@ -267,10 +269,14 @@ class JobHandle:
 
     Threading this through a backend namespaces its endpoints, transfer
     ids and stats under ``name``. ``priority`` matters only under the
-    ``priority`` admission policy (higher = more important)."""
+    ``priority`` admission policy (higher = more important);
+    ``weight`` only under ``fair-share`` (a job's guaranteed slice of a
+    contended edge is ``capacity * weight / Σweights`` over the jobs
+    present on it)."""
     fabric: "Fabric"
     name: str
     priority: int = 0
+    weight: float = 1.0
 
     @property
     def stats(self) -> defaultdict:
@@ -290,9 +296,13 @@ class _EdgePipe:
     bottleneck — without it every simulate call rides its own private
     copy of the edge."""
 
-    def __init__(self, capacity: float, policy: str):
+    def __init__(self, capacity: float, policy: str,
+                 weight_of: Optional[Callable[[str], float]] = None):
         self.capacity = float(capacity)
         self.policy = policy
+        # fair-share admission weights, resolved per job name at query
+        # time (the fabric passes its JobHandle table's lookup)
+        self.weight_of = weight_of or (lambda job: 1.0)
         self.resv: List[Tuple[float, float, float, int, str]] = []
 
     # -- queries ---------------------------------------------------------
@@ -313,8 +323,13 @@ class _EdgePipe:
         if self.policy == "priority":
             return max(cap - visible - own, 0.0)
         if self.policy == "fair-share":
-            k = 1 + len(others)
-            return max(cap - total, cap / k - own, 0.0)
+            # weighted fair share over the jobs present on this edge:
+            # guaranteed slice = cap * w_own / Σw (all-1.0 weights give
+            # exactly cap / k — multiplying by w_own == 1.0 is an IEEE
+            # identity, so unweighted runs stay bit-identical)
+            w_own = self.weight_of(job)
+            w_sum = w_own + sum(self.weight_of(j) for j in others)
+            return max(cap - total, cap * w_own / w_sum - own, 0.0)
         return max(cap - total, 0.0)  # fifo
 
     def _next_boundary(self, t: float) -> float:
@@ -411,17 +426,26 @@ class Fabric:
         self.fault_model = fault_model
 
     # -- tenancy ------------------------------------------------------------
-    def job(self, name: str, priority: int = 0) -> JobHandle:
+    def job(self, name: str, priority: int = 0,
+            weight: float = 1.0) -> JobHandle:
         """Register (or fetch) a tenant. Job names namespace endpoint
         keys as ``{name}::{host_id}``; the empty name is the implicit
         default tenant every legacy call site already uses."""
         if "::" in name:
             raise ValueError(f"job name {name!r} may not contain '::'")
+        if not weight > 0:
+            raise ValueError(f"job weight must be > 0 (got {weight})")
         h = self.jobs.get(name)
         if h is None:
-            h = self.jobs[name] = JobHandle(self, name, priority)
+            h = self.jobs[name] = JobHandle(self, name, priority, weight)
             self.stats_for(name)  # the per-job stats view exists from birth
         return h
+
+    def _job_weight(self, job: str) -> float:
+        """Fair-share admission weight of one tenant (unknown names —
+        including the implicit default tenant — weigh 1.0)."""
+        h = self.jobs.get(job)
+        return h.weight if h is not None else 1.0
 
     def stats_for(self, job: str = "") -> defaultdict:
         js = self.job_stats.get(job)
@@ -469,7 +493,8 @@ class Fabric:
         key = (src_id, dst_id)
         p = self._pipes.get(key)
         if p is None:
-            p = self._pipes[key] = _EdgePipe(capacity, self.spec.policy)
+            p = self._pipes[key] = _EdgePipe(capacity, self.spec.policy,
+                                             weight_of=self._job_weight)
         return p
 
     def link_transmit(self, src_id: str, dst_id: str, depart: float,
@@ -515,7 +540,8 @@ class Fabric:
     # -- point-to-point -----------------------------------------------------
     def account(self, nbytes: float = 0.0, messages: int = 1, *,
                 chunks: int = 0, retransmits: int = 0,
-                transfers_failed: int = 0, job: str = "") -> None:
+                transfers_failed: int = 0, cross_job_hits: int = 0,
+                job: str = "") -> None:
         """Wire accounting — the ONLY place fabric stats are mutated
         (scripts/check_stats_discipline.py enforces this): delivery
         paths, bypassing call sites (concurrent broadcasts, the sync
@@ -531,6 +557,8 @@ class Fabric:
                 target["retransmits"] += retransmits
             if transfers_failed:
                 target["transfers_failed"] += transfers_failed
+            if cross_job_hits:
+                target["cross_job_hits"] += cross_job_hits
 
     def deliver(self, msg: FLMessage, wire: Optional[WireData],
                 start: float, duration: float, *, job: str = ""):

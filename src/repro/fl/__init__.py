@@ -7,10 +7,13 @@ from repro.fl.fault import (AvailabilityTrace, FaultPlan, make_availability)
 from repro.fl.scheduler import (AsyncRunReport, EventLoop, FLScheduler,
                                 UpdateRecord)
 from repro.fl.server import FLServer, RoundReport, quorum_cutoff
+from repro.fl.vertical import (SplitPlan, VerticalLive, VerticalStrategy,
+                               bottom_fraction, sim_activation_nbytes)
 
 __all__ = ["FLServer", "FLClient", "RoundReport", "fedavg",
            "fedavg_quantized", "staleness_weight", "quorum_cutoff",
            "FLScheduler", "EventLoop", "AsyncRunReport", "UpdateRecord",
            "AggregationStrategy", "FedBuffStrategy", "SemiSyncStrategy",
            "HierarchicalStrategy", "make_strategy", "AvailabilityTrace",
-           "FaultPlan", "make_availability"]
+           "FaultPlan", "make_availability", "SplitPlan", "VerticalLive",
+           "VerticalStrategy", "bottom_fraction", "sim_activation_nbytes"]

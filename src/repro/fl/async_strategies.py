@@ -731,5 +731,13 @@ def make_strategy(cfg, num_clients: Optional[int] = None,
         overrides.setdefault("relay_depth", getattr(cfg, "relay_depth", 1))
         return HierarchicalStrategy(
             staleness_exponent=cfg.staleness_exponent, **overrides)
-    raise KeyError(f"unknown scheduler mode '{mode}' "
-                   "(sync rounds use FLServer.run_round)")
+    if mode == "vertical":
+        from repro.fl.vertical import VerticalStrategy
+        overrides.setdefault("cut_layer", getattr(cfg, "cut_layer", 1))
+        overrides.setdefault("batches_per_round",
+                             getattr(cfg, "batches_per_round", 8))
+        return VerticalStrategy(**overrides)
+    raise KeyError(
+        f"unknown scheduler mode '{mode}': event-driven modes are "
+        f"'fedbuff' | 'semisync' | 'hier' | 'vertical' (sync rounds use "
+        f"FLServer.run_round)")

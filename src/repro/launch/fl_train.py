@@ -107,9 +107,15 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
     # compression there would charge time it doesn't pay for). The wire
     # codec and chunked pipelining are lossless and ride every backend,
     # incl. the server's broadcast — Runtime.make_backend applies them.
-    client_compression = (fl_cfg.compression
-                          if fl_cfg.mode in ("fedbuff", "semisync")
-                          else "none")
+    if fl_cfg.mode == "vertical":
+        # vertical traffic is compressed on BOTH directions: activations
+        # up on the clients' channels, gradients down on the server's
+        client_compression = server_compression = fl_cfg.activation_codec
+    else:
+        client_compression = (fl_cfg.compression
+                              if fl_cfg.mode in ("fedbuff", "semisync")
+                              else "none")
+        server_compression = "none"
     clients = []
     for i, host in enumerate(env.clients):
         cb = rt.make_backend(host.host_id, compression=client_compression)
@@ -117,23 +123,69 @@ def build_deployment(fl_cfg: FLConfig, *, tier: str = "small",
                                 train_fn=make_train_fn(), batch_size=16,
                                 sim_train_s=sim_train,
                                 seed=fl_cfg.seed + i))
-    server_backend = rt.make_backend("server", compression="none")
+    server_backend = rt.make_backend("server",
+                                     compression=server_compression)
     server = FLServer(server_backend, clients,
                       quorum_fraction=fl_cfg.quorum_fraction,
                       round_deadline_s=fl_cfg.round_deadline_s,
                       local_steps=local_steps)
+    server.model = model  # the deployed zoo model (vertical mode splits it)
     return server, params, env, store
+
+
+def _vertical_strategy(fl_cfg: FLConfig, server: FLServer, params,
+                       scenario: Scenario):
+    """Live VerticalStrategy over the deployment's model: the split
+    parties run real SGD and real activation/gradient tensors ride the
+    backends' wire stacks (codec + EF per direction, chunking, faults)."""
+    from repro.fl.vertical import (SIM_BATCH_SIZE, SplitPlan, VerticalLive,
+                                   VerticalStrategy, bottom_fraction,
+                                   sim_activation_nbytes)
+    plan = SplitPlan(server.model, fl_cfg.cut_layer)
+    bottom, top = plan.split_params(params)
+    # each feature party starts from the same bottom (they hold disjoint
+    # example sets, not disjoint features, in this single-dataset driver)
+    bottoms = {c.client_id: bottom for c in server.clients}
+    by_id = {c.client_id: c for c in server.clients}
+
+    def batch_fn(cid, round_, batch):
+        c = by_id[cid]
+        it = c.dataset.batches(c.batch_size,
+                               seed=c.seed + 131 * round_ + batch)
+        return {k: jnp.asarray(v) for k, v in next(it).items()}
+
+    tier = TIERS[scenario.fleet.tier]
+    return VerticalStrategy(
+        cut_layer=fl_cfg.cut_layer,
+        batches_per_round=fl_cfg.batches_per_round,
+        activation_nbytes=sim_activation_nbytes(
+            tier.payload_bytes, SIM_BATCH_SIZE, fl_cfg.cut_layer),
+        train_s=tier.train_s(fl_cfg.environment),
+        bottom_frac=bottom_fraction(fl_cfg.cut_layer, plan.n_units),
+        live=VerticalLive(plan=plan, bottoms=bottoms, top=top,
+                          batch_fn=batch_fn))
 
 
 def run_event_driven(fl_cfg: FLConfig, server: FLServer, params, store,
                      scenario: Scenario) -> int:
-    """Async / semi-sync / hierarchical execution over the same deployment."""
-    strategy = make_strategy(fl_cfg, fl_cfg.num_clients)
+    """Async / semi-sync / hierarchical / vertical execution over the
+    same deployment."""
+    if fl_cfg.mode == "vertical":
+        strategy = _vertical_strategy(fl_cfg, server, params, scenario)
+        # vertical rounds update the split parties in place — the
+        # scheduler's "global payload" is activation-sized bookkeeping,
+        # never a model broadcast
+        from repro.core.message import VirtualPayload
+        global_payload = VirtualPayload(strategy.activation_nbytes,
+                                        tag="vertical-global")
+    else:
+        strategy = make_strategy(fl_cfg, fl_cfg.num_clients)
+        global_payload = TensorPayload(params)
     availability = make_availability(
         fl_cfg.availability_trace,
         [c.client_id for c in server.clients],
         horizon_s=scenario.faults.trace_horizon_s, seed=fl_cfg.seed)
-    report, sched = server.run_async(TensorPayload(params), strategy,
+    report, sched = server.run_async(global_payload, strategy,
                                      availability=availability,
                                      cohort_k=fl_cfg.cohort_k,
                                      cohort_seed=fl_cfg.seed,
@@ -207,7 +259,19 @@ def _parser() -> argparse.ArgumentParser:
                     help="sync-mode per-round client drop rate (FaultPlan)")
     ap.add_argument("--tier", default=None)
     ap.add_argument("--mode", default=None,
-                    choices=["sync", "fedbuff", "semisync", "hier"])
+                    choices=["sync", "fedbuff", "semisync", "hier",
+                             "vertical"])
+    ap.add_argument("--cut-layer", type=int, default=None,
+                    help="vertical mode: unit boundary of the bottom/top "
+                         "split (valid cuts: 1..n_units-1 of the deployed "
+                         "model)")
+    ap.add_argument("--batches-per-round", type=int, default=None,
+                    help="vertical mode: forward-activation / "
+                         "backward-gradient exchanges per party per round")
+    ap.add_argument("--activation-codec", default=None,
+                    help="vertical mode: codec on the activation/gradient "
+                         "wires, both directions (none | qsgd[:block] | "
+                         "topk[:frac])")
     ap.add_argument("--buffer-k", type=int, default=None,
                     help="fedbuff merge buffer (0 = num_clients // 2)")
     ap.add_argument("--staleness-exponent", type=float, default=None)
@@ -277,6 +341,9 @@ def resolve_scenario(args, ap: argparse.ArgumentParser) -> Scenario:
             "strategy.staleness_adaptive": args.staleness_adaptive,
             "strategy.quorum_fraction": args.quorum,
             "strategy.round_deadline_s": args.deadline,
+            "split.cut_layer": args.cut_layer,
+            "split.batches_per_round": args.batches_per_round,
+            "split.activation_codec": args.activation_codec,
             "faults.link_loss": args.link_loss,
             "faults.availability_trace": args.availability_trace,
             "faults.trace_horizon_s": args.trace_horizon,

@@ -5,13 +5,13 @@ from repro.scenario.build import Runtime, build_runtime, fault_model_for
 from repro.scenario.spec import (MODES, TOPOLOGY_PRESETS, BlackoutSpec,
                                  ChannelSpec, EdgeSpec, FaultSpec,
                                  FleetSpec, JobSpec, MultiScenario,
-                                 Scenario, ScenarioError, StrategySpec,
-                                 TopologySpec, load_blackouts_file,
-                                 with_overrides)
+                                 Scenario, ScenarioError, SplitSpec,
+                                 StrategySpec, TopologySpec,
+                                 load_blackouts_file, with_overrides)
 
 __all__ = ["Scenario", "TopologySpec", "FleetSpec", "ChannelSpec",
-           "FaultSpec", "StrategySpec", "EdgeSpec", "BlackoutSpec",
-           "FabricSpec", "JobSpec", "MultiScenario", "ScenarioError",
-           "TOPOLOGY_PRESETS", "MODES", "with_overrides",
+           "FaultSpec", "StrategySpec", "SplitSpec", "EdgeSpec",
+           "BlackoutSpec", "FabricSpec", "JobSpec", "MultiScenario",
+           "ScenarioError", "TOPOLOGY_PRESETS", "MODES", "with_overrides",
            "load_blackouts_file", "Runtime", "build_runtime",
            "fault_model_for"]

@@ -40,7 +40,7 @@ from repro.core.transport import FabricSpec
 
 TOPOLOGY_PRESETS = ("lan", "geo_proximal", "geo_distributed",
                     "star", "ring", "multi_hub")
-MODES = ("sync", "fedbuff", "semisync", "hier")
+MODES = ("sync", "fedbuff", "semisync", "hier", "vertical")
 
 
 class ScenarioError(ValueError):
@@ -450,6 +450,22 @@ class StrategySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class SplitSpec:
+    """The vertical/split-FL cut (fl/vertical.py; mode="vertical" only).
+
+    ``cut_layer`` is the boundary index into the model's layer list: the
+    feature parties own layers ``[0, cut_layer)`` (the bottom), the label
+    party owns ``[cut_layer, L)`` (the top). ``batches_per_round`` is how
+    many forward-activation / backward-gradient exchanges each party runs
+    per aggregation round; ``activation_codec`` compresses the per-batch
+    activation/gradient wires through the same CompressStage machinery as
+    model updates ("none" | qsgd[:block] | topk[:frac])."""
+    cut_layer: int = 1
+    batches_per_round: int = 8
+    activation_codec: str = "none"
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """One complete, declarative experiment description."""
     name: str = "scenario"
@@ -459,6 +475,20 @@ class Scenario:
     channel: ChannelSpec = ChannelSpec()
     faults: FaultSpec = FaultSpec()
     strategy: StrategySpec = StrategySpec()
+    split: SplitSpec = SplitSpec()
+
+    def __post_init__(self):
+        # tolerate dict-form nested specs: Scenario(**sc.to_dict()) with
+        # only *some* fields re-specified as dataclasses is an
+        # established idiom, and it silently leaves the rest as plain
+        # dicts — coerce them through the strict deserializer
+        for field in ("topology", "fleet", "channel", "faults",
+                      "strategy", "split"):
+            v = getattr(self, field)
+            if isinstance(v, dict):  # _NESTED is defined below; only
+                # reached at call time, never during module import
+                object.__setattr__(self, field,
+                                   _from_dict(_NESTED[field], v, field))
 
     # -- validation --------------------------------------------------------
     def validate(self) -> "Scenario":
@@ -482,6 +512,15 @@ class Scenario:
             raise ScenarioError(
                 f"strategy.mode: unknown mode '{self.strategy.mode}'; "
                 f"choose from {list(MODES)}")
+        if self.split.cut_layer < 1:
+            raise ScenarioError("split.cut_layer must be >= 1")
+        if self.split.batches_per_round < 1:
+            raise ScenarioError("split.batches_per_round must be >= 1")
+        try:
+            make_codec(self.split.activation_codec)
+        except KeyError as e:
+            raise ScenarioError(
+                f"split.activation_codec: {e.args[0]}") from None
         if not 0.0 <= self.faults.link_loss < 1.0:
             raise ScenarioError("faults.link_loss must be in [0, 1)")
         if not 0.0 < self.strategy.quorum_fraction <= 1.0:
@@ -579,7 +618,11 @@ class Scenario:
                 round_deadline_s=cfg.round_deadline_s,
                 region_quorum=cfg.region_quorum,
                 relay_conns=getattr(cfg, "relay_conns", 8),
-                streaming_hub=getattr(cfg, "streaming_hub", False)))
+                streaming_hub=getattr(cfg, "streaming_hub", False)),
+            split=SplitSpec(
+                cut_layer=getattr(cfg, "cut_layer", 1),
+                batches_per_round=getattr(cfg, "batches_per_round", 8),
+                activation_codec=getattr(cfg, "activation_codec", "none")))
 
     # -- the bridge to the runtime config ----------------------------------
     def fl_config(self):
@@ -607,7 +650,10 @@ class Scenario:
             relay_conns=self.strategy.relay_conns,
             relay_depth=self.topology.relay_depth,
             cohort_k=self.fleet.cohort_k,
-            streaming_hub=self.strategy.streaming_hub)
+            streaming_hub=self.strategy.streaming_hub,
+            cut_layer=self.split.cut_layer,
+            batches_per_round=self.split.batches_per_round,
+            activation_codec=self.split.activation_codec)
 
 
 # ---------------------------------------------------------------------------
@@ -618,12 +664,16 @@ class Scenario:
 class JobSpec:
     """One tenant job of a multi-tenant deployment: a full Scenario plus
     its co-scheduling knobs. ``priority`` feeds the fabric's admission
-    policy (higher preempts under ``policy="priority"``); ``start_s``
-    offsets the job's bootstrap on the shared clock; ``rounds`` caps the
-    job's aggregations (0 = the scenario's own ``strategy.rounds``)."""
+    policy (higher preempts under ``policy="priority"``); ``weight``
+    scales the job's fair-share grant (``cap * w_i / sum(w)`` under
+    ``policy="fair-share"`` — weight 1.0 everywhere reproduces the
+    unweighted ``cap / k`` split exactly); ``start_s`` offsets the job's
+    bootstrap on the shared clock; ``rounds`` caps the job's
+    aggregations (0 = the scenario's own ``strategy.rounds``)."""
     name: str
     scenario: Scenario = Scenario()
     priority: int = 0
+    weight: float = 1.0
     start_s: float = 0.0
     rounds: int = 0
 
@@ -661,6 +711,9 @@ class MultiScenario:
                 raise ScenarioError(
                     f"{where}: needs a positive aggregation cap "
                     f"(rounds= or scenario.strategy.rounds)")
+            if not j.weight > 0:
+                raise ScenarioError(
+                    f"{where}: weight must be > 0 (got {j.weight})")
             if j.scenario.strategy.mode not in ("fedbuff", "semisync"):
                 raise ScenarioError(
                     f"{where}: co-scheduling drives the event-driven "
@@ -720,7 +773,7 @@ def _anchor_blackouts_file(sc: Scenario, spec_path: str) -> Scenario:
 
 _NESTED = {"topology": TopologySpec, "fleet": FleetSpec,
            "channel": ChannelSpec, "faults": FaultSpec,
-           "strategy": StrategySpec}
+           "strategy": StrategySpec, "split": SplitSpec}
 
 
 def _from_dict(cls, data, path):

@@ -27,7 +27,8 @@ def wire_stats(fabric, store=None, job: str = "") -> Dict[str, float]:
     stats = fabric.stats if not job else fabric.stats_for(job)
     out = {"bytes_on_wire": float(stats["bytes"]),
            "retransmits": float(stats["retransmits"]),
-           "transfers_failed": float(stats["transfers_failed"])}
+           "transfers_failed": float(stats["transfers_failed"]),
+           "n_cross_job_hits": float(stats["cross_job_hits"])}
     if store is not None:
         out["s3_retries"] = float(store.stats["retries"])
     return out
@@ -91,40 +92,75 @@ def run_scenario(scenario: Scenario, *,
     from repro.fl import make_strategy
     from repro.fl.fault import make_availability
     # the payload codec rides the client update path for the buffered
-    # modes; hier compresses its relay WAN hop inside the strategy
-    client_comp = (scenario.channel.compression
-                   if mode in ("fedbuff", "semisync") else "none")
+    # modes; hier compresses its relay WAN hop inside the strategy; the
+    # vertical mode compresses BOTH directions — activations up on the
+    # clients' channels, activation gradients down on the server's
+    strategy_kw: Dict[str, Any] = {}
+    if mode == "vertical":
+        from repro.fl.vertical import (SIM_BATCH_SIZE, TIER_DEPTH,
+                                       bottom_fraction,
+                                       sim_activation_nbytes)
+        client_comp = scenario.split.activation_codec
+        server_comp = scenario.split.activation_codec
+        train_s = scenario.fleet.train_s \
+            or tier.train_s(scenario.topology.kind)
+        depth = TIER_DEPTH.get(scenario.fleet.tier, 8)
+        strategy_kw = dict(
+            activation_nbytes=sim_activation_nbytes(
+                tier.payload_bytes, SIM_BATCH_SIZE,
+                scenario.split.cut_layer),
+            train_s=train_s,
+            bottom_frac=bottom_fraction(scenario.split.cut_layer, depth))
+    else:
+        client_comp = (scenario.channel.compression
+                       if mode in ("fedbuff", "semisync") else "none")
+        server_comp = "none"
     clients = make_clients(rt, compression=client_comp)
     strategy = make_strategy(scenario.fl_config(),
-                             scenario.topology.num_clients)
+                             scenario.topology.num_clients, **strategy_kw)
     availability = make_availability(
         scenario.faults.availability_trace,
         [c.client_id for c in clients],
         horizon_s=scenario.faults.trace_horizon_s, seed=scenario.seed)
-    sched = FLScheduler(rt.make_backend("server", compression="none"),
+    sched = FLScheduler(rt.make_backend("server", compression=server_comp),
                         clients, strategy,
                         local_steps=scenario.fleet.local_steps,
                         availability=availability,
                         cohort_k=scenario.fleet.cohort_k,
                         cohort_seed=scenario.seed,
                         streaming_hub=scenario.strategy.streaming_hub)
-    rep = sched.run(VirtualPayload(tier.payload_bytes, tag="sweep"),
-                    max_aggregations=rounds)
+    # vertical rounds update parties in place: the "global payload" is an
+    # activation-sized bookkeeping record, not a model broadcast
+    payload = (VirtualPayload(strategy.activation_nbytes,
+                              tag="sweep-vertical")
+               if mode == "vertical"
+               else VirtualPayload(tier.payload_bytes, tag="sweep"))
+    rep = sched.run(payload, max_aggregations=rounds)
     reports = [{"version": e.version, "time": e.time,
                 "n_updates": e.n_updates,
                 "mean_staleness": e.mean_staleness}
                for e in sched.agg_log]
-    return {"sim_time_s": rep.sim_time, "n_rounds": rep.n_aggregations,
-            "round_s": rep.sim_time / max(rep.n_aggregations, 1),
-            "aggregations_per_hour": rep.aggregations_per_hour,
-            "updates_per_hour": rep.client_updates_per_hour,
-            "n_client_updates": rep.n_client_updates,
-            "mean_staleness": rep.mean_staleness,
-            "n_departures": rep.n_departures,
-            "n_rejoins": rep.n_rejoins,
-            "n_discarded": rep.n_discarded,
-            "round_reports": reports,
-            **wire_stats(rt.fabric, rt.store)}
+    out = {"sim_time_s": rep.sim_time, "n_rounds": rep.n_aggregations,
+           "round_s": rep.sim_time / max(rep.n_aggregations, 1),
+           "aggregations_per_hour": rep.aggregations_per_hour,
+           "updates_per_hour": rep.client_updates_per_hour,
+           "n_client_updates": rep.n_client_updates,
+           "mean_staleness": rep.mean_staleness,
+           "n_departures": rep.n_departures,
+           "n_rejoins": rep.n_rejoins,
+           "n_discarded": rep.n_discarded,
+           "round_reports": reports,
+           **wire_stats(rt.fabric, rt.store)}
+    if scenario.channel.backend == "auto":
+        # per-message routing decisions (msg_type -> backend counts), so
+        # studies can assert AUTO routes activation traffic by size
+        decisions: Dict[str, int] = {}
+        for be in [sched.backend] + [c.backend for c in clients]:
+            for (mt, _nb, name) in getattr(be, "decisions", []):
+                key = f"{mt}:{name}"
+                decisions[key] = decisions.get(key, 0) + 1
+        out["auto_decisions"] = decisions
+    return out
 
 
 def run_scenario_cell(cell) -> Dict[str, Any]:
@@ -133,17 +169,21 @@ def run_scenario_cell(cell) -> Dict[str, Any]:
     return run_scenario(cell.scenario)
 
 
-def run_multi(mspec: MultiScenario) -> Dict[str, Any]:
+def run_multi(mspec: MultiScenario, *,
+              runtime_out: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Co-schedule every job of a MultiScenario on one shared deployment.
 
     One topology (jobs[0]'s — validation pins every job to it), ONE
     fabric carrying ``mspec.fabric`` (admission policy + shared links),
     one EventLoop clock. Each job gets its own tenant namespace
-    (``fabric.job``), its own object store, its own tier-calibrated
-    clients and its own FLScheduler; tenants interact only through the
-    contended links. The fault model is jobs[0]'s (one physical network
+    (``fabric.job``), its own tier-calibrated clients and its own
+    FLScheduler; all jobs share ONE object store (content-addressed
+    dedup works across tenants); tenants otherwise interact only
+    through the contended links. The fault model is jobs[0]'s (one physical network
     has one weather system). Returns per-job report blocks plus the
-    global wire totals the per-job views sum to."""
+    global wire totals the per-job views sum to. ``runtime_out``, if
+    given, is filled with the live fabric + store so callers (the fig12
+    admission gates) can inspect granted pipe segments post-run."""
     from repro.core.backends import make_backend
     from repro.core.netsim import NCAL
     from repro.core.objectstore import ObjectStore
@@ -164,12 +204,16 @@ def run_multi(mspec: MultiScenario) -> Dict[str, Any]:
 
     loop = EventLoop()
     multi = MultiScheduler(loop)
+    # ONE bucket for the whole deployment: the content-addressed cache is
+    # keyed job-blind, so tenants shipping the same wire dedup each
+    # other's PUTs (counted as cross_job_hits in the hitter's stats)
+    shared_store = ObjectStore(NCAL, fail_rate=base.faults.store_fail_rate)
     stores: Dict[str, ObjectStore] = {}
     for js in mspec.jobs:
         sc = js.scenario
-        handle = fabric.job(js.name, priority=js.priority)
-        store = stores[js.name] = ObjectStore(
-            NCAL, fail_rate=sc.faults.store_fail_rate)
+        handle = fabric.job(js.name, priority=js.priority,
+                            weight=js.weight)
+        store = stores[js.name] = shared_store
         tier = TIERS[sc.fleet.tier]
         ch = sc.channel
 
@@ -203,6 +247,9 @@ def run_multi(mspec: MultiScenario) -> Dict[str, Any]:
                       max_aggregations=js.cap(), start_s=js.start_s)
 
     reports = multi.run()
+    if runtime_out is not None:
+        runtime_out["fabric"] = fabric
+        runtime_out["store"] = shared_store
     jobs_out: Dict[str, Any] = {}
     for name, rep in reports.items():
         jobs_out[name] = {

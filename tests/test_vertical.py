@@ -1,0 +1,348 @@
+"""Vertical / split FL subsystem (fl/vertical.py + the mode plumbing).
+
+Covers: split == unsplit forward/backward parity across three zoo
+families and two cut depths; per-direction error-feedback state on the
+compressed activation path; chunk-loss retransmit completing every
+batch; SplitSpec JSON round-trip; CLI override precedence for
+--cut-layer; the loud unknown-mode errors; the weighted fair-share
+admission formula; cross-job object-store dedup; and the benchmark
+registry's loud discovery error.
+"""
+import json
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.fl.vertical import SplitPlan, bottom_fraction, sim_activation_nbytes
+from repro.models.transformer import TransformerLM
+from repro.models.vision import (MobileNetConfig, MobileNetV3, ResNet,
+                                 ResNetConfig)
+from repro.scenario import (ChannelSpec, FaultSpec, FleetSpec, Scenario,
+                            ScenarioError, SplitSpec, StrategySpec,
+                            TopologySpec)
+
+# ---------------------------------------------------------------------------
+# split == unsplit parity, three zoo families x two cut depths
+# ---------------------------------------------------------------------------
+
+TOL = 1e-5
+
+
+def _resnet():
+    model = ResNet(ResNetConfig(name="r-test", widths=(8, 16),
+                                blocks_per_stage=2, num_classes=5,
+                                image_size=8))
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3)),
+             "labels": jnp.array([0, 3])}
+    return model, batch
+
+
+def _mobilenet():
+    model = MobileNetV3(MobileNetConfig(
+        name="m-test", blocks=((1, 8, 1, False), (4, 12, 2, True),
+                               (3, 12, 1, False)),
+        stem=8, head=24, classifier=16, num_classes=5, image_size=8))
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3)),
+             "labels": jnp.array([1, 4])}
+    return model, batch
+
+
+def _transformer():
+    model = TransformerLM(ModelConfig(
+        name="t-test", family="dense", num_layers=4, d_model=16,
+        num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=31,
+        dtype="float32", param_dtype="float32"))
+    tok = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0, 31)
+    batch = {"tokens": tok, "targets": jnp.roll(tok, -1, axis=1)}
+    return model, batch
+
+
+@pytest.mark.parametrize("family", ["resnet", "mobilenet", "transformer"])
+@pytest.mark.parametrize("cut", [1, 2])
+def test_split_parity_forward_backward(family, cut):
+    model, batch = {"resnet": _resnet, "mobilenet": _mobilenet,
+                    "transformer": _transformer}[family]()
+    params = model.init(jax.random.PRNGKey(0))
+    if family == "transformer":
+        params, _axes = params  # TransformerLM.init returns (params, axes)
+    plan = SplitPlan(model, cut_layer=cut)
+    assert 1 <= cut <= plan.n_units - 1
+
+    ref_loss, ref_g = jax.value_and_grad(
+        lambda p: model.loss(p, batch)[0])(params)
+    bottom, top = plan.split_params(params)
+    split_loss, (g_b, g_t) = jax.value_and_grad(
+        lambda b, t: plan.loss(b, t, batch)[0], argnums=(0, 1))(bottom, top)
+    assert abs(float(ref_loss) - float(split_loss)) <= TOL
+    merged_g = plan.merge_params(g_b, g_t)
+    for a, b in zip(jax.tree.leaves(ref_g), jax.tree.leaves(merged_g)):
+        assert float(jnp.max(jnp.abs(a - b))) <= TOL
+    # the parameter split is an exact round trip
+    re = plan.merge_params(bottom, top)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(re)):
+        assert a is b or bool(jnp.all(a == b))
+
+
+def test_split_plan_rejects_out_of_range_cut():
+    model, _ = _resnet()
+    with pytest.raises(ValueError, match="cut_layer"):
+        SplitPlan(model, cut_layer=0)
+    with pytest.raises(ValueError, match="cut_layer"):
+        SplitPlan(model, cut_layer=99)
+
+
+# ---------------------------------------------------------------------------
+# live compressed activations: per-direction error-feedback state
+# ---------------------------------------------------------------------------
+
+def test_live_qsgd_activation_error_feedback_per_direction():
+    from repro.core.message import VirtualPayload
+    from repro.launch.fl_train import _vertical_strategy, build_deployment
+
+    sc = Scenario(
+        name="vert-ef",
+        topology=TopologySpec(kind="lan", num_clients=2),
+        fleet=FleetSpec(tier="small", local_steps=1),
+        channel=ChannelSpec(backend="grpc"),
+        strategy=StrategySpec(mode="vertical", rounds=1),
+        split=SplitSpec(cut_layer=1, batches_per_round=2,
+                        activation_codec="qsgd")).validate()
+    fl_cfg = sc.fl_config()
+    server, params, env, store = build_deployment(
+        fl_cfg, tier=sc.fleet.tier, local_steps=sc.fleet.local_steps,
+        scenario=sc)
+    strategy = _vertical_strategy(fl_cfg, server, params, sc)
+    report, sched = server.run_async(
+        VirtualPayload(strategy.activation_nbytes, tag="vert-ef"),
+        strategy, availability=None, cohort_k=0, cohort_seed=0,
+        streaming_hub=False, max_aggregations=1)
+    assert report.n_aggregations == 1
+
+    # activations ride UP on each client's channel: one residual stream
+    # keyed by the server peer
+    for c in server.clients:
+        state = c.backend.channel.compress_stage._state
+        assert set(state) == {"server"}, (
+            f"client {c.client_id} EF streams: {sorted(state)}")
+    # activation gradients ride DOWN on the server's channel: one
+    # residual stream per feature party
+    down = sched.backend.channel.compress_stage._state
+    assert set(down) == {c.client_id for c in server.clients}
+    # a real quantization loop ran: every batch produced a live loss
+    assert all(ev.loss is not None for ev in sched.agg_log)
+
+
+# ---------------------------------------------------------------------------
+# chunk loss on the activation path: retransmits, every batch completes
+# ---------------------------------------------------------------------------
+
+def test_chunk_loss_retransmit_completes_every_batch():
+    from repro.sweep.runners import run_scenario
+
+    n_rounds, n_clients, bpr = 2, 3, 4
+    sc = Scenario(
+        name="vert-loss",
+        topology=TopologySpec(kind="geo_distributed",
+                              num_clients=n_clients),
+        fleet=FleetSpec(tier="small"),
+        channel=ChannelSpec(backend="grpc", chunk_mb=0.05),
+        faults=FaultSpec(link_loss=0.05),
+        strategy=StrategySpec(mode="vertical", rounds=n_rounds),
+        split=SplitSpec(cut_layer=1, batches_per_round=bpr))
+    out = run_scenario(sc)
+    assert out["n_rounds"] == n_rounds
+    # lossy chunked activation wires actually retransmitted
+    assert out["retransmits"] > 0
+    # ... and every batch of every round still completed: nothing was
+    # discarded, and each aggregation saw every party's full batch count
+    assert out["n_discarded"] == 0
+    for rep in out["round_reports"]:
+        assert rep["n_updates"] == n_clients
+
+
+# ---------------------------------------------------------------------------
+# SplitSpec serialization + CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_split_spec_json_round_trip():
+    sc = Scenario(name="vert-json",
+                  strategy=StrategySpec(mode="vertical", rounds=4),
+                  split=SplitSpec(cut_layer=3, batches_per_round=5,
+                                  activation_codec="topk:0.1"))
+    sc2 = Scenario.from_json(sc.to_json())
+    assert sc2 == sc
+    assert sc2.split == SplitSpec(cut_layer=3, batches_per_round=5,
+                                  activation_codec="topk:0.1")
+    # unknown split keys stay loud
+    bad = json.loads(sc.to_json())
+    bad["split"]["cut_depth"] = 1
+    with pytest.raises(ScenarioError, match="cut_depth"):
+        Scenario.from_json(json.dumps(bad))
+
+
+def test_cli_cut_layer_override_precedence(tmp_path):
+    from repro.launch.fl_train import _parser, resolve_scenario
+
+    spec = tmp_path / "vert.json"
+    sc = Scenario(name="vert-cli",
+                  strategy=StrategySpec(mode="vertical"),
+                  split=SplitSpec(cut_layer=2, batches_per_round=6,
+                                  activation_codec="qsgd"))
+    spec.write_text(sc.to_json())
+    ap = _parser()
+    # unset flag -> the loaded spec's value survives
+    args = ap.parse_args(["--scenario", str(spec)])
+    assert resolve_scenario(args, ap).split.cut_layer == 2
+    # explicit flag wins over the loaded spec
+    args = ap.parse_args(["--scenario", str(spec), "--cut-layer", "3",
+                          "--batches-per-round", "2",
+                          "--activation-codec", "none"])
+    got = resolve_scenario(args, ap)
+    assert got.split.cut_layer == 3
+    assert got.split.batches_per_round == 2
+    assert got.split.activation_codec == "none"
+
+
+# ---------------------------------------------------------------------------
+# unknown mode: the loud, path-carrying error
+# ---------------------------------------------------------------------------
+
+def test_unknown_mode_error_lists_valid_modes():
+    from repro.fl import make_strategy
+    from repro.scenario.spec import MODES
+
+    sc = Scenario(name="bad-mode", strategy=StrategySpec(mode="warp"))
+    with pytest.raises(ScenarioError) as ei:
+        sc.validate()
+    msg = str(ei.value)
+    assert "strategy.mode: unknown mode 'warp'" in msg
+    for m in MODES:
+        assert m in msg
+
+    cfg = Scenario(name="ok").fl_config()
+    cfg = type(cfg)(**{**cfg.__dict__, "mode": "warp"})
+    with pytest.raises(KeyError) as ei:
+        make_strategy(cfg, 4)
+    assert "unknown scheduler mode 'warp'" in str(ei.value)
+    assert "'vertical'" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# admission-weighted fair share
+# ---------------------------------------------------------------------------
+
+def test_weighted_fair_share_grant_formula():
+    from repro.core.transport import _EdgePipe
+
+    cap = 8e6
+    # unit weights: bit-identical to the historic cap / k grant
+    pipe = _EdgePipe(cap, "fair-share")
+    pipe.reserve(0.0, 10.0, cap, 0, "b")
+    assert pipe.available(5.0, job="a") == cap / 2
+    # 3:1 weights: the guaranteed slice scales to cap * w / sum(w)
+    weights = {"a": 3.0, "b": 1.0}
+    pipe = _EdgePipe(cap, "fair-share",
+                     weight_of=lambda j: weights.get(j, 1.0))
+    pipe.reserve(0.0, 10.0, cap, 0, "b")
+    assert pipe.available(5.0, job="a") == cap * 3.0 / 4.0
+    assert pipe.available(15.0, job="a") == cap  # alone -> full cap
+
+
+def test_job_weight_validated_and_default_is_noop():
+    from repro.core.netsim import NCAL
+    from repro.core.transport import Fabric
+    from repro.scenario import TopologySpec
+
+    env = TopologySpec(kind="lan", num_clients=1).build()
+    fabric = Fabric(env)
+    with pytest.raises(ValueError, match="weight"):
+        fabric.job("bad", weight=0.0)
+    h = fabric.job("ok")
+    assert h.weight == 1.0
+    assert fabric._job_weight("ok") == 1.0
+    assert fabric._job_weight("never-registered") == 1.0
+
+
+def test_multiscenario_rejects_nonpositive_weight():
+    from repro.scenario import FabricSpec, JobSpec, MultiScenario
+
+    sc = Scenario(name="w", strategy=StrategySpec(mode="fedbuff", rounds=1))
+    ms = MultiScenario(name="bad-w", fabric=FabricSpec(),
+                       jobs=(JobSpec("a", sc, weight=-1.0),))
+    with pytest.raises(ScenarioError, match="weight"):
+        ms.validate()
+
+
+# ---------------------------------------------------------------------------
+# cross-job object-store dedup
+# ---------------------------------------------------------------------------
+
+def test_cross_job_store_dedup_counts_hits():
+    from repro.core.backends import make_backend
+    from repro.core.message import FLMessage, VirtualPayload
+    from repro.core.netsim import NCAL
+    from repro.core.objectstore import ObjectStore
+    from repro.core.transport import Fabric
+
+    env = TopologySpec(kind="geo_distributed", num_clients=2).build()
+    fabric = Fabric(env)
+    for h in [env.server] + list(env.clients):
+        fabric.register(h.host_id)
+    store = ObjectStore(NCAL)
+    be = {name: make_backend("grpc+s3", env, fabric, "server", store=store,
+                             job=fabric.job(name))
+          for name in ("jobA", "jobB")}
+    payload = VirtualPayload(50 << 20, tag="shared-base-model")
+
+    def send(job, t):
+        be[job].isend(FLMessage(msg_type="model", sender="server",
+                                receiver=env.clients[0].host_id, round=0,
+                                payload=payload), t)
+
+    send("jobA", 0.0)   # fresh PUT
+    send("jobB", 1.0)   # cross-tenant content hit
+    send("jobB", 2.0)   # jobB's own per-instance cache, NOT cross-job
+    assert store.stats["puts"] == 1
+    assert store.stats["cache_hits"] == 2
+    assert fabric.stats_for("jobB")["cross_job_hits"] == 1
+    assert fabric.stats_for("jobA")["cross_job_hits"] == 0
+    # the global view is the exact sum of the per-job views
+    assert fabric.stats["cross_job_hits"] == sum(
+        fabric.stats_for(j)["cross_job_hits"] for j in ("jobA", "jobB"))
+    # ... and the stats surface the count under the CellResult name
+    from repro.sweep.runners import wire_stats
+    assert wire_stats(fabric, store, job="jobB")["n_cross_job_hits"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# sizing helpers + registry discovery stays loud
+# ---------------------------------------------------------------------------
+
+def test_sizing_helpers_monotone():
+    assert 0.05 <= bottom_fraction(1, 6) < bottom_fraction(5, 6) <= 0.95
+    a1 = sim_activation_nbytes(100 << 20, 32, 1)
+    a3 = sim_activation_nbytes(100 << 20, 32, 3)
+    assert a1 > a3 >= 1024  # deeper cuts ship smaller activations
+
+
+def test_registry_discovery_error_stays_loud():
+    from benchmarks import registry
+
+    mod = types.ModuleType("benchmarks._fake_not_a_study")
+    sys.modules["benchmarks._fake_not_a_study"] = mod
+    try:
+        with pytest.raises(RuntimeError, match="neither STUDY nor run"):
+            registry._entry("_fake_not_a_study")
+    finally:
+        del sys.modules["benchmarks._fake_not_a_study"]
+
+
+def test_fig13_registered_in_quick_gate():
+    from benchmarks.fig13_vertical import STUDY
+
+    assert STUDY.in_quick
+    assert STUDY.out == "fig13_vertical.json"
